@@ -1,0 +1,90 @@
+"""Benchmarks reproducing the paper's tables and figures.
+
+table1  — operation-cycle counts (CAS block + complete 8-input unit)
+table2  — latency / throughput / operating frequency
+fig8    — comparison vs MemSort [7] and the off-memory path: cycles (a),
+          latency (b), memory bits (c)
+fig7    — the simulation-waveform scenario (A=1000, B=0001) re-executed on
+          the cycle-accurate array
+
+Each prints ``name,us_per_call,derived`` CSV rows (us_per_call measures the
+*simulator's* host cost; the derived column carries the paper-comparable
+quantity).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import cas, cost_model, network
+from repro.core.sorter import sort_in_memory
+
+
+def _time(fn, reps=3):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def table1():
+    rows = []
+    counts = cost_model.TABLE1_CAS_OPS
+    totals = cost_model.stage_op_totals(8)
+    for op in ("NOR", "NOT", "AND", "COPY"):
+        rows.append((f"table1.cas.{op}", 0.0, counts[op]))
+        rows.append((f"table1.stage8.{op}", 0.0, totals[op]))
+    rows.append(("table1.cas.total", 0.0, sum(counts.values())))
+    rows.append(("table1.stage8.total", 0.0, sum(totals.values())))
+    return rows
+
+
+def table2():
+    us = _time(lambda: sort_in_memory(
+        np.arange(8, dtype=np.uint32)[None], width=4))
+    return [
+        ("table2.latency_ns", us, cost_model.sort_latency_ns(8)),
+        ("table2.throughput_gops", us, round(cost_model.throughput_gops(8), 2)),
+        ("table2.frequency_ghz", 0.0, round(cost_model.OPERATING_FREQ_GHZ, 2)),
+    ]
+
+
+def fig8():
+    ours_cyc = cost_model.sort_cycles(8)
+    mem_cyc = cost_model.memsort_cycles(8)
+    ours_lat = cost_model.sort_latency_ns(8)
+    mem_lat = cost_model.memsort_latency_ns(8)
+    bits = cost_model.memory_bits(8)
+    return [
+        ("fig8a.cycles.ours", 0.0, ours_cyc),
+        ("fig8a.cycles.memsort", 0.0, round(mem_cyc, 1)),
+        ("fig8a.cycle_ratio", 0.0, round(mem_cyc / ours_cyc, 3)),
+        ("fig8b.latency_ns.ours", 0.0, ours_lat),
+        ("fig8b.latency_ns.memsort", 0.0, round(mem_lat, 1)),
+        ("fig8b.latency_ratio", 0.0, round(mem_lat / ours_lat, 2)),
+        ("fig8b.off_memory_ratio", 0.0,
+         round(cost_model.off_memory_latency_ns(8) / ours_lat, 2)),
+        ("fig8c.memory_bits.ours", 0.0, bits),
+        ("fig8c.bubble_sort_comparisons", 0.0,
+         cost_model.bubble_sort_comparisons(8)),
+    ]
+
+
+def fig7():
+    def run():
+        r = cas.run_cas(np.array([0b1000]), np.array([0b0001]), width=4)
+        return int(r.lo[0]), int(r.hi[0])
+    us = _time(run)
+    lo, hi = run()
+    assert (lo, hi) == (0b0001, 0b1000)
+    return [("fig7.waveform_cas.min", us, lo),
+            ("fig7.waveform_cas.max", us, hi)]
+
+
+def run():
+    rows = []
+    for fn in (table1, table2, fig8, fig7):
+        rows.extend(fn())
+    return rows

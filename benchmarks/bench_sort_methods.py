@@ -1,0 +1,62 @@
+"""Sorting-backend benchmark: the paper-faithful path vs word-parallel vs
+XLA, across sizes — quantifies the beyond-paper speedup of lifting the
+bit-serial constraint (DESIGN.md §2) on the actual execution substrate.
+
+Also scales the paper's cost model over N and W (cycles + ns on the 65nm
+SRAM target) so the hardware and software views sit side by side.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model, sort_api
+from repro.core.sorter import sort_in_memory
+
+
+def _time(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # software backends over vector batches
+    for n in (64, 1024, 8192):
+        x = jnp.asarray(rng.standard_normal((32, n)), dtype=jnp.float32)
+        for method in ("xla", "bitonic", "pallas"):
+            f = jax.jit(lambda v, m=method: sort_api.sort(v, method=m))
+            us = _time(lambda: f(x).block_until_ready())
+            rows.append((f"sort.{method}.n{n}", round(us, 1), n))
+
+    # faithful bit-serial simulation (small n: it simulates every cycle)
+    v8 = rng.integers(0, 16, size=(32, 8)).astype(np.uint32)
+    us = _time(lambda: np.asarray(sort_in_memory(v8, width=4).values))
+    rows.append(("sort.imc_sim.n8", round(us, 1),
+                 cost_model.sort_cycles(8)))
+
+    # top-k for routing shapes (the MoE path)
+    for e, k in ((64, 6), (16, 4)):
+        probs = jnp.asarray(rng.random((4096, e)), dtype=jnp.float32)
+        for method in ("xla", "bitonic", "pallas"):
+            f = jax.jit(lambda v, m=method: sort_api.topk(v, k, method=m)[0])
+            us = _time(lambda: f(probs).block_until_ready())
+            rows.append((f"topk.{method}.e{e}k{k}", round(us, 1), e))
+
+    # hardware cost model scaling (cycles on the 65nm target)
+    for n in (8, 16, 64, 256):
+        rows.append((f"imc.cycles.n{n}w4", 0.0, cost_model.sort_cycles(n, 4)))
+        rows.append((f"imc.latency_ns.n{n}w4", 0.0,
+                     round(cost_model.sort_latency_ns(n, 4), 1)))
+    for w in (2, 4, 8, 16):
+        rows.append((f"imc.cas_cycles.w{w}", 0.0,
+                     cost_model.cas_cycles(w, use_paper_counts=False)))
+    return rows

@@ -1,0 +1,89 @@
+"""System-level benchmarks: smoke-scale train/decode step times per arch,
+MoE routing throughput, and the roofline summary from the dry-run records.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, ShapeSpec, get_smoke_config
+from repro.launch import steps as steps_lib
+from repro.models import build
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def _time(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def train_steps():
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_smoke_config(arch)
+        model = build(cfg, policy=None, remat=False)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (2, 32)), dtype=jnp.int32)}
+        batch["labels"] = batch["tokens"]
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((2, cfg.enc_seq, cfg.d_model)) * 0.1,
+                dtype=jnp.float32)
+        if cfg.vision_prefix:
+            batch["vision_embeds"] = jnp.asarray(
+                rng.standard_normal((2, cfg.vision_prefix, cfg.d_model))
+                * 0.1, dtype=jnp.bfloat16)
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(32, dtype=jnp.int32), (3, 2, 32))
+        shape = ShapeSpec("b", 32, 2, "train")
+        fn, opt = steps_lib.make_train_step(model, cfg, shape, None)
+        st = opt.init(params)
+        jitted = jax.jit(fn)
+        us = _time(lambda: jax.block_until_ready(
+            jitted(params, st, jnp.asarray(0), batch)))
+        rows.append((f"train_step.{arch}.smoke", round(us, 0), 64))
+    return rows
+
+
+def decode_steps():
+    rows = []
+    for arch in ("gemma_2b", "moonshot_v1_16b", "mamba2_13b",
+                 "recurrentgemma_2b"):
+        cfg = get_smoke_config(arch)
+        model = build(cfg, policy=None, remat=False)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        tok = jnp.zeros((4, 1), jnp.int32)
+        state = model.decode_state(4, 64)
+        step = jax.jit(model.decode_step)
+        us = _time(lambda: jax.block_until_ready(step(params, tok, state)))
+        rows.append((f"decode_step.{arch}.smoke", round(us, 0), 4))
+    return rows
+
+
+def roofline_summary():
+    rows = []
+    rl = RESULTS / "roofline.json"
+    if rl.exists():
+        for r in json.loads(rl.read_text()):
+            if r["mesh"] != "16x16":
+                continue
+            rows.append((f"roofline.{r['arch']}.{r['shape']}.dominant_"
+                         f"{r['dominant']}", 0.0,
+                         round(max(r['t_compute_s'], r['t_memory_s'],
+                                   r['t_collective_s']), 4)))
+    return rows
+
+
+def run():
+    return train_steps() + decode_steps() + roofline_summary()

@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure plus system-level
+benches.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only paper|sort|system]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    from benchmarks import bench_paper_tables, bench_sort_methods, \
+        bench_system
+    suites = {
+        "paper": bench_paper_tables.run,
+        "sort": bench_sort_methods.run,
+        "system": bench_system.run,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row))
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}.SUITE_FAILED,0,{type(e).__name__}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

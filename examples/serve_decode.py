@@ -1,0 +1,12 @@
+"""Serving example: batched requests through the length-sorted scheduler,
+top-k sampled decode via the paper's bitonic kernels.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve
+
+done, stats = serve("gemma-2b", smoke=True, n_requests=20, batch_size=8,
+                    decode_steps=24, topk=20)
+for r in done[:3]:
+    print(f"request {r.rid}: prompt len {len(r.prompt)}, "
+          f"generated {r.out[:10].tolist()}...")

@@ -1,0 +1,5 @@
+"""Architecture configs (one module per assigned arch) + shape registry."""
+from repro.configs.base import (ALIASES, ARCH_IDS, SHAPES, ModelConfig,
+                                MoEConfig, RGLRUConfig, SSMConfig, ShapeSpec,
+                                cell_is_supported, get_config,
+                                get_smoke_config)

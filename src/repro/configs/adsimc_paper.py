@@ -1,0 +1,12 @@
+"""The paper's own workload config: N-input, W-bit in-memory sorting units."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SortUnitConfig:
+    n_inputs: int = 8
+    width: int = 4
+    method: str = "imc"       # imc | bitonic | pallas | xla
+
+
+PAPER_UNIT = SortUnitConfig()

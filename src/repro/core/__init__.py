@@ -1,0 +1,6 @@
+"""ADS-IMC core: in-memory sorting as a composable JAX feature."""
+from repro.core.sort_api import sort, argsort, topk, top_p_mask, bitonic_sort
+from repro.core import network, cost_model
+
+__all__ = ["sort", "argsort", "topk", "top_p_mask", "bitonic_sort",
+           "network", "cost_model"]

@@ -1,0 +1,143 @@
+"""Analytical cost model — reproduces the paper's Tables I/II and Fig. 8.
+
+All REPORTED numbers use the paper's published constants:
+
+  * Table I op mix for a W=4 CAS: NOR 14, NOT 8, AND 3, COPY 3 (28 cycles);
+    single-stage totals for N=8: NOR 84, NOT 48, AND 18, COPY 42 (192).
+  * 0.55 ns per IMC operation at 65 nm (=> 1.81 GHz operating frequency).
+  * Fig. 8 comparison baselines: MemSort (memristive IMC, [7]) and an
+    off-memory (von Neumann) path.  This paper does not reprint [7]'s raw
+    tables, so the MemSort model is anchored to the ratios the paper reports
+    (1.45x cycles, 3.4x latency, and 5x vs the off-memory approach) — see
+    DESIGN.md §6.
+
+The per-cycle simulator (gates.py / sorter.py) validates FUNCTIONAL
+correctness and total cycle counts; this module owns every latency /
+throughput / comparison number quoted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.core import cas, network
+
+# ---- paper constants (§III, Table I/II) -------------------------------------
+CYCLE_NS = 0.55                      # latency of one IMC operation, 65 nm
+OPERATING_FREQ_GHZ = 1 / CYCLE_NS    # 1.81 GHz (Table II)
+
+TABLE1_CAS_OPS: Dict[str, int] = {"NOR": 14, "NOT": 8, "AND": 3, "COPY": 3}
+CAS_CYCLES_W4 = sum(TABLE1_CAS_OPS.values())            # 28
+
+# Fig. 8 anchors (ratios as published)
+MEMSORT_CYCLE_RATIO = 1.45           # Fig. 8(a): cycles(MemSort)/cycles(ours)
+MEMSORT_LATENCY_RATIO = 3.4          # Fig. 8(b)
+OFF_MEMORY_LATENCY_RATIO = 5.0       # §III text
+
+
+def cas_cycles(width: int = 4, use_paper_counts: bool = True) -> int:
+    """Cycles for one CAS block.  W=4 is the paper's 28; other widths use the
+    reconstructed gate program's length (extrapolation)."""
+    if width == 4 and use_paper_counts:
+        return CAS_CYCLES_W4
+    return cas.cached_program(width).total_cycles
+
+
+def sort_cycles(n: int, width: int = 4, use_paper_counts: bool = True) -> int:
+    """Total cycles to sort N unsigned W-bit values in-memory.
+
+    stages x CAS + movement (Eq. 3-4 with the paper's fused-first-exchange
+    accounting).  N=8, W=4 -> 6*28 + 24 = 192 (§III / Table I).
+    """
+    stages = network.n_stages(n)
+    movement = network.total_extra_cycles(n)
+    return stages * cas_cycles(width, use_paper_counts) + movement
+
+
+def sort_latency_ns(n: int, width: int = 4) -> float:
+    """N=8, W=4 -> 105.6 ns (Table II)."""
+    return sort_cycles(n, width) * CYCLE_NS
+
+
+def throughput_gops(n: int, width: int = 4) -> float:
+    """IMC operations per second; Table II reports 1.8 GOPS for N=8, W=4
+    (one op per 0.55 ns cycle)."""
+    return sort_cycles(n, width) / sort_latency_ns(n, width)
+
+
+def stage_op_totals(n: int = 8) -> Dict[str, int]:
+    """Table I right column: per-op totals for the complete N-input unit.
+
+    Movement cycles are COPY-class (temp-row transfers): for N=8 the paper
+    reports COPY 42 = 6 stages * 3 + 24 movement cycles.
+    """
+    stages = network.n_stages(n)
+    totals = {k: v * stages for k, v in TABLE1_CAS_OPS.items()}
+    totals["COPY"] += network.total_extra_cycles(n)
+    return totals
+
+
+# ---- comparison baselines (Fig. 8) ------------------------------------------
+
+def memsort_cycles(n: int = 8, width: int = 4) -> float:
+    return sort_cycles(n, width) * MEMSORT_CYCLE_RATIO
+
+
+def memsort_latency_ns(n: int = 8, width: int = 4) -> float:
+    return sort_latency_ns(n, width) * MEMSORT_LATENCY_RATIO
+
+
+def off_memory_latency_ns(n: int = 8, width: int = 4) -> float:
+    return sort_latency_ns(n, width) * OFF_MEMORY_LATENCY_RATIO
+
+
+def bubble_sort_comparisons(n: int = 8) -> int:
+    """Software baseline the paper uses (8-bit masked to 4-bit, bubble sort):
+    worst-case compare-swap count."""
+    return n * (n - 1) // 2
+
+
+def memory_bits(n: int = 8, width: int = 4) -> int:
+    """Fig. 8(c): array bits used, with CAS-row reuse (22-row array)."""
+    from repro.core import sorter
+    return sorter.array_geometry(n, width)["bits"]
+
+
+# ---- report helpers ----------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PaperClaims:
+    """Every quantitative claim we validate, with model + paper values."""
+    rows: tuple
+
+    def all_pass(self) -> bool:
+        return all(abs(m - p) <= tol for (_, m, p, tol) in self.rows)
+
+
+def validate_claims() -> PaperClaims:
+    rows = (
+        ("Eq1 N_CAS(8)", network.n_cas_blocks(8), 24, 0),
+        ("Eq2 N_stages(8)", network.n_stages(8), 6, 0),
+        ("Eq3 temp rows(8)", network.n_temp_rows(8), 2, 0),
+        ("Eq4 movement cycles per exchange(8)", network.movement_cycles(8), 6, 0),
+        ("CAS cycles (W=4)", cas_cycles(4), 28, 0),
+        ("reconstructed CAS program cycles (W=4)",
+         cas.cached_program(4).total_cycles, 28, 0),
+        ("total movement cycles (N=8)", network.total_extra_cycles(8), 24, 0),
+        ("sort cycles (N=8, W=4)", sort_cycles(8), 192, 0),
+        ("Table I NOR total (N=8)", stage_op_totals(8)["NOR"], 84, 0),
+        ("Table I NOT total (N=8)", stage_op_totals(8)["NOT"], 48, 0),
+        ("Table I AND total (N=8)", stage_op_totals(8)["AND"], 18, 0),
+        ("Table I COPY total (N=8)", stage_op_totals(8)["COPY"], 42, 0),
+        ("Table II latency ns", sort_latency_ns(8), 105.6, 1e-9),
+        ("Table II throughput GOPS", throughput_gops(8), 1.8, 0.02),
+        ("Table II frequency GHz", OPERATING_FREQ_GHZ, 1.81, 0.01),
+        ("array geometry rows (W=4)", cas.cached_program(4).n_rows, 22, 0),
+        ("Fig8a MemSort cycle ratio", memsort_cycles(8) / sort_cycles(8), 1.45, 1e-12),
+        ("Fig8b MemSort latency ratio",
+         memsort_latency_ns(8) / sort_latency_ns(8), 3.4, 1e-12),
+        ("off-memory latency ratio",
+         off_memory_latency_ns(8) / sort_latency_ns(8), 5.0, 1e-12),
+    )
+    return PaperClaims(rows=rows)

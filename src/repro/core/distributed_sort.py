@@ -1,0 +1,100 @@
+"""Mesh-distributed sorting — the paper's partitioning scaled to devices.
+
+§II-B partitions one SRAM macro so N/2 CAS blocks run concurrently, paying
+Eq. 3-4 temp-row cycles to exchange operands between partitions.  At cluster
+scale the same structure maps 1:1 onto a device mesh:
+
+    memory partition        ->  TPU chip (sorts its shard in-VMEM)
+    intra-stage parallelism ->  SPMD over the mesh axis
+    temp-row exchange       ->  jax.lax.ppermute shard exchange (ICI)
+
+Algorithm: odd-even transposition merge over D devices.  Each device first
+sorts its local shard (any sort_api backend), then D rounds of
+neighbour-exchange + bitonic-merge-split.  After D rounds the concatenation
+of shards in device order is globally sorted — the standard block-sorting
+correctness result.
+
+The collective cost is exactly one shard (m elements) over ICI per round per
+device pair: ``collective_bytes(D, m) = D * m * itemsize`` per device — the
+Eq. 3-4 analogue that shows up in the §Roofline collective term.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import sort_api
+
+
+def bitonic_merge_halves(lo_sorted: jnp.ndarray, hi_sorted: jnp.ndarray):
+    """Merge two ascending arrays (each length m) and return the ascending
+    (low half, high half).  Uses the bitonic merge box: concat(a, reverse(b))
+    is bitonic, so only the merge substages of the network are needed."""
+    m = lo_sorted.shape[-1]
+    z = jnp.concatenate([lo_sorted, jnp.flip(hi_sorted, -1)], axis=-1)
+    n = 2 * m
+    ix = jnp.arange(n)
+    j = n // 2
+    while j >= 1:
+        partner = ix ^ j
+        pz = jnp.take(z, partner, axis=-1)
+        keep_min = ix < partner
+        z = jnp.where(keep_min, jnp.minimum(z, pz), jnp.maximum(z, pz))
+        j //= 2
+    return z[..., :m], z[..., m:]
+
+
+def _round_permutation(n_dev: int, even_round: bool):
+    """Partner index per device for one odd-even transposition round."""
+    perm = []
+    for i in range(n_dev):
+        if even_round:
+            partner = i ^ 1
+        else:
+            if i == 0 or (i == n_dev - 1 and n_dev % 2 == 0):
+                partner = i  # edge devices idle this round
+            else:
+                partner = i + 1 if i % 2 == 1 else i - 1
+        perm.append((i, partner))
+    return perm
+
+
+def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
+                     local_method: str = "xla") -> jnp.ndarray:
+    """Globally sort a 1-D array sharded over ``axis_name`` of ``mesh``.
+
+    Length must divide evenly by the axis size.  Returns the globally-sorted
+    array with the same sharding.
+    """
+    n_dev = mesh.shape[axis_name]
+    if x.shape[-1] % n_dev:
+        raise ValueError(f"array length {x.shape[-1]} must divide {n_dev}")
+
+    def local(xs):
+        xs = sort_api.sort(xs, method=local_method)
+        my = jax.lax.axis_index(axis_name)
+        for r in range(n_dev):
+            pairs = _round_permutation(n_dev, r % 2 == 0)
+            send = [(i, p) for (i, p) in pairs]
+            theirs = jax.lax.ppermute(xs, axis_name, send)
+            partner = jnp.asarray([p for (_, p) in pairs])[my]
+            lo, hi = bitonic_merge_halves(
+                jnp.where(my < partner, xs, theirs),
+                jnp.where(my < partner, theirs, xs))
+            merged = jnp.where(my < partner, lo, hi)
+            xs = jnp.where(my == partner, xs, merged)  # edges idle this round
+        return xs
+
+    spec = P(axis_name)
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    return fn(x)
+
+
+def collective_bytes_per_device(n_dev: int, local_elems: int,
+                                itemsize: int) -> int:
+    """Analytic ICI volume of the merge phase (per device)."""
+    return n_dev * local_elems * itemsize

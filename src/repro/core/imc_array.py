@@ -1,0 +1,165 @@
+"""Cycle-accurate functional simulator of the 6T SRAM IMC array (paper §I-II).
+
+The array natively computes, in ONE cycle, an elementwise two-input logic op
+over *all columns* of two simultaneously-activated rows:
+
+    AND  on the BL  (bitline)          — Fig. 1(b)
+    NOR  on the BLB (complement line)  — Fig. 1(c)
+
+Derived single-cycle ops (paper §II-A, using the constant rows):
+    NOT(x)  = NOR(x, ROW_ZERO)   — row 1 stores logic 0
+    COPY(x) = AND(x, ROW_ONE)    — row 2 stores logic 1
+
+Each cycle's result is written back with ONE of four movement types
+(paper §II-A, write-back taxonomy a-d):
+    SAME        (a) write back column-aligned
+    SHIFT_RIGHT (b) write to the adjacent right column (column 0 takes the
+                    selected constant fill — the constant rows are adjacent)
+    BCAST_LAST  (c) the last column's value is written to all columns
+    BCAST_COL   (d) an interior column's value is written to all columns
+
+State is a jnp bool array ``(batch, n_rows, n_cols)``; every op is batched
+(this is not an approximation: bitline logic is column-parallel, and batching
+over independent arrays is exact).  A :class:`CycleCounter` tallies op kinds
+for validation against Table I.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+ROW_ZERO = 0  # constant 0s (paper row 1)
+ROW_ONE = 1   # constant 1s (paper row 2)
+ROW_A = 2     # operand A   (paper row 3)
+ROW_B = 3     # operand B   (paper row 4)
+
+
+class OpKind(enum.Enum):
+    NOR = "NOR"
+    AND = "AND"
+    NOT = "NOT"    # NOR with ROW_ZERO
+    COPY = "COPY"  # AND with ROW_ONE
+
+
+class Movement(enum.Enum):
+    SAME = "same"
+    SHIFT_RIGHT = "shift_right"
+    BCAST_LAST = "bcast_last"
+    BCAST_COL = "bcast_col"
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    kind: OpKind
+    src1: int
+    dst: int
+    src2: Optional[int] = None           # None for NOT/COPY (implicit const row)
+    movement: Movement = Movement.SAME
+    fill: int = 0                        # SHIFT_RIGHT column-0 fill (0 or 1)
+    bcast_col: int = 0                   # BCAST_COL source column
+    label: str = ""
+
+
+@dataclasses.dataclass
+class CycleCounter:
+    nor: int = 0
+    and_: int = 0
+    not_: int = 0
+    copy: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.nor + self.and_ + self.not_ + self.copy
+
+    def count(self, kind: OpKind) -> None:
+        if kind is OpKind.NOR:
+            self.nor += 1
+        elif kind is OpKind.AND:
+            self.and_ += 1
+        elif kind is OpKind.NOT:
+            self.not_ += 1
+        else:
+            self.copy += 1
+
+    def as_dict(self) -> dict:
+        return {"NOR": self.nor, "NOT": self.not_, "AND": self.and_,
+                "COPY": self.copy, "total": self.total}
+
+
+def make_array(batch: int, n_rows: int, n_cols: int) -> jnp.ndarray:
+    """Fresh array with the constant rows initialised (rows 0/1)."""
+    state = jnp.zeros((batch, n_rows, n_cols), dtype=bool)
+    state = state.at[:, ROW_ONE, :].set(True)
+    return state
+
+
+def write_word(state: jnp.ndarray, row: int, bits: jnp.ndarray) -> jnp.ndarray:
+    """Write a (batch, n_cols) bit matrix into a row (column 0 = MSB)."""
+    return state.at[:, row, :].set(bits.astype(bool))
+
+
+def read_word(state: jnp.ndarray, row: int) -> jnp.ndarray:
+    return state[:, row, :]
+
+
+def _compute(state: jnp.ndarray, op: Op) -> jnp.ndarray:
+    a = state[:, op.src1, :]
+    if op.kind is OpKind.NOR:
+        b = state[:, op.src2, :]
+        return jnp.logical_not(jnp.logical_or(a, b))
+    if op.kind is OpKind.AND:
+        b = state[:, op.src2, :]
+        return jnp.logical_and(a, b)
+    if op.kind is OpKind.NOT:       # NOR with the constant-0 row
+        b = state[:, ROW_ZERO, :]
+        return jnp.logical_not(jnp.logical_or(a, b))
+    # COPY: AND with the constant-1 row
+    b = state[:, ROW_ONE, :]
+    return jnp.logical_and(a, b)
+
+
+def _move(result: jnp.ndarray, op: Op) -> jnp.ndarray:
+    if op.movement is Movement.SAME:
+        return result
+    if op.movement is Movement.SHIFT_RIGHT:
+        fill = jnp.full_like(result[:, :1], bool(op.fill))
+        return jnp.concatenate([fill, result[:, :-1]], axis=1)
+    if op.movement is Movement.BCAST_LAST:
+        return jnp.broadcast_to(result[:, -1:], result.shape)
+    # BCAST_COL
+    return jnp.broadcast_to(result[:, op.bcast_col:op.bcast_col + 1],
+                            result.shape)
+
+
+def step(state: jnp.ndarray, op: Op,
+         counter: Optional[CycleCounter] = None) -> jnp.ndarray:
+    """Execute ONE IMC cycle: compute over all columns, move, write back."""
+    if counter is not None:
+        counter.count(op.kind)
+    result = _move(_compute(state, op), op)
+    return state.at[:, op.dst, :].set(result)
+
+
+def run_program(state: jnp.ndarray, program: List[Op],
+                counter: Optional[CycleCounter] = None) -> jnp.ndarray:
+    for op in program:
+        state = step(state, op, counter)
+    return state
+
+
+# -- word <-> bit-plane helpers (column 0 is the MSB, as in the paper) -------
+
+def int_to_bits(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """(batch,) unsigned ints -> (batch, width) bool, MSB first."""
+    shifts = jnp.arange(width - 1, -1, -1, dtype=x.dtype)
+    return ((x[:, None] >> shifts[None, :]) & 1).astype(bool)
+
+
+def bits_to_int(bits: jnp.ndarray) -> jnp.ndarray:
+    """(batch, width) bool, MSB first -> (batch,) unsigned ints."""
+    width = bits.shape[-1]
+    weights = (1 << jnp.arange(width - 1, -1, -1)).astype(jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) * weights[None, :], axis=-1)

@@ -1,0 +1,216 @@
+"""Public sorting API — the paper's technique as a composable JAX feature.
+
+One entry point, four interchangeable backends:
+
+  ``xla``      jnp.sort / jax.lax.top_k — the "off-memory" reference point.
+  ``bitonic``  the paper's Batcher network executed word-parallel in pure
+               jnp (every CAS = vector min/max). Beyond-paper: lifts the
+               bit-serial constraint, keeps the oblivious schedule.
+  ``pallas``   the in-VMEM Pallas kernel (kernels/bitonic_sort.py): tiles are
+               read from HBM once, the whole network runs on VMEM-resident
+               data — the TPU analogue of "sorting inside the memory array".
+  ``imc``      the faithful bit-serial simulation (core/sorter.py): the
+               28-cycle gate program on the simulated 6T SRAM array.
+               Small unsigned ints only; used for validation and benchmarks.
+
+Everything downstream (MoE routing, sampling, serving schedulers) calls
+through this module, so the paper's contribution is a first-class,
+swappable component of the framework.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+METHODS = ("xla", "bitonic", "pallas", "imc")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def _pad_value(dtype, descending: bool):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf if descending else jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min if descending else info.max, dtype)
+
+
+def bitonic_stage_params(n: int):
+    """Static (partner, keep_min) index tables per stage for size-n network."""
+    stages = []
+    ix = jnp.arange(n)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            partner = ix ^ j
+            up = (ix & k) == 0
+            keep_min = (ix < partner) == up
+            stages.append((partner, keep_min))
+            j //= 2
+        k *= 2
+    return stages
+
+
+def bitonic_sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
+                 values: Optional[jnp.ndarray] = None):
+    """Word-parallel bitonic sort along ``axis`` (optionally carrying a
+    values array, sorted by the keys — used for argsort / routing)."""
+    axis = axis % x.ndim
+    x = jnp.moveaxis(x, axis, -1)
+    if values is not None:
+        values = jnp.moveaxis(values, axis, -1)
+    n = x.shape[-1]
+    m = _next_pow2(n)
+    if m != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, m - n)]
+        x = jnp.pad(x, pad, constant_values=_pad_value(x.dtype, descending))
+        if values is not None:
+            values = jnp.pad(values, pad)
+    for partner, keep_min in bitonic_stage_params(m):
+        px = jnp.take(x, partner, axis=-1)
+        swap_mask = keep_min ^ descending
+        lo = jnp.minimum(x, px)
+        hi = jnp.maximum(x, px)
+        newx = jnp.where(swap_mask, lo, hi)
+        if values is not None:
+            take_self = jnp.where(swap_mask, x <= px, x > px)
+            # tie-break: on equal keys keep self at the lower index side
+            take_self = jnp.where(x == px, True, take_self)
+            pv = jnp.take(values, partner, axis=-1)
+            values = jnp.where(take_self, values, pv)
+        x = newx
+    x = x[..., :n]
+    if values is not None:
+        values = values[..., :n]
+        return jnp.moveaxis(x, -1, axis), jnp.moveaxis(values, -1, axis)
+    return jnp.moveaxis(x, -1, axis)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _xla_sort(x, axis: int, descending: bool):
+    """jnp.sort with a permutation-transpose VJP.
+
+    This environment's jax build has a broken `_sort_jvp` (constructs
+    GatherDimensionNumbers with batching fields its NamedTuple lacks), so
+    differentiating through raw lax.sort raises.  A sort is a permutation,
+    so the correct cotangent is a scatter by the argsort order — implemented
+    here with flat indices, bypassing the broken path entirely.
+    """
+    out = jnp.sort(x, axis=axis)
+    return jnp.flip(out, axis=axis) if descending else out
+
+
+def _xla_sort_fwd(x, axis, descending):
+    order = jnp.argsort(x, axis=axis, stable=True)
+    if descending:
+        order = jnp.flip(order, axis=axis)
+    out = jnp.take_along_axis(x, order, axis=axis)
+    return out, order
+
+
+def _xla_sort_bwd(axis, descending, order, g):
+    ax = axis % order.ndim
+    go = jnp.moveaxis(g, ax, -1)
+    oo = jnp.moveaxis(order, ax, -1)
+    lead = go.shape[:-1]
+    n = go.shape[-1]
+    go2 = go.reshape(-1, n)
+    oo2 = oo.reshape(-1, n)
+    rows = go2.shape[0]
+    flat_idx = (jnp.arange(rows, dtype=jnp.int32)[:, None] * n + oo2).reshape(-1)
+    gx = jnp.zeros(rows * n, dtype=g.dtype).at[flat_idx].add(go2.reshape(-1))
+    return (jnp.moveaxis(gx.reshape(*lead, n), -1, ax),)
+
+
+_xla_sort.defvjp(_xla_sort_fwd, _xla_sort_bwd)
+
+
+def sort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
+         descending: bool = False) -> jnp.ndarray:
+    """Sort along ``axis`` with the selected backend."""
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    if method == "xla":
+        return _xla_sort(x, axis, descending)
+    if method == "bitonic":
+        return bitonic_sort(x, axis=axis, descending=descending)
+    if method == "pallas":
+        from repro.kernels import ops as kops
+        return kops.bitonic_sort(x, axis=axis, descending=descending)
+    # method == "imc": faithful bit-serial simulation, unsigned ints only
+    from repro.core import sorter
+    if axis not in (-1, x.ndim - 1):
+        raise ValueError("imc method sorts along the last axis only")
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise ValueError("imc method requires unsigned integer inputs")
+    width = _imc_width(x)
+    lead = x.shape[:-1]
+    res = sorter.sort_in_memory(x.reshape(-1, x.shape[-1]), width=width)
+    out = res.values.reshape(*lead, x.shape[-1]).astype(x.dtype)
+    return jnp.flip(out, axis=-1) if descending else out
+
+
+def _imc_width(x) -> int:
+    bits = jnp.iinfo(x.dtype).bits if jnp.issubdtype(x.dtype, jnp.integer) else 32
+    return min(bits, 32)
+
+
+def argsort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
+            descending: bool = False) -> jnp.ndarray:
+    if method == "xla":
+        order = jnp.argsort(x, axis=axis)
+        return jnp.flip(order, axis=axis) if descending else order
+    n = x.shape[axis % x.ndim]
+    idx = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32).reshape(
+            (1,) * (axis % x.ndim) + (n,) + (1,) * (x.ndim - 1 - axis % x.ndim)),
+        x.shape)
+    _, order = bitonic_sort(x, axis=axis, descending=descending, values=idx)
+    return order
+
+
+def topk(x: jnp.ndarray, k: int, *, method: str = "xla",
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k along the last axis -> (values, indices), descending.
+
+    This is the routing/sampling entry point: MoE expert selection and
+    top-k sampling both come through here.
+    """
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    if method == "xla":
+        return jax.lax.top_k(x, k)
+    if method == "pallas":
+        from repro.kernels import ops as kops
+        return kops.bitonic_topk(x, k)
+    if method == "imc":
+        raise NotImplementedError(
+            "imc is a bit-serial validation backend; use sort() on ints")
+    n = x.shape[-1]
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), x.shape)
+    sx, si = bitonic_sort(x, axis=-1, descending=True, values=idx)
+    return sx[..., :k], si[..., :k]
+
+
+def top_p_mask(logits: jnp.ndarray, p: float, *, method: str = "bitonic"
+               ) -> jnp.ndarray:
+    """Nucleus-sampling mask: True for logits inside the top-p mass.
+
+    Requires a descending sort of the probabilities — i.e. the paper's
+    workload sitting directly on the serving path.
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    sorted_probs = sort(probs, axis=-1, method=method, descending=True)
+    cum = jnp.cumsum(sorted_probs, axis=-1)
+    # number of entries needed to reach mass p
+    keep_sorted = cum - sorted_probs < p
+    kth = jnp.sum(keep_sorted, axis=-1, keepdims=True)  # count kept
+    threshold = jnp.take_along_axis(sorted_probs, jnp.maximum(kth - 1, 0),
+                                    axis=-1)
+    return probs >= threshold

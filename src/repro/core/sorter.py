@@ -1,0 +1,107 @@
+"""Complete in-memory binary sorting unit (paper §II-B).
+
+The N-input sorter maps the Batcher bitonic network onto N/2 memory
+partitions (FELIX-style partitioning): every stage executes its N/2 CAS
+blocks *concurrently*, one per partition, and stage transitions whose operand
+placement changes pay the Eq. 3-4 movement cost (N/4 temporary rows,
+3N/4 cycles per exchanging transition).
+
+Functional execution here folds the partition axis into the batch axis of the
+CAS array simulator.  This is exact, not an approximation: the physical array
+is 22 rows x 4*(N/2) columns and every IMC cycle operates on ALL columns of a
+row pair at once, so the partitions advance in lock-step — identical to
+batching independent 22 x W arrays.  Cycle accounting therefore charges each
+stage ONE CAS program (28 cycles at W=4), not N/2 of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cas, gates, network
+
+
+@dataclasses.dataclass(frozen=True)
+class SortResult:
+    values: jnp.ndarray          # (batch, n) ascending
+    cycles: int                  # total IMC cycles (compute + movement)
+    compute_cycles: int          # stages * CAS program length
+    movement_cycles: int         # Eq.3-4 inter-partition operand exchange
+    n_partitions: int
+    n_temp_rows: int
+    array_rows: int
+    array_cols: int
+    op_counts: dict
+
+
+def array_geometry(n: int, width: int = 4) -> dict:
+    """Physical array footprint for an N-input sorter (paper: 16x22 for N=8)."""
+    prog = cas.cached_program(width)
+    return {
+        "rows": prog.n_rows,
+        "cols": width * (n // 2),
+        "temp_rows": network.n_temp_rows(n),
+        "bits": prog.n_rows * width * (n // 2),
+    }
+
+
+def sort_in_memory(values, width: int = 4, jit: bool = True) -> SortResult:
+    """Sort (batch, n) unsigned ``width``-bit ints with the IMC bitonic unit.
+
+    Every CAS in the schedule is executed through the full 28-cycle gate
+    program on the simulated 6T SRAM array; results are bit-exact against any
+    comparison sort.
+    """
+    v = jnp.asarray(values, dtype=jnp.uint32)
+    if v.ndim == 1:
+        v = v[None, :]
+    batch, n = v.shape
+    stages = network.bitonic_stages(n)
+    plan = network.plan_partitions(n)
+    prog = cas.cached_program(width)
+
+    counter_ops = {k: c * len(stages)
+                   for k, c in _static_cas_counts(width).items()}
+
+    for stage in stages:
+        idx_i = np.array([p[0] for p in stage])
+        idx_j = np.array([p[1] for p in stage])
+        asc = np.array([p[2] for p in stage])
+        a = v[:, idx_i].reshape(-1)          # fold (batch, n/2) partitions
+        b = v[:, idx_j].reshape(-1)
+        res = cas.run_cas(a, b, width=width, jit=jit)
+        lo = res.lo.reshape(batch, -1)
+        hi = res.hi.reshape(batch, -1)
+        asc_b = jnp.asarray(asc)[None, :]
+        out_i = jnp.where(asc_b, lo, hi)
+        out_j = jnp.where(asc_b, hi, lo)
+        v = v.at[:, idx_i].set(out_i).at[:, idx_j].set(out_j)
+
+    compute = len(stages) * prog.total_cycles
+    movement = plan.extra_cycles
+    geom = array_geometry(n, width)
+    # movement ops are COPY-class (temp-row reads/writes)
+    counter_ops = dict(counter_ops)
+    counter_ops["COPY"] = counter_ops.get("COPY", 0) + movement
+    counter_ops["total"] = compute + movement
+    return SortResult(values=v, cycles=compute + movement,
+                      compute_cycles=compute, movement_cycles=movement,
+                      n_partitions=plan.n_partitions,
+                      n_temp_rows=network.n_temp_rows(n),
+                      array_rows=geom["rows"], array_cols=geom["cols"],
+                      op_counts=counter_ops)
+
+
+def _static_cas_counts(width: int) -> dict:
+    prog = cas.cached_program(width)
+    from repro.core.imc_array import CycleCounter
+    c = CycleCounter()
+    for op in prog.ops:
+        c.count(op.kind)
+    d = c.as_dict()
+    d.pop("total")
+    return d

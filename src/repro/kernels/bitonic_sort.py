@@ -1,0 +1,164 @@
+"""In-VMEM bitonic sort — the paper's architecture mapped to the TPU.
+
+ADS-IMC's premise: sorting is data-movement-bound, so execute the network
+*where the data lives*.  On TPU the expensive movement is HBM <-> VMEM, so
+this kernel reads each tile of rows into VMEM **once**, runs the *entire*
+Batcher bitonic network on the VMEM-resident tile, and writes it back
+**once** — 2 x tile_bytes of HBM traffic total, the bandwidth floor.
+
+The CAS block becomes a vector min/max over VPU lanes: one instruction
+compares W-bit words across 8x128 lanes simultaneously — the word-parallel
+strengthening of the paper's column-parallel bitline logic (DESIGN.md §2).
+
+Stage addressing uses the reshape trick instead of gathers: for a substage
+with partner distance j, view the row as (n/(2j), 2, j); partners are then
+the two middle-axis halves, and the sort direction is constant per outer
+chunk (bit k of the element index) — everything static, MXU/VPU friendly.
+
+The grid partitions the row blocks exactly like the paper partitions its
+SRAM macro (§II-B): each grid cell is an independent "memory partition"
+running its own network concurrently.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _substages(n: int):
+    """Static (k, j) substage schedule of the n-input bitonic network."""
+    out = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            out.append((k, j))
+            j //= 2
+        k *= 2
+    return out
+
+
+def _stage_dirs(n: int, k: int, j: int, descending: bool) -> jnp.ndarray:
+    """descending? flag per outer chunk of the (n/(2j), 2, j) view.
+
+    Built from an in-trace iota (not a closed-over constant) so the same
+    code path works inside Pallas kernel bodies."""
+    q = jax.lax.broadcasted_iota(jnp.int32, (1, n // (2 * j), 1), 1)
+    desc = ((q * (2 * j)) & k) != 0
+    return desc != descending if descending else desc
+
+
+def _apply_network(x: jnp.ndarray, descending: bool) -> jnp.ndarray:
+    """Run the full network on (rows, n); n a power of two. Pure jnp — usable
+    both inside the Pallas kernel body and as the building block of the
+    sort_api 'bitonic' backend."""
+    rows, n = x.shape
+    for (k, j) in _substages(n):
+        v = x.reshape(rows, n // (2 * j), 2, j)
+        a, b = v[:, :, 0, :], v[:, :, 1, :]
+        desc = _stage_dirs(n, k, j, descending)
+        mn, mx = jnp.minimum(a, b), jnp.maximum(a, b)
+        first = jnp.where(desc, mx, mn)
+        second = jnp.where(desc, mn, mx)
+        x = jnp.stack([first, second], axis=2).reshape(rows, n)
+    return x
+
+
+def _apply_network_kv(keys: jnp.ndarray, vals: jnp.ndarray,
+                      descending: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Network on (rows, n) keys carrying an int payload (for argsort/topk)."""
+    rows, n = keys.shape
+    for (k, j) in _substages(n):
+        kv = keys.reshape(rows, n // (2 * j), 2, j)
+        vv = vals.reshape(rows, n // (2 * j), 2, j)
+        ka, kb = kv[:, :, 0, :], kv[:, :, 1, :]
+        va, vb = vv[:, :, 0, :], vv[:, :, 1, :]
+        desc = _stage_dirs(n, k, j, descending)
+        # a-side keeps min unless this chunk is descending; ties keep a-side
+        # payload on the first slot (index-stability within the CAS).
+        a_first = jnp.where(desc, ka >= kb, ka <= kb)
+        kf = jnp.where(a_first, ka, kb)
+        ks = jnp.where(a_first, kb, ka)
+        vf = jnp.where(a_first, va, vb)
+        vs = jnp.where(a_first, vb, va)
+        keys = jnp.stack([kf, ks], axis=2).reshape(rows, n)
+        vals = jnp.stack([vf, vs], axis=2).reshape(rows, n)
+    return keys, vals
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _sort_kernel(x_ref, o_ref, *, descending: bool):
+    o_ref[...] = _apply_network(x_ref[...], descending)
+
+
+def _sort_kv_kernel(k_ref, v_ref, ok_ref, ov_ref, *, descending: bool):
+    sk, sv = _apply_network_kv(k_ref[...], v_ref[...], descending)
+    ok_ref[...] = sk
+    ov_ref[...] = sv
+
+
+def default_block_rows(n: int, itemsize: int, vmem_budget: int = 8 << 20,
+                       streams: int = 2) -> int:
+    """Rows per VMEM tile: keep in+out tiles within the VMEM budget and the
+    sublane dimension a multiple of 8."""
+    rows = max(1, vmem_budget // (streams * n * itemsize * 2))
+    if rows >= 8:
+        rows -= rows % 8
+    return rows
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("descending", "block_rows", "interpret"))
+def sort_blocks(x: jnp.ndarray, *, descending: bool = False,
+                block_rows: Optional[int] = None,
+                interpret: bool = False) -> jnp.ndarray:
+    """Sort each row of (rows, n) in VMEM. n must be a power of two and rows
+    must divide by block_rows (ops.py handles padding/reshaping)."""
+    rows, n = x.shape
+    br = block_rows or min(rows, default_block_rows(n, x.dtype.itemsize))
+    br = max(1, min(br, rows))
+    while rows % br:
+        br -= 1
+    grid = (rows // br,)
+    return pl.pallas_call(
+        functools.partial(_sort_kernel, descending=descending),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("descending", "block_rows", "interpret"))
+def sort_kv_blocks(keys: jnp.ndarray, vals: jnp.ndarray, *,
+                   descending: bool = False,
+                   block_rows: Optional[int] = None,
+                   interpret: bool = False):
+    """Key-value sort of (rows, n) by keys, carrying int32 payloads."""
+    rows, n = keys.shape
+    itemsize = keys.dtype.itemsize + vals.dtype.itemsize
+    br = block_rows or min(rows, default_block_rows(n, itemsize))
+    br = max(1, min(br, rows))
+    while rows % br:
+        br -= 1
+    grid = (rows // br,)
+    spec = pl.BlockSpec((br, n), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sort_kv_kernel, descending=descending),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, n), keys.dtype),
+                   jax.ShapeDtypeStruct((rows, n), vals.dtype)],
+        interpret=interpret,
+    )(keys, vals)

@@ -1,0 +1,56 @@
+"""In-VMEM bitonic top-k — partial sort for MoE routing and sampling.
+
+Top-k is the framework's hottest sorting workload (expert selection per
+token; logits filtering per decode step).  The kernel sorts a VMEM-resident
+block descending with the bitonic network, carrying lane indices as payload,
+and emits only the first k columns — one HBM read of the block, one HBM
+write of k columns.
+
+For large n (vocab-sized), ops.py composes this hierarchically: chunk the
+axis, per-chunk kernel top-k, then kv-merge of the (n/chunk)*k candidates —
+the same partition-then-merge structure the paper uses across its SRAM
+partitions (§II-B).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitonic_sort import (_apply_network_kv,
+                                        default_block_rows)
+
+
+def _topk_kernel(x_ref, ov_ref, oi_ref, *, k: int):
+    x = x_ref[...]
+    rows, n = x.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (rows, n), 1)
+    sk, si = _apply_network_kv(x, idx, descending=True)
+    ov_ref[...] = sk[:, :k]
+    oi_ref[...] = si[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def topk_blocks(x: jnp.ndarray, k: int, *, block_rows: Optional[int] = None,
+                interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row top-k of (rows, n) -> (rows, k) values + indices (descending).
+    n must be a power of two >= k (ops.py handles padding)."""
+    rows, n = x.shape
+    br = block_rows or min(rows, default_block_rows(n, x.dtype.itemsize + 4))
+    br = max(1, min(br, rows))
+    while rows % br:
+        br -= 1
+    grid = (rows // br,)
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, k), lambda i: (i, 0)),
+                   pl.BlockSpec((br, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, k), x.dtype),
+                   jax.ShapeDtypeStruct((rows, k), jnp.int32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,92 @@
+"""Bit-serial CAS network on TPU lanes — the paper's exact gate schedule.
+
+This kernel executes the reconstructed 28-cycle NOR/NOT/AND/COPY program of
+:mod:`repro.core.gates` with each SRAM *row* realised as a VMEM bit-plane of
+shape (rows, lanes, W): the paper's column-parallelism maps to the W axis
+and the array's batch parallelism maps to the 8x128 vector lanes.  One
+simulated IMC cycle = one VPU op over every lane — the closest TPU-idiomatic
+equivalent of bitline logic (DESIGN.md §2).
+
+It is deliberately *not* the fast path (word-parallel min/max is ~W times
+cheaper — measured in benchmarks/bench_sort_methods.py); it exists to prove
+the paper's logic runs unchanged on the target substrate and to anchor the
+faithful-baseline row of EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import gates
+from repro.core.imc_array import Movement, OpKind, ROW_A, ROW_B, ROW_ONE, ROW_ZERO
+
+
+def _exec_program(a: jnp.ndarray, b: jnp.ndarray, width: int):
+    """Run the gate program on int operands of shape (rows, lanes)."""
+    prog = gates.build_cas_program(width)
+    shape = a.shape + (width,)
+    # MSB first; built from an in-trace iota so Pallas sees no captured consts
+    shifts = (width - 1) - jax.lax.broadcasted_iota(jnp.int32, (width,), 0)
+
+    planes = {
+        ROW_ZERO: jnp.zeros(shape, dtype=bool),
+        ROW_ONE: jnp.ones(shape, dtype=bool),
+        ROW_A: ((a[..., None] >> shifts) & 1).astype(bool),
+        ROW_B: ((b[..., None] >> shifts) & 1).astype(bool),
+    }
+
+    for op in prog.ops:
+        x = planes[op.src1]
+        if op.kind is OpKind.NOR:
+            r = ~(x | planes[op.src2])
+        elif op.kind is OpKind.AND:
+            r = x & planes[op.src2]
+        elif op.kind is OpKind.NOT:
+            r = ~(x | planes[ROW_ZERO])
+        else:  # COPY
+            r = x & planes[ROW_ONE]
+        if op.movement is Movement.SHIFT_RIGHT:
+            fill = jnp.full_like(r[..., :1], bool(op.fill))
+            r = jnp.concatenate([fill, r[..., :-1]], axis=-1)
+        elif op.movement is Movement.BCAST_LAST:
+            r = jnp.broadcast_to(r[..., -1:], r.shape)
+        elif op.movement is Movement.BCAST_COL:
+            r = jnp.broadcast_to(r[..., op.bcast_col:op.bcast_col + 1], r.shape)
+        planes[op.dst] = r
+
+    weights = (1 << shifts).astype(jnp.int32)
+    lo = jnp.sum(planes[ROW_A].astype(jnp.int32) * weights, axis=-1)
+    hi = jnp.sum(planes[ROW_B].astype(jnp.int32) * weights, axis=-1)
+    return lo, hi
+
+
+def _cas_kernel(a_ref, b_ref, lo_ref, hi_ref, *, width: int):
+    lo, hi = _exec_program(a_ref[...], b_ref[...], width)
+    lo_ref[...] = lo
+    hi_ref[...] = hi
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_rows",
+                                             "interpret"))
+def cas_blocks(a: jnp.ndarray, b: jnp.ndarray, *, width: int = 4,
+               block_rows: int = 8, interpret: bool = False
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Elementwise in-memory CAS of (rows, lanes) unsigned ints < 2**width."""
+    rows, lanes = a.shape
+    br = max(1, min(block_rows, rows))
+    while rows % br:
+        br -= 1
+    spec = pl.BlockSpec((br, lanes), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_cas_kernel, width=width),
+        grid=(rows // br,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+                   jax.ShapeDtypeStruct((rows, lanes), jnp.int32)],
+        interpret=interpret,
+    )(a.astype(jnp.int32), b.astype(jnp.int32))

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bitonic_sort(x: jnp.ndarray, descending: bool = False) -> jnp.ndarray:
+    """Oracle for kernels.bitonic_sort: sort along the last axis."""
+    out = jnp.sort(x, axis=-1)
+    return jnp.flip(out, -1) if descending else out
+
+
+def bitonic_sort_kv(keys: jnp.ndarray, values: jnp.ndarray,
+                    descending: bool = False):
+    """Oracle for the key-value sort: stable argsort by key, gather payload."""
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    if descending:
+        order = jnp.flip(order, -1)
+    sk = jnp.take_along_axis(keys, order, axis=-1)
+    sv = jnp.take_along_axis(values, order, axis=-1)
+    return sk, sv
+
+
+def bitonic_topk(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.bitonic_topk (descending values + indices)."""
+    return jax.lax.top_k(x, k)
+
+
+def bitserial_cas(a: jnp.ndarray, b: jnp.ndarray):
+    """Oracle for the bit-serial CAS kernel."""
+    return jnp.minimum(a, b), jnp.maximum(a, b)

@@ -1,0 +1,345 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialisation, and the production meshes need 512 placeholder host devices.
+Never set that flag globally — smoke tests and benchmarks see 1 device.
+
+Per cell this driver:
+  1. builds the production mesh (16x16 or 2x16x16) and the ShardingPolicy,
+  2. builds the EXACT production step function (launch/steps.py),
+  3. ``jax.jit(step, in/out_shardings).lower(**ShapeDtypeStructs)`` —
+     no arrays are ever allocated,
+  4. ``lowered.compile()`` — any sharding mismatch / unsupported collective
+     / compile-time OOM fails the cell,
+  5. records memory_analysis / cost_analysis / per-collective byte counts
+     (parsed from the post-SPMD HLO) into results/dryrun/<cell>.json for
+     §Dry-run, §Roofline and §Perf.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--tag baseline]
+"""
+import argparse
+import collections
+import dataclasses
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeSpec,
+                                cell_is_supported, get_config)
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+from repro.models.model_zoo import build
+from repro.sharding.partitioning import ShardingPolicy
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# Per-(arch, shape-kind) training knobs: microbatch count, sequence
+# parallelism, optimizer, grad-accum dtype.  Derived from the memory napkin
+# math in EXPERIMENTS.md §Dry-run.
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    microbatch: int = 1
+    seq_shard: bool = False
+    optimizer: str = "adamw"
+    accum: str = "float32"
+    flash: bool = False        # in-VMEM flash attention (prefill cells)
+    layout: str = "tp"         # tp | dp (DP-heavy serve layout)
+
+
+TRAIN_PLAN = {
+    "whisper_tiny": CellPlan(microbatch=8),
+    "deepseek_67b": CellPlan(microbatch=2, seq_shard=True),
+    "minitron_4b": CellPlan(microbatch=2, seq_shard=True),
+    "gemma_2b": CellPlan(microbatch=4, seq_shard=True),
+    "nemotron_4_340b": CellPlan(microbatch=8, seq_shard=True,
+                                optimizer="adafactor", accum="bfloat16"),
+    "moonshot_v1_16b": CellPlan(microbatch=4),
+    "dbrx_132b": CellPlan(microbatch=16, optimizer="adafactor"),
+    "recurrentgemma_2b": CellPlan(microbatch=4),
+    "qwen2_vl_72b": CellPlan(microbatch=2, seq_shard=True),
+    "mamba2_13b": CellPlan(microbatch=8),
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of one HLO shape string like 'bf16[16,4096,2048]' (or a tuple)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collect_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+
+    Wire-byte convention (documented in §Roofline): all-reduce counts 2x its
+    tensor bytes (reduce-scatter + all-gather phases of a ring); the others
+    count 1x their result bytes; the ring (g-1)/g factor is dropped (~1).
+    """
+    by_kind = collections.Counter()
+    bytes_by_kind = collections.Counter()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or " = " in s:
+            m = re.search(r"=\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))\s*"
+                          r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                          r"collective-permute)", s)
+            if not m:
+                continue
+            type_str, kind = m.group(1), m.group(2)
+            b = _shape_bytes(type_str)
+            mult = 2 if kind == "all-reduce" else 1
+            by_kind[kind] += 1
+            bytes_by_kind[kind] += b * mult
+    return {"counts": dict(by_kind), "bytes": dict(bytes_by_kind),
+            "total_bytes": int(sum(bytes_by_kind.values()))}
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               plan: CellPlan = None, seq_shard=None, microbatch=None,
+               flash=None, layout=None, verbose: bool = True):
+    """Build, lower, compile one cell; return the result record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes_of(mesh)
+    plan = plan or (TRAIN_PLAN[arch] if shape.kind == "train" else CellPlan())
+    if seq_shard is not None:
+        plan = dataclasses.replace(plan, seq_shard=seq_shard)
+    if microbatch is not None:
+        plan = dataclasses.replace(plan, microbatch=microbatch)
+    if flash:
+        plan = dataclasses.replace(plan, flash=True)
+    if layout is not None:
+        plan = dataclasses.replace(plan, layout=layout)
+    if plan.flash:
+        cfg = dataclasses.replace(cfg, flash_prefill=True)
+    policy = ShardingPolicy(
+        mesh=mesh, dp_axes=dp,
+        seq_shard=(plan.seq_shard and shape.kind == "train")
+        or plan.layout == "cp",
+        serve_layout=plan.layout in ("dp", "cp"),
+        cp_layout=plan.layout == "cp")
+    model = build(cfg, policy=policy)
+
+    key = jax.random.PRNGKey(0)
+    params_abs, specs = steps_lib.abstract_init(model, key)
+    if plan.layout in ("dp", "cp"):
+        # serve layouts: transform per-layer weights only
+        for sub in ("prefix", "body", "enc", "dec"):
+            if sub in specs:
+                specs[sub] = policy.serve_param_specs(
+                    specs[sub], keep_data=plan.layout == "cp")
+    specs = steps_lib.sanitize_specs(specs, params_abs, mesh)
+    params_sh = steps_lib.shardings_of(specs, mesh)
+    batch_abs = model.input_specs(shape)
+    bspecs = steps_lib.sanitize_specs(
+        steps_lib.batch_specs(model, shape, policy), batch_abs, mesh)
+    batch_sh = steps_lib.shardings_of(bspecs, mesh)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        accum = jnp.bfloat16 if plan.accum == "bfloat16" else jnp.float32
+        fn, optimizer = steps_lib.make_train_step(
+            model, cfg, shape, policy, optimizer_name=plan.optimizer,
+            microbatch=plan.microbatch, accum_dtype=accum)
+        opt_abs = _abstract(optimizer.init, params_abs)
+        opt_specs = steps_lib.sanitize_specs(
+            optimizer.state_specs(specs, params_abs), opt_abs, mesh)
+        opt_sh = steps_lib.shardings_of(opt_specs, mesh)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(params_sh, opt_sh, NamedSharding(mesh, P()),
+                          batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(params_abs, opt_abs, step_abs, batch_abs)
+    elif shape.kind == "prefill":
+        fn = steps_lib.make_prefill_step(model, shape)
+        state_abs = _abstract(fn, params_abs, batch_abs)[1]
+        st_specs = steps_lib.sanitize_specs(
+            steps_lib.decode_state_specs(state_abs, policy), state_abs, mesh)
+        st_sh = steps_lib.shardings_of(st_specs, mesh)
+        logits_sh = NamedSharding(mesh, P(dp, None))
+        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                         out_shardings=(logits_sh, st_sh))
+        lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        serve = steps_lib.make_serve_step(model, shape, sample_topk=50)
+        if model.is_encdec:
+            pf_batch = {
+                "tokens": jax.ShapeDtypeStruct(
+                    (shape.global_batch, 32), jnp.int32),
+                "frames": jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.enc_seq, cfg.d_model),
+                    jnp.bfloat16)}
+            state_abs = _abstract(
+                lambda p, b: model.prefill(p, b, max_len=shape.seq_len)[1],
+                params_abs, pf_batch)
+        else:
+            state_abs = _abstract(
+                lambda: model.decode_state(shape.global_batch,
+                                           shape.seq_len))
+        st_specs = steps_lib.sanitize_specs(
+            steps_lib.decode_state_specs(state_abs, policy), state_abs, mesh)
+        st_sh = steps_lib.shardings_of(st_specs, mesh)
+        token_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        token_spec = steps_lib.sanitize_specs(P(dp, None), token_abs, mesh)
+        token_sh = NamedSharding(mesh, token_spec)
+        rng_abs = _abstract(lambda: jax.random.PRNGKey(0))
+        jitted = jax.jit(serve,
+                         in_shardings=(params_sh, token_sh, st_sh,
+                                       NamedSharding(mesh, P())),
+                         out_shardings=(token_sh, st_sh))
+        lowered = jitted.lower(params_abs, token_abs, state_abs, rng_abs)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    coll = collect_collectives(hlo)
+    from repro.launch import hlo_analysis
+    corrected = hlo_analysis.analyze(hlo)
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "plan": dataclasses.asdict(plan),
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "memory": {k: int(v) for k, v in {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }.items()},
+        "collectives": coll,               # raw (loop bodies counted once)
+        "hlo_analysis": corrected,         # trip-count-corrected, per device
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_lines": hlo.count("\n"),
+    }
+    if verbose:
+        print(f"  memory_analysis: {record['memory']}")
+        print(f"  cost_analysis: flops={record['flops']:.3e} "
+              f"bytes={record['bytes_accessed']:.3e}")
+        print(f"  collectives: {coll['counts']} "
+              f"total={coll['total_bytes']:.3e} B")
+    return record
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
+             **kw):
+    name = f"{arch}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}"
+    if tag:
+        name += f"_{tag}"
+    print(f"[dryrun] {name} ...", flush=True)
+    t0 = time.time()
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod, **kw)
+        rec["ok"] = not rec.get("skipped", False)
+        status = "SKIP" if rec.get("skipped") else "OK"
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        status = "FAIL"
+    rec["wall_s"] = round(time.time() - t0, 1)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] {name}: {status} ({rec['wall_s']}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--seq-shard", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--flash", action="store_true")
+    ap.add_argument("--layout", default=None)
+    args = ap.parse_args()
+
+    kw = {}
+    if args.seq_shard is not None:
+        kw["seq_shard"] = bool(args.seq_shard)
+    if args.microbatch is not None:
+        kw["microbatch"] = args.microbatch
+    if args.flash:
+        kw["flash"] = True
+    if args.layout:
+        kw["layout"] = args.layout
+
+    from repro.configs.base import ALIASES
+    cells = []
+    archs = ARCH_IDS if args.all or not args.arch else \
+        [ALIASES.get(args.arch, args.arch.replace("-", "_"))]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    failed = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, mp, tag=args.tag, **kw)
+        if not rec.get("ok") and not rec.get("skipped"):
+            failed += 1
+    print(f"[dryrun] done: {len(cells)} cells, {failed} failures")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

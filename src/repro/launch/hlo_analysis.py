@@ -1,0 +1,247 @@
+"""Post-SPMD HLO cost analyzer with loop trip-count correction.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE (measured in
+this environment: a 10-iteration scan reports the flops of one iteration),
+so any scan-over-layers / grad-accumulation / q-chunk graph is undercounted
+by large factors.  This module parses ``compiled.as_text()`` into
+computations, builds the call graph (while bodies weighted by their
+``known_trip_count``, fusions/calls by call-site count), and propagates
+execution multipliers from ENTRY.  It then reports:
+
+  * flops        — 2*M*N*K summed over `dot` ops x multiplier
+  * hbm_bytes    — sum of (operands + result) bytes over non-fused op sites
+                   x multiplier (CPU-fusion granularity; a pessimistic but
+                   consistent HBM-traffic model, see EXPERIMENTS.md §Roofline)
+  * collectives  — per-kind op counts and wire bytes x multiplier
+                   (all-reduce counted 2x: reduce-scatter + all-gather ring
+                   phases; ring (g-1)/g factor ~1 dropped)
+
+All numbers are PER-DEVICE (the HLO is the per-partition SPMD module).
+"""
+from __future__ import annotations
+
+import collections
+import json
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "token": 0, "u1": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->")
+_CALLEE_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(
+    r'known_trip_count"?\s*[:=]\s*\{\s*"?n"?\s*[:=]\s*"?(\d+)"?\s*\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.ops: List[dict] = []
+        self.symbols: Dict[str, str] = {}   # op/param name -> type string
+        self.callees: List[tuple] = []      # (callee, weight, kind)
+        self.fusion_callees: set = set()
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            # header params: "p1: f32[2,3], p2: (f32[], s32[])"
+            hdr = mc.group(2)
+            for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|[\w\[\],]+)",
+                                  hdr):
+                cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        name, type_str, opcode, rest = mo.groups()
+        cur.symbols[name] = type_str
+        # operands: up to the closing paren at depth 0
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = rest[:end]
+        attrs = rest[end:]
+        operands = _OPERAND_RE.findall(operand_str)
+        op = {"name": name, "type": type_str, "opcode": opcode,
+              "operands": operands, "attrs": attrs, "line": line}
+        cur.ops.append(op)
+        # call edges
+        trip = 1
+        mt = _TRIP_RE.search(attrs)
+        if opcode == "while":
+            trip = int(mt.group(1)) if mt else 1
+        for cm in _CALLEE_RE.finditer(attrs):
+            kind = "fusion" if "calls=" in attrs and \
+                f"calls=%{cm.group(1)}" in attrs else opcode
+            w = trip if opcode == "while" else 1
+            cur.callees.append((cm.group(1), w, opcode))
+            if opcode == "fusion":
+                cur.fusion_callees.add(cm.group(1))
+        mb = _BRANCH_RE.search(attrs)
+        if mb:
+            for b in _OPERAND_RE.findall(mb.group(1)):
+                cur.callees.append((b, 1, "conditional"))
+    return comps, entry
+
+
+def _dot_flops(comp: Computation, op: dict) -> float:
+    """2 * prod(result dims) * prod(lhs contracting dims)."""
+    _, rdims = _shape_dims(op["type"])
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op["attrs"] +
+                  op["line"])
+    if not op["operands"]:
+        return 0.0
+    lhs_type = comp.symbols.get(op["operands"][0], "")
+    _, ldims = _shape_dims(lhs_type)
+    contract = 1
+    if m and ldims:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(ldims):
+                contract *= ldims[int(d)]
+    rsize = 1
+    for d in rdims:
+        rsize *= d
+    return 2.0 * rsize * contract
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return {"error": "no entry computation"}
+
+    # propagate execution multipliers (fixpoint over the call DAG)
+    mult = collections.defaultdict(float)
+    mult[entry] = 1.0
+    # iterate: call graphs are DAGs; a few passes suffice
+    for _ in range(64):
+        changed = False
+        new = collections.defaultdict(float)
+        new[entry] = 1.0
+        for name, comp in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for callee, w, _kind in comp.callees:
+                new[callee] += m * w
+        for k, v in new.items():
+            if abs(mult.get(k, 0.0) - v) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+
+    fusion_bodies = set()
+    reduce_bodies = set()
+    for comp in comps.values():
+        fusion_bodies |= comp.fusion_callees
+        for callee, _w, kind in comp.callees:
+            if kind not in ("while", "conditional", "call"):
+                if callee not in fusion_bodies:
+                    reduce_bodies.add(callee)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_counts = collections.Counter()
+    coll_bytes = collections.Counter()
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = name in fusion_bodies or name in reduce_bodies
+        for op in comp.ops:
+            oc = op["opcode"]
+            if oc == "dot":
+                flops += m * _dot_flops(comp, op)
+            if oc in COLLECTIVE_OPS or oc.rstrip("-start") in COLLECTIVE_OPS:
+                base = oc.replace("-start", "")
+                if base in COLLECTIVE_OPS:
+                    b = shape_bytes(op["type"])
+                    wire = 2 * b if base == "all-reduce" else b
+                    coll_counts[base] += int(m)
+                    coll_bytes[base] += m * wire
+            if not in_fusion and oc not in _SKIP_BYTES_OPS \
+                    and not oc.endswith("-done"):
+                b = shape_bytes(op["type"])
+                for o in op["operands"]:
+                    b += shape_bytes(comp.symbols.get(o, ""))
+                hbm += m * b
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_counts": dict(coll_counts),
+        "collective_bytes": {k: float(v) for k, v in coll_bytes.items()},
+        "collective_total_bytes": float(sum(coll_bytes.values())),
+        "n_computations": len(comps),
+    }
+
+
+def top_tensors(text: str, n: int = 20):
+    """Largest result tensors with their op + computation (memory triage)."""
+    comps, entry = parse_hlo(text)
+    rows = []
+    for name, comp in comps.items():
+        for op in comp.ops:
+            b = shape_bytes(op["type"])
+            if b > (8 << 20):
+                rows.append((b, comp.name, op["opcode"], op["name"],
+                             op["type"][:60]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(analyze(open(sys.argv[1]).read()), indent=2))

@@ -1,0 +1,67 @@
+"""Generate the §Dry-run summary table from results/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def rows(mesh: str = None):
+    out = []
+    for p in sorted(RESULTS.glob("*.json")):
+        if any(p.stem.endswith(t) for t in ("_flash", "_opt", "_exp")):
+            continue
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def markdown(mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | status | temp GB/dev | args GB/dev | "
+           "HLO flops/dev | coll bytes/dev | compile s |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = [hdr]
+    for r in rows():
+        if r.get("mesh", mesh) != mesh and not r.get("skipped"):
+            continue
+        if r.get("skipped"):
+            if mesh == "16x16":   # print skips once
+                lines.append(f"| {r['arch']} | {r['shape']} | SKIP "
+                             f"({r['reason'][:40]}...) | | | | | |\n")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | **FAIL** "
+                         f"| | | | | |\n")
+            continue
+        mem = r["memory"]
+        h = r.get("hlo_analysis", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{mem['temp_bytes']/1e9:.1f} | "
+            f"{mem['argument_bytes']/1e9:.2f} | "
+            f"{h.get('flops', 0):.2e} | "
+            f"{h.get('collective_total_bytes', 0):.2e} | "
+            f"{r.get('compile_s', 0):.0f} |\n")
+    return "".join(lines)
+
+
+def status_counts():
+    ok = fail = skip = 0
+    for r in rows():
+        if r.get("skipped"):
+            skip += 1
+        elif r.get("ok"):
+            ok += 1
+        else:
+            fail += 1
+    return ok, fail, skip
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(markdown(mesh))
+    print("status:", status_counts())

@@ -1,0 +1,147 @@
+"""Serving driver: prefill + decode with a length-sorted batch scheduler.
+
+The scheduler is the third place the paper's technique lands in the
+framework (after MoE routing and sampling): incoming requests are sorted by
+prompt length (``sort_api`` backends) so each prefill batch is
+length-homogeneous — padding waste drops from worst-case to
+max-within-bucket, exactly the data-movement argument of the paper applied
+to request scheduling.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+      --requests 16 --decode-steps 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.core import sort_api
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import dp_axes_of, make_host_mesh
+from repro.models.model_zoo import build
+from repro.sharding.partitioning import ShardingPolicy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (len,) int32
+    max_new: int = 32
+    out: Optional[np.ndarray] = None
+
+
+class LengthSortedScheduler:
+    """Batch requests by sorted prompt length (paper technique #3)."""
+
+    def __init__(self, batch_size: int, method: str = "bitonic"):
+        self.batch_size = batch_size
+        self.method = method
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def next_batch(self) -> List[Request]:
+        if not self.queue:
+            return []
+        lens = jnp.asarray([len(r.prompt) for r in self.queue],
+                           dtype=jnp.int32)
+        order = np.array(sort_api.argsort(lens, method=self.method))
+        batch = [self.queue[i] for i in order[:self.batch_size]]
+        picked = set(order[:self.batch_size].tolist())
+        self.queue = [r for i, r in enumerate(self.queue)
+                      if i not in picked]
+        return batch
+
+    def padding_waste(self, batch: List[Request]) -> float:
+        if not batch:
+            return 0.0
+        lens = [len(r.prompt) for r in batch]
+        return 1.0 - sum(lens) / (len(lens) * max(lens))
+
+
+def serve(arch: str, smoke: bool = True, n_requests: int = 16,
+          batch_size: int = 8, decode_steps: int = 32, topk: int = 50,
+          seed: int = 0, max_len: int = 256):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    mesh = make_host_mesh()
+    policy = ShardingPolicy(mesh=mesh, dp_axes=dp_axes_of(mesh))
+    model = build(cfg, policy=policy)
+    key = jax.random.PRNGKey(seed)
+    params, _ = model.init(key)
+
+    from repro.configs.base import ShapeSpec
+    shape = ShapeSpec("serve", max_len, batch_size, "decode")
+    serve_step = jax.jit(steps_lib.make_serve_step(model, shape,
+                                                   sample_topk=topk))
+
+    rng = np.random.default_rng(seed)
+    sched = LengthSortedScheduler(batch_size, method=cfg.sort_method)
+    for rid in range(n_requests):
+        plen = int(rng.integers(4, max_len // 4))
+        sched.submit(Request(rid=rid, prompt=rng.integers(
+            0, cfg.vocab_size, plen).astype(np.int32),
+            max_new=decode_steps))
+
+    done: List[Request] = []
+    stats = {"batches": 0, "padding_waste": [], "decode_tps": []}
+    while True:
+        batch = sched.next_batch()
+        if not batch:
+            break
+        stats["batches"] += 1
+        stats["padding_waste"].append(sched.padding_waste(batch))
+        plen = max(len(r.prompt) for r in batch)
+        toks = np.zeros((len(batch), plen), np.int32)
+        for i, r in enumerate(batch):   # left-pad to common length
+            toks[i, plen - len(r.prompt):] = r.prompt
+        feed = {"tokens": jnp.asarray(toks)}
+        if model.is_encdec:
+            feed["frames"] = jnp.asarray(rng.standard_normal(
+                (len(batch), cfg.enc_seq, cfg.d_model)) * 0.1,
+                dtype=jnp.float32)
+        logits, state = model.prefill(params, feed, max_len=max_len)
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        outs = [nxt]
+        t0 = time.monotonic()
+        for i in range(decode_steps - 1):
+            nxt, state = serve_step(params, nxt, state,
+                                    jax.random.fold_in(key, i))
+            outs.append(nxt)
+        dt = time.monotonic() - t0
+        stats["decode_tps"].append(
+            (decode_steps - 1) * len(batch) / max(dt, 1e-9))
+        gen = np.concatenate([np.array(o) for o in outs], axis=1)
+        for i, r in enumerate(batch):
+            r.out = gen[i]
+            done.append(r)
+    waste = float(np.mean(stats["padding_waste"]))
+    print(f"[serve] {len(done)} requests in {stats['batches']} batches; "
+          f"mean padding waste {waste:.3f}; "
+          f"decode {np.mean(stats['decode_tps']):.1f} tok/s")
+    return done, stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--topk", type=int, default=50)
+    args = ap.parse_args()
+    serve(args.arch, smoke=args.smoke, n_requests=args.requests,
+          batch_size=args.batch_size, decode_steps=args.decode_steps,
+          topk=args.topk)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""Attention: MHA/GQA/MQA with RoPE/M-RoPE, causal + sliding-window masks,
+cross-attention (enc-dec), and a prefill/decode KV cache.
+
+KV-cache layout: ``(B, S_cache, R, head_dim)`` where R is the *stored* kv-head
+count — the raw ``n_kv_heads`` optionally repeated up to the tensor-parallel
+degree so the head axis shards evenly (DESIGN.md §4: "repeat-to-TP"); the
+repeat factor is decided by the ShardingPolicy, not here.  Sliding-window
+layers keep only ``window`` positions (ring buffer) — this is what makes the
+recurrentgemma long_500k cell O(window) instead of O(seq).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S_cache, R, H)
+    v: jnp.ndarray          # (B, S_cache, R, H)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_type: str = "standard"        # standard | mrope | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    causal: bool = True
+    window: int = 0                    # 0 = global
+    kv_repeat: int = 1                 # R = n_kv_heads * kv_repeat
+
+    @property
+    def r_heads(self) -> int:
+        return self.n_kv_heads * self.kv_repeat
+
+
+def init(key, cfg: AttentionConfig, dtype):
+    d, n, k, h = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": layers.truncnorm_init(ks[0], (d, n * h), 1 / math.sqrt(d), dtype),
+        "wk": layers.truncnorm_init(ks[1], (d, k * h), 1 / math.sqrt(d), dtype),
+        "wv": layers.truncnorm_init(ks[2], (d, k * h), 1 / math.sqrt(d), dtype),
+        "wo": layers.truncnorm_init(ks[3], (n * h, d), 1 / math.sqrt(n * h),
+                                    dtype),
+    }
+    specs = {"wq": P("data", "model"), "wk": P("data", "model"),
+             "wv": P("data", "model"), "wo": P("model", "data")}
+    return params, specs
+
+
+def _rope(cfg: AttentionConfig, x, positions):
+    if cfg.rope_type == "none" or positions is None:
+        return x
+    if cfg.rope_type == "mrope":
+        return layers.apply_mrope(x, positions, cfg.rope_theta,
+                                  cfg.mrope_sections)
+    return layers.apply_rope(x, positions, cfg.rope_theta)
+
+
+def _repeat_kv(cfg: AttentionConfig, x):
+    if cfg.kv_repeat == 1:
+        return x
+    return jnp.repeat(x, cfg.kv_repeat, axis=2)
+
+
+def _attend(cfg: AttentionConfig, q, k, v, mask, policy=None):
+    """q: (B,S,N,H); k/v: (B,T,R,H); mask: (B,1,S,T) or None -> (B,S,N,H).
+
+    Grouped-query attention: the N query heads are split into R groups.
+    Softmax in fp32 (numerics), output cast back to q.dtype.
+    """
+    b, s, n, h = q.shape
+    t, r = k.shape[1], k.shape[2]
+    g = n // r
+    # BLOCKED head grouping: q head index = r_idx * g + j, so kv-repeated
+    # head r serves q heads [r*g, (r+1)*g).  Keeping r as the leading factor
+    # of the reshape means a model-axis sharding of the N heads maps 1:1
+    # onto the r axis of the scores — without this, GSPMD cannot shard the
+    # score tensors and all-reduces them per q-chunk (measured 3-13 GB per
+    # occurrence on nemotron-340b before the fix).
+    q = q.reshape(b, s, r, g, h)
+    scale = 1.0 / math.sqrt(h)
+    logits = jnp.einsum("bsrgh,btrh->brgst", q, k) * scale
+    logits = logits.astype(jnp.float32)
+    if policy is not None:
+        logits = policy.shard_scores(logits)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, :, :, :] if mask.ndim == 4
+                           else mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    if policy is not None:
+        probs = policy.shard_scores(probs)
+    out = jnp.einsum("brgst,btrh->bsrgh", probs, v)
+    return out.reshape(b, s, n, h)
+
+
+def _attend_q_chunked(cfg: AttentionConfig, q, k, v, q_chunk: int,
+                      policy=None):
+    """Causal/windowed self-attention scanned over query blocks.
+
+    Never materialises the full (S x S) score matrix — per step the live
+    score block is (B, heads, q_chunk, S), the memory-safe formulation for
+    the 32k prefill cells (flash-style KV-streaming is the obvious further
+    step; q-chunking alone already bounds live memory by 1/(S/q_chunk)).
+    """
+    b, s, n, h = q.shape
+    nc = s // q_chunk
+    qs = jnp.moveaxis(q.reshape(b, nc, q_chunk, n, h), 1, 0)
+
+    def step(_, inp):
+        i, qc = inp
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        kpos = jnp.arange(s)
+        m = kpos[None, :] <= qpos[:, None]
+        if cfg.window:
+            m &= kpos[None, :] > qpos[:, None] - cfg.window
+        out = _attend(cfg, qc, k, v, m[None, None], policy=policy)
+        return None, out
+
+    _, outs = jax.lax.scan(step, None,
+                           (jnp.arange(nc, dtype=jnp.int32), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, n, h)
+
+
+def causal_mask(s: int, t_offset: int = 0, window: int = 0):
+    """(1, 1, S, S+t_offset) boolean mask; True = attend."""
+    qpos = jnp.arange(s)[:, None] + t_offset
+    kpos = jnp.arange(s + t_offset)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def apply(params, cfg: AttentionConfig, x, positions=None, *,
+          mask=None, kv=None, policy=None, use_flash: bool = False):
+    """Full-sequence attention (training / prefill / encoder).
+
+    kv: optional (keys_src, values_src) hidden states for cross-attention.
+    use_flash: route self-attention through the in-VMEM flash kernel
+    (forward-only — prefill/serving paths).
+    Returns (out, (k_r, v_r)) — the repeated K/V for cache initialisation.
+    """
+    b, s, _ = x.shape
+    n, r, h = cfg.n_heads, cfg.r_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, n, h)
+    src = x if kv is None else kv
+    k = (src @ params["wk"]).reshape(b, src.shape[1], cfg.n_kv_heads, h)
+    v = (src @ params["wv"]).reshape(b, src.shape[1], cfg.n_kv_heads, h)
+    if kv is None:                       # self-attention: rotary applies
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+    k = _repeat_kv(cfg, k)
+    v = _repeat_kv(cfg, v)
+    if policy is not None:
+        q = policy.shard_heads(q)
+        k = policy.shard_heads(k)
+        v = policy.shard_heads(v)
+    if use_flash and kv is None and mask is None and cfg.causal:
+        if policy is not None:
+            out = policy.run_sharded_flash(q, k, v, causal=True,
+                                           window=cfg.window)
+        else:
+            from repro.kernels.flash_attention import flash_attention
+            out = flash_attention(q, k, v, causal=True, window=cfg.window)
+    elif mask is None and cfg.causal and kv is None and s > 2048 \
+            and s % 1024 == 0:
+        out = _attend_q_chunked(cfg, q, k, v, q_chunk=1024, policy=policy)
+    else:
+        if mask is None and cfg.causal and kv is None:
+            mask = causal_mask(s, window=cfg.window)
+        out = _attend(cfg, q, k, v, mask, policy=policy)
+    out = out.reshape(b, s, n * h)
+    return out @ params["wo"], KVCache(k=k, v=v)
+
+
+def init_cache(cfg: AttentionConfig, batch: int, max_len: int, dtype
+               ) -> KVCache:
+    length = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, length, cfg.r_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_step(params, cfg: AttentionConfig, x, cache: KVCache,
+                t, positions=None, *, policy=None):
+    """Single-token decode. x: (B, 1, D); t: scalar int32 current position.
+
+    Returns (out, new_cache).  Sliding-window layers write into a ring
+    buffer (slot = t mod window) and mask by recency.
+    """
+    b = x.shape[0]
+    n, r, h = cfg.n_heads, cfg.r_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, 1, n, h)
+    k = (x @ params["wk"]).reshape(b, 1, cfg.n_kv_heads, h)
+    v = (x @ params["wv"]).reshape(b, 1, cfg.n_kv_heads, h)
+    if positions is None:
+        if cfg.rope_type == "mrope":
+            positions = jnp.broadcast_to(t, (3, b, 1)).astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(t, (b, 1)).astype(jnp.int32)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    k = _repeat_kv(cfg, k)
+    v = _repeat_kv(cfg, v)
+
+    s_cache = cache.k.shape[1]
+    slot = jnp.mod(t, s_cache) if cfg.window else t
+    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                         (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                         (0, slot, 0, 0))
+    if policy is not None:
+        new_k = policy.shard_cache(new_k)
+        new_v = policy.shard_cache(new_v)
+
+    kpos = jnp.arange(s_cache)
+    if cfg.window:
+        # ring buffer: valid if the stored position is within the window
+        stored_pos = kpos + (t - slot).astype(kpos.dtype) \
+            - jnp.where(kpos > slot, s_cache, 0)
+        valid = (stored_pos >= 0) & (stored_pos <= t) & \
+                (stored_pos > t - cfg.window)
+    else:
+        valid = kpos <= t
+    mask = valid[None, None, None, :]    # (1,1,1,S_cache)
+    out = _attend(cfg, q, new_k, new_v, mask, policy=policy)
+    out = out.reshape(b, 1, n * h)
+    return out @ params["wo"], KVCache(k=new_k, v=new_v)

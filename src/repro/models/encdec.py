@@ -1,0 +1,244 @@
+"""Whisper-style encoder-decoder (whisper-tiny backbone).
+
+Per the assignment, the conv/mel audio frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings (B, S_enc, d_model) directly to the
+encoder.  Positions use fixed sinusoids (whisper's encoder does too; the
+decoder's learned embedding is approximated with the same sinusoids — noted
+in DESIGN.md §6).  LayerNorm + GELU + MHA (n_kv == n_heads), pre-norm.
+
+Decode keeps two caches per decoder layer: a growing self-attention KV cache
+and the static cross-attention KV computed once from the encoder output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers
+
+
+def sinusoids(length: int, channels: int):
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+@dataclasses.dataclass
+class EncDecTransformer:
+    cfg: ModelConfig
+    policy: Any = None
+    remat: bool = True
+
+    def __post_init__(self):
+        kvr = 1
+        if self.policy is not None:
+            kvr = self.policy.kv_repeat(self.cfg.n_kv_heads, self.cfg.n_heads)
+        base = dict(d_model=self.cfg.d_model, n_heads=self.cfg.n_heads,
+                    n_kv_heads=self.cfg.n_kv_heads,
+                    head_dim=self.cfg.resolved_head_dim, rope_type="none",
+                    kv_repeat=kvr)
+        self.enc_attn = attention.AttentionConfig(causal=False, **base)
+        self.dec_attn = attention.AttentionConfig(causal=True, **base)
+        self.cross_attn = attention.AttentionConfig(causal=False, **base)
+
+    # ---------------------------------------------------------------- init
+    def _enc_layer_init(self, key, dtype):
+        ks = jax.random.split(key, 2)
+        p, s = {}, {}
+        (p["ln1"], s["ln1"]), _ = layers.make_norm("layernorm",
+                                                   self.cfg.d_model, dtype)
+        p["attn"], s["attn"] = attention.init(ks[0], self.enc_attn, dtype)
+        (p["ln2"], s["ln2"]), _ = layers.make_norm("layernorm",
+                                                   self.cfg.d_model, dtype)
+        p["mlp"], s["mlp"] = layers.mlp_init(ks[1], self.cfg.d_model,
+                                             self.cfg.d_ff, "gelu", dtype)
+        return p, s
+
+    def _dec_layer_init(self, key, dtype):
+        ks = jax.random.split(key, 3)
+        p, s = {}, {}
+        (p["ln1"], s["ln1"]), _ = layers.make_norm("layernorm",
+                                                   self.cfg.d_model, dtype)
+        p["self_attn"], s["self_attn"] = attention.init(ks[0], self.dec_attn,
+                                                        dtype)
+        (p["lnx"], s["lnx"]), _ = layers.make_norm("layernorm",
+                                                   self.cfg.d_model, dtype)
+        p["cross_attn"], s["cross_attn"] = attention.init(
+            ks[1], self.cross_attn, dtype)
+        (p["ln2"], s["ln2"]), _ = layers.make_norm("layernorm",
+                                                   self.cfg.d_model, dtype)
+        p["mlp"], s["mlp"] = layers.mlp_init(ks[2], self.cfg.d_model,
+                                             self.cfg.d_ff, "gelu", dtype)
+        return p, s
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = cfg.param_dtype()
+        n_enc = cfg.n_enc_layers
+        keys = jax.random.split(key, n_enc + cfg.n_layers + 3)
+        params: Dict[str, Any] = {"enc": [], "dec": []}
+        specs: Dict[str, Any] = {"enc": [], "dec": []}
+        for i in range(n_enc):
+            p, s = self._enc_layer_init(keys[i], dtype)
+            params["enc"].append(p)
+            specs["enc"].append(s)
+        for i in range(cfg.n_layers):
+            p, s = self._dec_layer_init(keys[n_enc + i], dtype)
+            params["dec"].append(p)
+            specs["dec"].append(s)
+        params["embed"], specs["embed"] = layers.embedding_init(
+            keys[-1], cfg.padded_vocab, cfg.d_model, dtype, tied=True)
+        (params["enc_ln"], specs["enc_ln"]), _ = layers.make_norm(
+            "layernorm", cfg.d_model, dtype)
+        (params["dec_ln"], specs["dec_ln"]), _ = layers.make_norm(
+            "layernorm", cfg.d_model, dtype)
+        return params, specs
+
+    # -------------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        """frames: (B, S_enc, D) stubbed audio embeddings."""
+        x = frames.astype(self.cfg.param_dtype())
+        x = x + sinusoids(x.shape[1], x.shape[2]).astype(x.dtype)[None]
+        if self.policy is not None:
+            x = self.policy.shard_activations(x)
+
+        def layer(p, x):
+            h = layers.layernorm(p["ln1"], x)
+            mix, _ = attention.apply(p["attn"], self.enc_attn, h,
+                                     positions=None, policy=self.policy)
+            x = x + mix
+            h2 = layers.layernorm(p["ln2"], x)
+            x = x + layers.mlp_apply(p["mlp"], h2, "gelu")
+            if self.policy is not None:
+                x = self.policy.shard_activations(x)
+            return x
+
+        for p in params["enc"]:
+            fn = layer
+            if self.remat:
+                fn = jax.checkpoint(
+                    layer, policy=jax.checkpoint_policies.nothing_saveable)
+            x = fn(p, x)
+        return layers.layernorm(params["enc_ln"], x)
+
+    # -------------------------------------------------------------- decoder
+    def _dec_layer(self, p, x, enc_out, self_mask=None):
+        h = layers.layernorm(p["ln1"], x)
+        mix, _ = attention.apply(p["self_attn"], self.dec_attn, h,
+                                 positions=None, mask=self_mask,
+                                 policy=self.policy)
+        x = x + mix
+        hx = layers.layernorm(p["lnx"], x)
+        cross, _ = attention.apply(p["cross_attn"], self.cross_attn, hx,
+                                   positions=None, kv=enc_out,
+                                   policy=self.policy)
+        x = x + cross
+        h2 = layers.layernorm(p["ln2"], x)
+        x = x + layers.mlp_apply(p["mlp"], h2, "gelu")
+        if self.policy is not None:
+            x = self.policy.shard_activations(x)
+        return x
+
+    def decode_hidden(self, params, tokens, enc_out):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens, False, cfg.d_model)
+        x = x + sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        for p in params["dec"]:
+            fn = self._dec_layer
+            if self.remat:
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable)
+            x = fn(p, x, enc_out)
+        return layers.layernorm(params["dec_ln"], x)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        hidden = self.decode_hidden(params, batch["tokens"], enc_out)
+        logits = layers.logits_from_hidden(hidden, params["embed"], None,
+                                           tie=True,
+                                           true_vocab=cfg.vocab_size)
+        ce = layers.cross_entropy_loss(logits, batch["labels"], self.policy)
+        return ce, {"ce_loss": ce}
+
+    # ------------------------------------------------------ prefill / decode
+    def prefill(self, params, frames, tokens, max_len: int):
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        b, s = tokens.shape
+        x = layers.embed(params["embed"], tokens, False, cfg.d_model)
+        x = x + sinusoids(s, cfg.d_model).astype(x.dtype)[None]
+        states = []
+        for p in params["dec"]:
+            h = layers.layernorm(p["ln1"], x)
+            mix, kv = attention.apply(p["self_attn"], self.dec_attn, h,
+                                      positions=None, policy=self.policy)
+            pad = [(0, 0), (0, max_len - s), (0, 0), (0, 0)]
+            kv = attention.KVCache(k=jnp.pad(kv.k, pad), v=jnp.pad(kv.v, pad))
+            x = x + mix
+            hx = layers.layernorm(p["lnx"], x)
+            # cross K/V computed once and frozen for the whole decode
+            src_k = (enc_out @ p["cross_attn"]["wk"]).reshape(
+                b, enc_out.shape[1], cfg.n_kv_heads, self.cross_attn.head_dim)
+            src_v = (enc_out @ p["cross_attn"]["wv"]).reshape(
+                b, enc_out.shape[1], cfg.n_kv_heads, self.cross_attn.head_dim)
+            src_k = attention._repeat_kv(self.cross_attn, src_k)
+            src_v = attention._repeat_kv(self.cross_attn, src_v)
+            cross, _ = attention.apply(p["cross_attn"], self.cross_attn, hx,
+                                       positions=None, kv=enc_out,
+                                       policy=self.policy)
+            x = x + cross
+            h2 = layers.layernorm(p["ln2"], x)
+            x = x + layers.mlp_apply(p["mlp"], h2, "gelu")
+            states.append({"self": kv,
+                           "cross": attention.KVCache(k=src_k, v=src_v)})
+        hidden = layers.layernorm(params["dec_ln"], x)
+        logits = layers.logits_from_hidden(hidden[:, -1:], params["embed"],
+                                           None, tie=True,
+                                           true_vocab=cfg.vocab_size)
+        return logits[:, 0], {"layers": states,
+                              "t": jnp.full((), s, jnp.int32)}
+
+    def decode_step(self, params, token, state):
+        cfg = self.cfg
+        t = state["t"]
+        b = token.shape[0]
+        x = layers.embed(params["embed"], token, False, cfg.d_model)
+        # sinusoid at position t computed directly (no table materialisation)
+        half = cfg.d_model // 2
+        log_ts = math.log(10000.0) / (half - 1)
+        inv = jnp.exp(-log_ts * jnp.arange(half, dtype=jnp.float32))
+        ang = t.astype(jnp.float32) * inv
+        pos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+        x = x + pos.astype(x.dtype)
+        new_states = []
+        for p, st in zip(params["dec"], state["layers"]):
+            h = layers.layernorm(p["ln1"], x)
+            mix, new_kv = attention.decode_step(p["self_attn"], self.dec_attn,
+                                                h, st["self"], t,
+                                                positions=None,
+                                                policy=self.policy)
+            x = x + mix
+            hx = layers.layernorm(p["lnx"], x)
+            # cross-attention against the frozen encoder K/V
+            q = (hx @ p["cross_attn"]["wq"]).reshape(
+                b, 1, cfg.n_heads, self.cross_attn.head_dim)
+            out = attention._attend(self.cross_attn, q, st["cross"].k,
+                                    st["cross"].v, None)
+            cross = out.reshape(b, 1, -1) @ p["cross_attn"]["wo"]
+            x = x + cross
+            h2 = layers.layernorm(p["ln2"], x)
+            x = x + layers.mlp_apply(p["mlp"], h2, "gelu")
+            new_states.append({"self": new_kv, "cross": st["cross"]})
+        hidden = layers.layernorm(params["dec_ln"], x)
+        logits = layers.logits_from_hidden(hidden, params["embed"], None,
+                                           tie=True,
+                                           true_vocab=cfg.vocab_size)
+        return logits[:, 0], {"layers": new_states, "t": t + 1}

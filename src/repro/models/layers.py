@@ -1,0 +1,212 @@
+"""Shared neural building blocks (pure functional JAX).
+
+Every ``*_init`` returns ``(params, specs)`` — a pytree of arrays and a
+matching pytree of ``PartitionSpec`` leaves.  Sharding convention (DESIGN.md
+§4): 2-D "FSDP x TP" — matmul weights are sharded on BOTH mesh axes,
+('data' on the contraction/input dim, 'model' on the output/head dim, or
+transposed for down-projections); vectors are replicated.  The 'pod' axis
+never appears in parameter specs (pure-DP outer axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def truncnorm_init(key, shape, std, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, spec: P,
+               std: Optional[float] = None):
+    std = std if std is not None else 1.0 / math.sqrt(d_in)
+    return truncnorm_init(key, (d_in, d_out), std, dtype), spec
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}, {"scale": P(None)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    nx = x32 * jax.lax.rsqrt(var + eps)
+    return (nx * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype):
+    return ({"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": P(None), "bias": P(None)})
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    nx = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = nx * (1.0 + params["scale"].astype(jnp.float32)) \
+        + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def make_norm(norm_type: str, d: int, dtype):
+    if norm_type == "rmsnorm":
+        return rmsnorm_init(d, dtype), rmsnorm
+    return layernorm_init(d, dtype), layernorm
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, N, H); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                   # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]):
+    """Multimodal RoPE (Qwen2-VL §3): the rotary spectrum is split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, N, H); positions: (3, B, S) int32 (t/h/w ids; text uses t=h=w).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                    # (half,)
+    # choose which position stream drives each frequency band
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=half)
+    pos = jnp.take(positions, sec_id, axis=0)                 # (half, B, S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+_ACTS = {
+    "swiglu": jax.nn.silu,
+    "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def mlp_init(key, d: int, f: int, mlp_type: str, dtype):
+    gated = mlp_type in ("swiglu", "geglu")
+    ks = jax.random.split(key, 3)
+    params, specs = {}, {}
+    params["wi"], specs["wi"] = dense_init(ks[0], d, f, dtype, P("data", "model"))
+    if gated:
+        params["wg"], specs["wg"] = dense_init(ks[1], d, f, dtype,
+                                               P("data", "model"))
+    params["wo"], specs["wo"] = dense_init(ks[2], f, d, dtype,
+                                           P("model", "data"))
+    return params, specs
+
+
+def mlp_apply(params, x, mlp_type: str):
+    act = _ACTS[mlp_type]
+    h = x @ params["wi"]
+    if "wg" in params:
+        h = act(x @ params["wg"]) * h
+    else:
+        h = act(h)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype, tied: bool = False):
+    """Input embedding table (V, D).
+
+    Untied tables shard D over BOTH mesh axes and keep V replicated-in-spec:
+    the token gather then partitions trivially (no vocab-sharded gather, no
+    table replication — decisive for the 256k x 18k tables).  Tied tables
+    keep V on 'model' so the logits matmul stays vocab-sharded.
+    """
+    w = truncnorm_init(key, (vocab, d), 0.02, dtype)
+    spec = P("model", "data") if tied else P(None, ("data", "model"))
+    return {"embedding": w}, {"embedding": spec}
+
+
+def embed(params, tokens, scale: bool, d: int):
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(d), x.dtype)
+    return x
+
+
+def unembed_init(key, vocab: int, d: int, dtype):
+    w = truncnorm_init(key, (d, vocab), 1.0 / math.sqrt(d), dtype)
+    return {"unembedding": w}, {"unembedding": P("data", "model")}
+
+
+def cross_entropy_loss(logits, labels, policy=None):
+    """Masked CE over (B, S, V) fp32 logits; labels < 0 are masked.
+
+    Written in the vocab-sharded formulation: the max / logsumexp reductions
+    and the one-hot contraction all reduce over V locally + one all-reduce,
+    so the (B, S, V) tensor never needs to be gathered (V stays sharded on
+    the TP axis per policy.shard_logits).
+    """
+    if policy is not None:
+        logits = policy.shard_logits(logits)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    m = jnp.max(logits, axis=-1)
+    z = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    if policy is not None:
+        onehot = policy.shard_logits(onehot)
+    true_logit = jnp.sum(logits * onehot, axis=-1)
+    ll = true_logit - z
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def logits_from_hidden(x, emb_params, unemb_params, tie: bool,
+                       softcap: float = 0.0, true_vocab: int = 0):
+    if tie:
+        w = emb_params["embedding"]          # (V_pad, D)
+        logits = x @ w.T
+    else:
+        logits = x @ unemb_params["unembedding"]
+    logits = logits.astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if true_vocab and true_vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) >= true_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits

@@ -1,0 +1,95 @@
+"""build(config) -> a uniform Model facade over all architecture families.
+
+The facade exposes exactly what launch/, examples/ and tests/ need:
+
+    model.init(key)              -> (params, partition-spec tree)
+    model.loss(params, batch)    -> (scalar, aux)       [training]
+    model.prefill(params, **)    -> (last logits, decode state)
+    model.decode_step(params, token, state) -> (logits, state)
+    model.input_specs(shape)     -> ShapeDtypeStruct stand-ins per cell
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.encdec import EncDecTransformer
+from repro.models.transformer import Transformer
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    impl: Any                  # Transformer | EncDecTransformer
+    policy: Any = None
+
+    @property
+    def is_encdec(self) -> bool:
+        return isinstance(self.impl, EncDecTransformer)
+
+    def init(self, key):
+        return self.impl.init(key)
+
+    def loss(self, params, batch):
+        return self.impl.loss(params, batch)
+
+    def prefill(self, params, batch, max_len: int):
+        if self.is_encdec:
+            return self.impl.prefill(params, batch["frames"],
+                                     batch["tokens"], max_len)
+        return self.impl.prefill(params, batch["tokens"], max_len,
+                                 positions=batch.get("positions"),
+                                 vision_embeds=batch.get("vision_embeds"))
+
+    def decode_state(self, batch_size: int, max_len: int):
+        if self.is_encdec:
+            raise NotImplementedError("enc-dec state comes from prefill")
+        return self.impl.init_state(batch_size, max_len)
+
+    def decode_step(self, params, token, state):
+        return self.impl.decode_step(params, token, state)
+
+    # ------------------------------------------------------------ input specs
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for each input of the step function
+        this shape exercises (no allocation; dry-run contract)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            if self.is_encdec:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+            if cfg.vision_prefix:
+                specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vision_prefix, cfg.d_model), jnp.bfloat16)
+                specs["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if self.is_encdec:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+            if cfg.vision_prefix:
+                specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vision_prefix, cfg.d_model), jnp.bfloat16)
+                specs["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+            return specs
+        # decode: one new token against a seq_len-deep cache
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def build(cfg: ModelConfig, policy=None, remat: bool = True) -> Model:
+    if cfg.family == "encdec":
+        impl = EncDecTransformer(cfg, policy=policy, remat=remat)
+    else:
+        impl = Transformer(cfg, policy=policy, remat=remat)
+    return Model(cfg=cfg, impl=impl, policy=policy)

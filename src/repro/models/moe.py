@@ -1,0 +1,166 @@
+"""Mixture-of-Experts with sort-based token routing — the paper's technique
+as the dispatch backbone.
+
+Routing pipeline (per data shard, device-local by construction):
+
+  1. router logits -> softmax -> top-k experts per token
+     (top-k runs through repro.core.sort_api: bitonic / pallas backends)
+  2. the (token, expert) assignment list is *sorted by expert id* with the
+     bitonic kv-sort — grouping tokens by expert is literally the paper's
+     sorting workload sitting in the middle of the MoE layer
+  3. grouped tokens are scattered into a static-capacity (E * C, D) buffer
+     (flat 1-D scatter: no batched gather/scatter, SPMD-local)
+  4. batched expert matmuls (E, C, D) x (E, D, F) — expert dim sharded over
+     the 'model' mesh axis (EP = TP axis, DESIGN.md §4)
+  5. outputs gathered back and combined with gate weights (scatter-add)
+
+Distribution: the layer is wrapped in a *partial-manual* shard_map — manual
+over the data axes (every shard routes/sorts/scatters its own tokens; zero
+cross-device traffic for dispatch), auto over 'model' so GSPMD shards the
+expert einsums and inserts the usual TP reduce.  Overflow beyond capacity is
+dropped (standard capacity-factor semantics); the residual path keeps those
+tokens intact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.core import sort_api
+from repro.models import layers
+
+
+def init(key, d_model: int, cfg: MoEConfig, mlp_type: str, dtype):
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    gated = mlp_type in ("swiglu", "geglu")
+    ks = jax.random.split(key, 5)
+    std_in, std_out = 1 / math.sqrt(d_model), 1 / math.sqrt(f)
+    params = {
+        "router": layers.truncnorm_init(ks[0], (d_model, e), std_in,
+                                        jnp.float32),
+        "wi": layers.truncnorm_init(ks[1], (e, d_model, f), std_in, dtype),
+        "wo": layers.truncnorm_init(ks[2], (e, f, d_model), std_out, dtype),
+    }
+    specs = {
+        "router": P("data", None),
+        "wi": P("model", "data", None),
+        "wo": P("model", None, "data"),
+    }
+    if gated:
+        params["wg"] = layers.truncnorm_init(ks[3], (e, d_model, f), std_in,
+                                             dtype)
+        specs["wg"] = P("model", "data", None)
+    if cfg.n_shared_experts:
+        shared_f = cfg.n_shared_experts * f
+        params["shared"], specs["shared"] = layers.mlp_init(
+            ks[4], d_model, shared_f, mlp_type, dtype)
+    return params, specs
+
+
+def capacity(tokens_local: int, cfg: MoEConfig) -> int:
+    if tokens_local <= cfg.n_experts:
+        # decode / tiny-batch regime: capacity = T guarantees zero drops
+        # (an expert can receive at most T assignments)
+        return tokens_local
+    c = int(math.ceil(tokens_local * cfg.top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(c, cfg.top_k)
+
+
+def apply(params, x, cfg: MoEConfig, mlp_type: str, policy=None):
+    """MoE layer under plain pjit (batch-grouped dispatch).
+
+    Dispatch is formulated per batch row so every scatter/gather carries the
+    batch dimension: GSPMD partitions batch-dim scatters locally (no token
+    exchange over the mesh — the paper's partition-locality property), and
+    the only communication is the expert einsum's TP reduce plus the combine
+    all-gather over the expert axis.  (A partial-manual shard_map variant
+    was measurably cleaner but its VJP crashes this XLA build —
+    "Invalid binary instruction opcode copy" — so pjit it is; see
+    EXPERIMENTS.md §Dry-run.)
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dp = policy.dp_axes if policy is not None else ()
+    tpa = policy.tp_axis if policy is not None else None
+
+    def constrain(v, spec):
+        if policy is None or policy.mesh is None:
+            return v
+        return jax.lax.with_sharding_constraint(
+            v, jax.sharding.NamedSharding(policy.mesh, spec))
+
+    # 1. routing (fp32 softmax); top-k through the paper's bitonic network
+    rl = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    rl = constrain(rl, P(dp, None, None))
+    probs = jax.nn.softmax(rl, axis=-1)
+    gate_v, gate_i = sort_api.topk(probs, k, method=cfg.router_method)
+    gate_v = gate_v / (jnp.sum(gate_v, axis=-1, keepdims=True) + 1e-9)
+
+    # aux: load-balance (Switch) + router z-loss (global means — pjit
+    # reduces across the mesh natively)
+    onehot_sel = jax.nn.one_hot(gate_i, e, dtype=jnp.float32)   # (B,S,k,E)
+    dispatch_frac = jnp.mean(jnp.sum(onehot_sel, axis=2), axis=(0, 1)) / k
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    lb_loss = e * jnp.sum(dispatch_frac * mean_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(rl, axis=-1)))
+
+    # 2. group (token, expert) pairs by expert id, PER BATCH ROW.  Expert
+    # ids are log2(E)-bit keys, so the grouping sort is a COUNTING sort: a
+    # one-hot exclusive cumsum along the row gives each pair its rank within
+    # its expert — the bit-width-aware strengthening of the paper's 4-bit
+    # bitonic sort (DESIGN.md §2).  The bitonic comparison network still
+    # powers the top-k above.
+    # (token, expert) pairs in (token-major, k-minor) order: pair p belongs
+    # to token p // k — a STATIC pattern, so the token-side gather/scatter
+    # are reshape/segment-sum ops with cheap, shardable transposes (the
+    # dynamic-gather backward was a 26 GB fp32 all-reduce per layer-pass on
+    # moonshot before this — EXPERIMENTS.md §Perf iA.2).
+    flat_e = gate_i.reshape(b, s * k)                           # (B, S*k)
+    flat_g = gate_v.reshape(b, s * k)
+
+    onehot_e = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (B, S*k, E)
+    onehot_e = constrain(onehot_e, P(dp, None, None))
+    pos = jnp.sum((jnp.cumsum(onehot_e, axis=1) - onehot_e) * onehot_e,
+                  axis=-1)                                      # (B, S*k)
+
+    cap = capacity(s, cfg)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)         # (B, S*k)
+
+    # 3. scatter tokens into per-row expert buffers (B, E*C+1, D)
+    xk = jnp.repeat(x, k, axis=1)                               # (B, S*k, D)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    buf = buf.at[rows, slot].add(xk)
+    buf = buf[:, :-1].reshape(b, e, cap, d)
+    buf = constrain(buf, P(dp, tpa, None, None))                # EP slice
+
+    # 4. batched expert matmuls, experts on the TP axis
+    act = layers._ACTS[mlp_type]
+    h = jnp.einsum("becd,edf->becf", buf, params["wi"])
+    if "wg" in params:
+        h = act(jnp.einsum("becd,edf->becf", buf, params["wg"])) * h
+    else:
+        h = act(h)
+    y = jnp.einsum("becf,efd->becd", h, params["wo"])           # (B,E,C,D)
+    y = constrain(y, P(dp, None, None, None))                   # EP combine
+
+    # 5. gather outputs back per pair (dynamic, slot-indexed), then reduce
+    # over the k pairs of each token with a STATIC segment-sum.
+    yf = y.reshape(b, e * cap, d)
+    g_idx = jnp.where(keep, slot, 0)
+    gathered = jnp.take_along_axis(yf, g_idx[..., None], axis=1)
+    contrib = gathered * (flat_g * keep).astype(yf.dtype)[..., None]
+    out = contrib.reshape(b, s, k, d).sum(axis=2)
+    out = constrain(out, P(dp, None, None))
+
+    if cfg.n_shared_experts:
+        out = out + layers.mlp_apply(params["shared"], x, mlp_type)
+    return out, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}

@@ -1,0 +1,132 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block structure: two parallel projections of the residual stream; one passes
+through a short causal conv1d and the Real-Gated Linear Recurrent Unit, the
+other is a GeLU gate; their product is projected back to d_model.
+
+RG-LRU recurrence (fp32):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(c * r_t * log_a)            log_a = -8 * softplus(lambda) <= 0
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluate the recurrence with an associative scan
+(O(log S) depth); decode is the O(1) update.  Sub-quadratic by construction
+— this mixer plus windowed attention is what qualifies recurrentgemma for
+the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RGLRUConfig
+from repro.models import layers
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray           # (B, W) fp32 recurrent state
+    conv: jnp.ndarray        # (B, conv_width - 1, W)
+
+
+def init(key, d_model: int, width: int, cfg: RGLRUConfig, dtype):
+    ks = jax.random.split(key, 7)
+    std = 1 / math.sqrt(d_model)
+    stdw = 1 / math.sqrt(width)
+    params = {
+        "in_x": layers.truncnorm_init(ks[0], (d_model, width), std, dtype),
+        "in_gate": layers.truncnorm_init(ks[1], (d_model, width), std, dtype),
+        "conv_w": layers.truncnorm_init(ks[2], (cfg.conv_width, width),
+                                        1 / math.sqrt(cfg.conv_width), dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": layers.truncnorm_init(ks[3], (width, width), stdw, dtype),
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_i": layers.truncnorm_init(ks[4], (width, width), stdw, dtype),
+        "b_i": jnp.zeros((width,), jnp.float32),
+        # init so that a^c spans ~(0.9, 0.999): lambda via inverse softplus
+        "lam": jnp.log(jnp.expm1(
+            jnp.linspace(0.9, 0.999, width) ** -(1.0 / _C) - 1.0 + 1e-8)
+        ).astype(jnp.float32),
+        "out": layers.truncnorm_init(ks[5], (width, d_model), stdw, dtype),
+    }
+    specs = {
+        "in_x": P("data", "model"), "in_gate": P("data", "model"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "w_a": P("data", "model"), "b_a": P(None),
+        "w_i": P("data", "model"), "b_i": P(None),
+        "lam": P(None),
+        "out": P("model", "data"),
+    }
+    return params, specs
+
+
+def _conv(params, x, conv_width: int, conv_state=None):
+    w = params["conv_w"].astype(x.dtype)
+    pad = conv_width - 1
+    if conv_state is None:
+        padded = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    else:
+        padded = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(padded[:, i:i + x.shape[1], :] * w[i] for i in range(conv_width))
+    return out + params["conv_b"].astype(x.dtype), padded[:, -pad:, :]
+
+
+def _gates(params, xw):
+    """xw: (..., W) conv output -> (a_t, gated input) in fp32."""
+    x32 = xw.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"])
+    i = jax.nn.sigmoid(x32 @ params["w_i"].astype(jnp.float32)
+                       + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"])            # (W,) <= 0
+    a = jnp.exp(r * log_a[None, ...])
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x32)
+    return a, gated
+
+
+def apply(params, x, width: int, cfg: RGLRUConfig, policy=None,
+          init_state: RGLRUState = None) -> Tuple[jnp.ndarray, RGLRUState]:
+    """Full-sequence block. x: (B,S,D) -> (out, final_state)."""
+    xb = x @ params["in_x"]
+    gate = jax.nn.gelu(x @ params["in_gate"], approximate=True)
+    xw, conv_tail = _conv(params, xb, cfg.conv_width,
+                          None if init_state is None else init_state.conv)
+    a, gated = _gates(params, xw)                           # (B,S,W) fp32
+
+    if init_state is not None:
+        # fold h0 in by treating it as an extra leading element
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * init_state.h)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    final = RGLRUState(h=h[:, -1, :], conv=conv_tail)
+    y = h.astype(x.dtype) * gate
+    return y @ params["out"], final
+
+
+def init_state(width: int, cfg: RGLRUConfig, batch: int, dtype) -> RGLRUState:
+    return RGLRUState(h=jnp.zeros((batch, width), jnp.float32),
+                      conv=jnp.zeros((batch, cfg.conv_width - 1, width),
+                                     dtype))
+
+
+def decode_step(params, x, width: int, cfg: RGLRUConfig, st: RGLRUState
+                ) -> Tuple[jnp.ndarray, RGLRUState]:
+    """Single-token update. x: (B,1,D)."""
+    xb = x @ params["in_x"]
+    gate = jax.nn.gelu(x @ params["in_gate"], approximate=True)
+    xw, conv_tail = _conv(params, xb, cfg.conv_width, st.conv)
+    a, gated = _gates(params, xw[:, 0, :])
+    h = a * st.h + gated
+    y = h[:, None, :].astype(x.dtype) * gate
+    return y @ params["out"], RGLRUState(h=h, conv=conv_tail)

@@ -1,0 +1,222 @@
+"""Mamba-2 mixer via SSD (state-space duality), chunked-scan formulation.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks of length Q; within a chunk the output is computed in its
+"attention-like" dual form (quadratic in Q only), and a (H, P, N) recurrent
+state is passed *between* chunks with a linear scan — giving O(S·Q) work and
+O(S/Q) sequential depth.  Training/prefill use the chunked path; decode is
+the O(1) recurrent update on a persistent fp32 state.
+
+Scalar-A parameterisation (one decay per head), conv1d front, gated RMSNorm
+and D skip as in the reference architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SSMConfig
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    conv_width: int
+    chunk: int
+
+    @staticmethod
+    def from_config(d_model: int, cfg: SSMConfig) -> "SSMDims":
+        d_inner = cfg.expand * d_model
+        return SSMDims(d_model=d_model, d_inner=d_inner,
+                       n_heads=d_inner // cfg.head_dim,
+                       head_dim=cfg.head_dim, d_state=cfg.d_state,
+                       conv_width=cfg.conv_width, chunk=cfg.chunk)
+
+
+class SSMState(NamedTuple):
+    state: jnp.ndarray       # (B, H, P, N) fp32
+    conv: jnp.ndarray        # (B, conv_width - 1, conv_channels)
+
+
+def init(key, dims: SSMDims, dtype):
+    d, di, h, n = dims.d_model, dims.d_inner, dims.n_heads, dims.d_state
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 6)
+    std = 1 / math.sqrt(d)
+    params = {
+        # fused input projection: [z, xBC, dt]
+        "in_proj": layers.truncnorm_init(
+            ks[0], (d, di + conv_ch + h), std, dtype),
+        "conv_w": layers.truncnorm_init(
+            ks[1], (dims.conv_width, conv_ch), 1 / math.sqrt(dims.conv_width),
+            dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,), jnp.float32)
+                    * (math.log(0.1) - math.log(0.001)) + math.log(0.001)))),
+        "norm": layers.rmsnorm_init(di, dtype)[0],
+        "out_proj": layers.truncnorm_init(ks[3], (di, d),
+                                          1 / math.sqrt(di), dtype),
+    }
+    specs = {
+        "in_proj": P("data", "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "a_log": P(None), "d_skip": P(None), "dt_bias": P(None),
+        "norm": {"scale": P(None)},
+        "out_proj": P("model", "data"),
+    }
+    return params, specs
+
+
+def _split(params, x, dims: SSMDims):
+    di, h, n = dims.d_inner, dims.n_heads, dims.d_state
+    conv_ch = di + 2 * n
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_ch]
+    dt = zxbcdt[..., di + conv_ch:]
+    return z, xbc, dt
+
+
+def _conv(params, xbc, dims: SSMDims, conv_state=None):
+    """Causal depthwise conv1d over (B, S, C)."""
+    w = params["conv_w"].astype(xbc.dtype)                 # (W, C)
+    pad = dims.conv_width - 1
+    if conv_state is None:
+        padded = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+    else:
+        padded = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(padded[:, i:i + xbc.shape[1], :] * w[i]
+              for i in range(dims.conv_width))
+    out = out + params["conv_b"].astype(xbc.dtype)
+    return jax.nn.silu(out), padded[:, -pad:, :]
+
+
+def _ssd_chunked(xh, dt, bmat, cmat, a, dims: SSMDims, init_state=None):
+    """Chunked SSD. xh: (B,S,H,P); dt: (B,S,H) fp32; bmat/cmat: (B,S,N);
+    a: (H,) negative decay rates. Returns (y, final_state)."""
+    b, s_orig, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(dims.chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:
+        # zero-pad to a chunk multiple: padded steps carry dt=0, so they
+        # neither update the state nor contribute to real outputs
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+
+    xq = xh.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtq = dt.reshape(b, nc, q, h)
+    bq = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cq = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+
+    da = dtq * a[None, None, None, :]                       # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(da, axis=2)                            # within-chunk
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk (dual / attention-like form)
+    scores = jnp.einsum("bcin,bcjn->bcij", cq, bq)          # (B,nc,Q,Q)
+    wdt = l_mat * dtq[:, :, None, :, :]                     # decay * dt_j
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, wdt, xq)
+
+    # per-chunk contribution to the recurrent state
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,Q,H)
+    wstate = (decay_to_end * dtq)                           # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bq, wstate, xq)
+
+    # inter-chunk scan over nc
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))              # (B,nc,H)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        dec, cs = inp
+        new = carry * dec[:, :, None, None] + cs
+        return new, carry                                   # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0),
+                   jnp.moveaxis(chunk_states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,nc,H,P,N)
+
+    # inter-chunk (state -> outputs)
+    state_decay = jnp.exp(cum)                              # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", cq, state_decay,
+                         prev_states)
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y, final
+
+
+def apply(params, x, dims: SSMDims, policy=None,
+          init_state: SSMState = None) -> Tuple[jnp.ndarray, SSMState]:
+    """Full-sequence mixer. x: (B,S,D) -> (out, final_state)."""
+    bsz, s, _ = x.shape
+    h, p, n = dims.n_heads, dims.head_dim, dims.d_state
+    z, xbc, dt = _split(params, x, dims)
+    xbc, conv_tail = _conv(params, xbc, dims,
+                           None if init_state is None else init_state.conv)
+    xh = xbc[..., :dims.d_inner].reshape(bsz, s, h, p)
+    bmat = xbc[..., dims.d_inner:dims.d_inner + n]
+    cmat = xbc[..., dims.d_inner + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["a_log"])
+    y, final = _ssd_chunked(
+        xh, dt, bmat, cmat, a, dims,
+        None if init_state is None else init_state.state)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, dims.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm(params["norm"], y)
+    return y @ params["out_proj"], SSMState(state=final, conv=conv_tail)
+
+
+def init_state(dims: SSMDims, batch: int, dtype) -> SSMState:
+    conv_ch = dims.d_inner + 2 * dims.d_state
+    return SSMState(
+        state=jnp.zeros((batch, dims.n_heads, dims.head_dim, dims.d_state),
+                        jnp.float32),
+        conv=jnp.zeros((batch, dims.conv_width - 1, conv_ch), dtype))
+
+
+def decode_step(params, x, dims: SSMDims, st: SSMState
+                ) -> Tuple[jnp.ndarray, SSMState]:
+    """Single-token recurrent update. x: (B,1,D)."""
+    bsz = x.shape[0]
+    h, p, n = dims.n_heads, dims.head_dim, dims.d_state
+    z, xbc, dt = _split(params, x, dims)
+    xbc, conv_tail = _conv(params, xbc, dims, st.conv)
+    xh = xbc[..., :dims.d_inner].reshape(bsz, h, p).astype(jnp.float32)
+    bmat = xbc[..., dims.d_inner:dims.d_inner + n].reshape(bsz, n)
+    cmat = xbc[..., dims.d_inner + n:].reshape(bsz, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a[None, :])                        # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bmat.astype(jnp.float32))
+    new_state = st.state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat.astype(jnp.float32), new_state)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, dims.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm(params["norm"], y)
+    return y @ params["out_proj"], SSMState(state=new_state, conv=conv_tail)

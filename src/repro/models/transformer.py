@@ -1,0 +1,402 @@
+"""Decoder-only transformer trunk: the shared substrate for 9 of the 10
+assigned architectures (whisper's encoder-decoder wraps it in encdec.py).
+
+Layer mixers are pluggable per ModelConfig.layer_kind(i): attention (dense /
+GQA / MQA, global or windowed), Mamba-2 SSD, or RG-LRU.  FFNs are dense MLPs
+or sort-routed MoE.  Homogeneous layer stacks are executed with
+``lax.scan`` over stacked parameters (one layer's HLO regardless of depth —
+essential for the 95/96-layer dry-runs) wrapped in ``jax.checkpoint`` so
+only the residual stream is saved per layer; heterogeneous stacks (hybrid
+patterns, leading dense-MoE layers) unroll.
+
+Decode threads per-layer recurrent state (KV cache / SSM state / RG-LRU
+state) through the same scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, moe, rglru, ssm
+
+
+def _layer_signature(cfg: ModelConfig, i: int) -> Tuple[str, bool]:
+    has_moe = (cfg.moe is not None and i >= cfg.moe.first_dense_layers)
+    return (cfg.layer_kind(i), has_moe)
+
+
+def _attn_config(cfg: ModelConfig, kv_repeat: int) -> attention.AttentionConfig:
+    return attention.AttentionConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_type=cfg.rope_type,
+        rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        causal=True, window=cfg.window, kv_repeat=kv_repeat)
+
+
+@dataclasses.dataclass
+class Transformer:
+    cfg: ModelConfig
+    policy: Any = None               # ShardingPolicy or None
+    remat: bool = True
+
+    # ------------------------------------------------------------------ init
+    def __post_init__(self):
+        kvr = 1
+        if self.policy is not None:
+            kvr = self.policy.kv_repeat(self.cfg.n_kv_heads, self.cfg.n_heads)
+        self.attn_cfg = _attn_config(self.cfg, kvr)
+        if self.cfg.ssm is not None:
+            self.ssm_dims = ssm.SSMDims.from_config(self.cfg.d_model,
+                                                    self.cfg.ssm)
+        self.rglru_width = (0 if self.cfg.rglru is None else
+                            (self.cfg.rglru.lru_width or self.cfg.d_model))
+        sigs = [_layer_signature(self.cfg, i) for i in range(self.cfg.n_layers)]
+        first = self.cfg.moe.first_dense_layers if self.cfg.moe else 0
+        body = sigs[first:]
+        self.scan_body = len(set(body)) == 1 and len(body) > 1
+        self.n_prefix = first if self.scan_body else (
+            0 if len(set(sigs)) == 1 and len(sigs) > 1 else self.cfg.n_layers)
+        if len(set(sigs)) == 1 and len(sigs) > 1:
+            self.scan_body, self.n_prefix = True, 0
+        self.n_body = self.cfg.n_layers - self.n_prefix
+
+    # -------------------------------------------------------- layer (single)
+    def _init_layer(self, key, i: int):
+        cfg = self.cfg
+        kind, has_moe = _layer_signature(cfg, i)
+        ks = jax.random.split(key, 4)
+        dtype = cfg.param_dtype()
+        params: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+        norm_init, _ = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        params["ln1"], specs["ln1"] = norm_init
+        norm_init2, _ = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        params["ln2"], specs["ln2"] = norm_init2
+        if kind == "attn":
+            params["mixer"], specs["mixer"] = attention.init(
+                ks[0], self.attn_cfg, dtype)
+        elif kind == "ssm":
+            params["mixer"], specs["mixer"] = ssm.init(ks[0], self.ssm_dims,
+                                                       dtype)
+        else:
+            params["mixer"], specs["mixer"] = rglru.init(
+                ks[0], cfg.d_model, self.rglru_width, cfg.rglru, dtype)
+        if kind == "ssm":
+            params.pop("ln2")
+            specs.pop("ln2")          # mamba blocks: single norm per layer
+        elif has_moe:
+            params["ffn"], specs["ffn"] = moe.init(
+                ks[1], cfg.d_model, cfg.moe, cfg.mlp_type, dtype)
+        else:
+            params["ffn"], specs["ffn"] = layers.mlp_init(
+                ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+        return params, specs
+
+    def init(self, key) -> Tuple[Dict, Dict]:
+        cfg = self.cfg
+        dtype = cfg.param_dtype()
+        keys = jax.random.split(key, cfg.n_layers + 3)
+        params: Dict[str, Any] = {}
+        specs: Dict[str, Any] = {}
+        params["embed"], specs["embed"] = layers.embedding_init(
+            keys[-1], cfg.padded_vocab, cfg.d_model, dtype,
+            tied=cfg.tie_embeddings)
+        if not cfg.tie_embeddings:
+            params["unembed"], specs["unembed"] = layers.unembed_init(
+                keys[-2], cfg.padded_vocab, cfg.d_model, dtype)
+        norm_init, _ = layers.make_norm(cfg.norm_type, cfg.d_model, dtype)
+        params["final_ln"], specs["final_ln"] = norm_init
+
+        prefix_p, prefix_s = [], []
+        for i in range(self.n_prefix):
+            p, s = self._init_layer(keys[i], i)
+            prefix_p.append(p)
+            prefix_s.append(s)
+        params["prefix"], specs["prefix"] = prefix_p, prefix_s
+
+        if self.scan_body:
+            body_keys = jnp.stack(keys[self.n_prefix:cfg.n_layers])
+            stacked = jax.vmap(
+                lambda k: self._init_layer(k, self.n_prefix)[0])(body_keys)
+            _, s = self._init_layer(keys[self.n_prefix], self.n_prefix)
+            params["body"] = stacked
+            specs["body"] = jax.tree.map(
+                lambda spec: P(*((None,) + tuple(spec))), s,
+                is_leaf=lambda x: isinstance(x, P))
+        else:
+            params["body"], specs["body"] = {}, {}
+        return params, specs
+
+    # ------------------------------------------------------------- forwards
+    def _layer_fwd(self, lp, x, i: int, positions, aux):
+        cfg = self.cfg
+        kind, has_moe = _layer_signature(cfg, i)
+        norm = layers.rmsnorm if cfg.norm_type == "rmsnorm" else layers.layernorm
+        pol = self.policy
+        h = norm(lp["ln1"], x)
+        if pol is not None:
+            h = pol.sp_gather(h)           # SP: gather seq once per block
+        if kind == "attn":
+            mix, _ = attention.apply(lp["mixer"], self.attn_cfg, h, positions,
+                                     policy=pol)
+        elif kind == "ssm":
+            mix, _ = ssm.apply(lp["mixer"], h, self.ssm_dims, policy=pol)
+        else:
+            mix, _ = rglru.apply(lp["mixer"], h, self.rglru_width, cfg.rglru,
+                                 policy=pol)
+        if pol is not None:
+            mix = pol.sp_scatter(mix)      # SP: TP partial-sum -> RS
+        x = x + mix
+        if kind != "ssm":
+            h2 = norm(lp["ln2"], x)
+            if pol is not None:
+                h2 = pol.sp_gather(h2)
+            if has_moe:
+                f, moe_aux = moe.apply(lp["ffn"], h2, cfg.moe, cfg.mlp_type,
+                                       pol)
+                aux = {k: aux.get(k, 0.0) + v for k, v in moe_aux.items()}
+            else:
+                f = layers.mlp_apply(lp["ffn"], h2, cfg.mlp_type)
+            if pol is not None:
+                f = pol.sp_scatter(f)
+            x = x + f
+        if pol is not None:
+            x = pol.shard_activations(x)
+        return x, aux
+
+    def hidden_states(self, params, tokens, positions=None,
+                      vision_embeds=None):
+        """Token ids -> final hidden states (B, S, D)."""
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens, cfg.emb_scale, cfg.d_model)
+        if vision_embeds is not None and cfg.vision_prefix:
+            sv = cfg.vision_prefix
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, sv:]],
+                                axis=1)
+        if positions is None:
+            positions = self._default_positions(tokens)
+        if self.policy is not None:
+            x = self.policy.shard_activations(x)
+
+        aux: Dict[str, jnp.ndarray] = {}
+        for i, lp in enumerate(params["prefix"]):
+            fwd = functools.partial(self._layer_fwd, i=i, positions=positions)
+            if self.remat:
+                fwd = jax.checkpoint(
+                    fwd, policy=jax.checkpoint_policies.nothing_saveable)
+            x, aux = fwd(lp, x, aux=aux)
+
+        if self.scan_body:
+            i0 = self.n_prefix
+
+            def body(carry, lp):
+                xc, auxc = carry
+                xn, auxn = self._layer_fwd(lp, xc, i=i0, positions=positions,
+                                           aux=auxc)
+                return (xn, auxn), None
+
+            if self.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            aux0 = dict(aux)
+            if self.cfg.moe is not None:
+                aux0.setdefault("moe_lb_loss", jnp.zeros((), jnp.float32))
+                aux0.setdefault("moe_z_loss", jnp.zeros((), jnp.float32))
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), params["body"])
+
+        norm = layers.rmsnorm if cfg.norm_type == "rmsnorm" else layers.layernorm
+        x = norm(params["final_ln"], x)
+        return x, aux
+
+    def logits(self, params, hidden):
+        cfg = self.cfg
+        return layers.logits_from_hidden(
+            hidden, params["embed"], params.get("unembed"),
+            cfg.tie_embeddings, cfg.logits_softcap,
+            true_vocab=cfg.vocab_size)
+
+    def _default_positions(self, tokens):
+        b, s = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if self.cfg.rope_type == "mrope":
+            return jnp.broadcast_to(pos, (3, b, s))
+        return pos
+
+    # ------------------------------------------------------------- training
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        """batch: {tokens, labels, (positions), (vision_embeds)}; labels are
+        next-token ids with -100 = masked."""
+        hidden, aux = self.hidden_states(
+            params, batch["tokens"], batch.get("positions"),
+            batch.get("vision_embeds"))
+        logits = self.logits(params, hidden)
+        ce = layers.cross_entropy_loss(logits, batch["labels"], self.policy)
+        total = ce
+        if self.cfg.moe is not None:
+            total = total + 0.01 * aux.get("moe_lb_loss", 0.0) \
+                + 1e-3 * aux.get("moe_z_loss", 0.0)
+        aux = dict(aux)
+        aux["ce_loss"] = ce
+        return total, aux
+
+    # ------------------------------------------------------ prefill / decode
+    def _init_layer_state(self, i: int, batch: int, max_len: int):
+        kind, _ = _layer_signature(self.cfg, i)
+        dtype = self.cfg.param_dtype()
+        if kind == "attn":
+            return attention.init_cache(self.attn_cfg, batch, max_len, dtype)
+        if kind == "ssm":
+            return ssm.init_state(self.ssm_dims, batch, dtype)
+        return rglru.init_state(self.rglru_width, self.cfg.rglru, batch, dtype)
+
+    def init_state(self, batch: int, max_len: int):
+        prefix = [self._init_layer_state(i, batch, max_len)
+                  for i in range(self.n_prefix)]
+        body = None
+        if self.scan_body:
+            one = self._init_layer_state(self.n_prefix, batch, max_len)
+            body = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (self.n_body,) + a.shape),
+                one)
+        return {"prefix": prefix, "body": body,
+                "t": jnp.zeros((), jnp.int32)}
+
+    def _layer_decode(self, lp, x, state, i: int, t):
+        kind, has_moe = _layer_signature(self.cfg, i)
+        cfg = self.cfg
+        norm = layers.rmsnorm if cfg.norm_type == "rmsnorm" else layers.layernorm
+        h = norm(lp["ln1"], x)
+        if kind == "attn":
+            mix, new_state = attention.decode_step(
+                lp["mixer"], self.attn_cfg, h, state, t, policy=self.policy)
+        elif kind == "ssm":
+            mix, new_state = ssm.decode_step(lp["mixer"], h, self.ssm_dims,
+                                             state)
+        else:
+            mix, new_state = rglru.decode_step(lp["mixer"], h,
+                                               self.rglru_width, cfg.rglru,
+                                               state)
+        x = x + mix
+        if kind != "ssm":
+            h2 = norm(lp["ln2"], x)
+            if has_moe:
+                f, _ = moe.apply(lp["ffn"], h2, cfg.moe, cfg.mlp_type,
+                                 self.policy)
+            else:
+                f = layers.mlp_apply(lp["ffn"], h2, cfg.mlp_type)
+            x = x + f
+        return x, new_state
+
+    def decode_step(self, params, token, state):
+        """One decode step. token: (B, 1) int32. Returns (logits, state)."""
+        cfg = self.cfg
+        t = state["t"]
+        x = layers.embed(params["embed"], token, cfg.emb_scale, cfg.d_model)
+        new_prefix = []
+        for i, (lp, st) in enumerate(zip(params["prefix"], state["prefix"])):
+            x, ns = self._layer_decode(lp, x, st, i, t)
+            new_prefix.append(ns)
+        new_body = state["body"]
+        if self.scan_body:
+            i0 = self.n_prefix
+
+            def body(carry, lp_st):
+                lp, st = lp_st
+                xn, ns = self._layer_decode(lp, carry, st, i0, t)
+                return xn, ns
+
+            x, new_body = jax.lax.scan(body, x, (params["body"],
+                                                 state["body"]))
+        norm = layers.rmsnorm if cfg.norm_type == "rmsnorm" else layers.layernorm
+        hidden = norm(params["final_ln"], x)
+        logits = self.logits(params, hidden)
+        new_state = {"prefix": new_prefix, "body": new_body, "t": t + 1}
+        return logits[:, 0], new_state
+
+    def prefill(self, params, tokens, max_len: int, positions=None,
+                vision_embeds=None):
+        """Run the full prompt, build decode state, return last logits.
+
+        Attention layers re-run their projections to fill the cache at the
+        right layout; recurrent layers get their final states from the
+        sequence pass.
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = layers.embed(params["embed"], tokens, cfg.emb_scale, cfg.d_model)
+        if vision_embeds is not None and cfg.vision_prefix:
+            sv = cfg.vision_prefix
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, sv:]],
+                                axis=1)
+        if positions is None:
+            positions = self._default_positions(tokens)
+        if self.policy is not None:
+            x = self.policy.shard_activations(x)
+        norm = layers.rmsnorm if cfg.norm_type == "rmsnorm" else layers.layernorm
+
+        def layer_prefill(lp, x, i):
+            kind, has_moe = _layer_signature(cfg, i)
+            h = norm(lp["ln1"], x)
+            if kind == "attn":
+                mix, kv = attention.apply(lp["mixer"], self.attn_cfg, h,
+                                          positions, policy=self.policy,
+                                          use_flash=cfg.flash_prefill)
+                st = self._pad_cache(kv, max_len)
+            elif kind == "ssm":
+                mix, st = ssm.apply(lp["mixer"], h, self.ssm_dims,
+                                    policy=self.policy)
+            else:
+                mix, st = rglru.apply(lp["mixer"], h, self.rglru_width,
+                                      cfg.rglru, policy=self.policy)
+            x = x + mix
+            if kind != "ssm":
+                h2 = norm(lp["ln2"], x)
+                if has_moe:
+                    f, _ = moe.apply(lp["ffn"], h2, cfg.moe, cfg.mlp_type,
+                                     self.policy)
+                else:
+                    f = layers.mlp_apply(lp["ffn"], h2, cfg.mlp_type)
+                x = x + f
+            if self.policy is not None:
+                x = self.policy.shard_activations(x)
+            return x, st
+
+        states_prefix = []
+        for i, lp in enumerate(params["prefix"]):
+            x, st = layer_prefill(lp, x, i)
+            states_prefix.append(st)
+        body_states = None
+        if self.scan_body:
+            i0 = self.n_prefix
+
+            def body(carry, lp):
+                xn, st = layer_prefill(lp, carry, i0)
+                return xn, st
+
+            x, body_states = jax.lax.scan(body, x, params["body"])
+        hidden = norm(params["final_ln"], x)
+        logits = self.logits(params, hidden[:, -1:, :])
+        state = {"prefix": states_prefix, "body": body_states,
+                 "t": jnp.full((), s, jnp.int32)}
+        return logits[:, 0], state
+
+    def _pad_cache(self, kv: attention.KVCache, max_len: int):
+        s = kv.k.shape[1]
+        cap = min(max_len, self.attn_cfg.window) if self.attn_cfg.window \
+            else max_len
+        if s == cap:
+            return kv
+        if s > cap:
+            # windowed layer: keep the last `cap` positions, rolled so that
+            # stored position p sits at ring slot p % cap (decode layout)
+            k = jnp.roll(kv.k[:, -cap:], (s - cap) % cap, axis=1)
+            v = jnp.roll(kv.v[:, -cap:], (s - cap) % cap, axis=1)
+            return attention.KVCache(k=k, v=v)
+        pad = [(0, 0), (0, cap - s), (0, 0), (0, 0)]
+        return attention.KVCache(k=jnp.pad(kv.k, pad), v=jnp.pad(kv.v, pad))

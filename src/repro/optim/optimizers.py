@@ -1,0 +1,186 @@
+"""Sharded optimizers: AdamW and Adafactor, mixed-precision, ZeRO-style.
+
+Model parameters live in bf16; the optimizer state carries the fp32 master
+copy plus moments.  Every state tensor inherits the parameter's
+PartitionSpec (``state_specs``), so under the 2-D mesh the optimizer state is
+fully sharded across data x model — ZeRO-3-equivalent memory scaling.
+
+Adafactor (factored second moments, no first moment) is the default for the
+340B-class configs where AdamW's 12 bytes/param does not fit a v5e pod
+(napkin math in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class Schedule(NamedTuple):
+    fn: Callable[[jnp.ndarray], jnp.ndarray]
+
+    def __call__(self, step):
+        return self.fn(step)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return Schedule(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # (param specs tree, abstract params tree) -> state specs tree
+    state_specs: Callable[[Any, Any], Any]
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(schedule: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        m = jax.tree.map(jnp.zeros_like, master)
+        v = jax.tree.map(jnp.zeros_like, master)
+        return {"master": master, "m": m, "v": v}
+
+    def update(grads, state, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1 - b1 ** t
+        c2 = 1 - b2 ** t
+
+        def upd(g, mst, m, v):
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / c1
+            vhat = v2 / c2
+            new = mst - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                              + weight_decay * mst)
+            return new, m2, v2
+
+        out = jax.tree.map(upd, grads, state["master"], state["m"],
+                           state["v"])
+        master = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return ({"master": master, "m": m, "v": v},
+                {"grad_norm": gnorm, "lr": lr})
+
+    def state_specs(param_specs, abstract_params=None):
+        return {"master": param_specs, "m": param_specs, "v": param_specs}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+
+def adafactor(schedule: Schedule, eps: float = 1e-30,
+              clip_norm: float = 1.0, weight_decay: float = 0.0,
+              min_dim_factored: int = 128) -> Optimizer:
+    def _factored(shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= min_dim_factored
+                and shape[-2] >= min_dim_factored)
+
+    def init(params):
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+        def moments(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"master": master,
+                "v": jax.tree.map(moments, master)}
+
+    def update(grads, state, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - t ** -0.8
+
+        def upd(g, mst, mom):
+            g2 = g * g + eps
+            if "vr" in mom:
+                vr = beta2 * mom["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * mom["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                pre = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(pre + eps)
+                new_mom = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * mom["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_mom = {"v": v}
+            # relative step clipping (RMS(u) <= 1)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u)
+            new = mst - lr * (u + weight_decay * mst)
+            return new, new_mom
+
+        flat_p, treedef = jax.tree.flatten(state["master"])
+        flat_g = treedef.flatten_up_to(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        new_p, new_v = [], []
+        for g, p, v in zip(flat_g, flat_p, flat_v):
+            np_, nv = upd(g, p, v)
+            new_p.append(np_)
+            new_v.append(nv)
+        return ({"master": jax.tree.unflatten(treedef, new_p),
+                 "v": jax.tree.unflatten(treedef, new_v)},
+                {"grad_norm": gnorm, "lr": lr})
+
+    def state_specs(param_specs, abstract_params):
+        def moments_spec(spec, p):
+            if _factored(p.shape):
+                axes = tuple(spec)
+                # pad spec to rank (specs may be shorter than the shape)
+                axes = axes + (None,) * (len(p.shape) - len(axes))
+                return {"vr": P(*axes[:-1]),
+                        "vc": P(*(axes[:-2] + axes[-1:]))}
+            return {"v": spec}
+
+        return {"master": param_specs,
+                "v": jax.tree.map(moments_spec, param_specs, abstract_params,
+                                  is_leaf=lambda x: isinstance(x, P))}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def cast_like_params(master, params):
+    return jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)

@@ -1,0 +1,1 @@
+from repro.sharding.partitioning import NO_SHARDING, ShardingPolicy

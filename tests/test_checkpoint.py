@@ -1,0 +1,62 @@
+"""Checkpointer: atomic async save, bf16 roundtrip, retention, resume."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16), jnp.bfloat16),
+                   "b": jnp.arange(16, dtype=jnp.float32)},
+        "opt": {"m": jnp.ones((8, 16)), "step": jnp.asarray(7)},
+    }
+
+
+def test_roundtrip_including_bf16(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(10, tree, extra={"next_step": 10}, blocking=True)
+    restored, extra = ck.restore(10, tree)
+    assert extra["next_step"] == 10
+    for (p1, a), (p2, b) in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree_util.tree_flatten_with_path(restored)[0]):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save(s, t, blocking=True)
+    assert ck.latest_step() == 4
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1] == "step_00000004"
+
+
+def test_async_save_overlaps_then_waits(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(5, t)            # non-blocking
+    ck.wait()
+    assert ck.latest_step() == 5
+
+
+def test_restore_with_shardings(tmp_path):
+    """Elastic path: restore under explicit shardings on the current mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(1, t, blocking=True)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    restored, _ = ck.restore(1, t, sh)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["b"]), np.asarray(t["params"]["b"]))

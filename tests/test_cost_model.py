@@ -1,0 +1,43 @@
+"""Every quantitative claim in the paper, checked against the model."""
+import pytest
+
+from repro.core import cost_model, network, sorter
+
+
+def test_all_paper_claims():
+    claims = cost_model.validate_claims()
+    failures = [(n, m, p) for (n, m, p, tol) in claims.rows
+                if abs(m - p) > tol]
+    assert not failures, failures
+
+
+def test_sort_cycles_scale_with_n():
+    prev = 0
+    for n in (2, 4, 8, 16, 32):
+        c = cost_model.sort_cycles(n)
+        assert c > prev
+        prev = c
+
+
+def test_simulator_agrees_with_cost_model():
+    import numpy as np
+    v = np.random.default_rng(0).integers(0, 16, size=(1, 8))
+    res = sorter.sort_in_memory(v, width=4)
+    assert res.cycles == cost_model.sort_cycles(8, 4)
+    assert res.compute_cycles == 6 * 28
+    assert res.movement_cycles == 24
+
+
+def test_memsort_comparison_ratios():
+    assert cost_model.memsort_cycles(8) / cost_model.sort_cycles(8) \
+        == pytest.approx(1.45)
+    assert cost_model.memsort_latency_ns(8) / cost_model.sort_latency_ns(8) \
+        == pytest.approx(3.4)
+    assert cost_model.off_memory_latency_ns(8) \
+        / cost_model.sort_latency_ns(8) == pytest.approx(5.0)
+
+
+def test_table1_single_stage_totals():
+    totals = cost_model.stage_op_totals(8)
+    assert totals == {"NOR": 84, "NOT": 48, "AND": 18, "COPY": 42}
+    assert sum(totals.values()) == 192

@@ -1,0 +1,128 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(1, 8), (4, 64), (3, 100), (2, 5, 128), (8, 256)]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("descending", [False, True])
+def test_bitonic_sort_sweep(shape, dtype, descending):
+    rng = np.random.default_rng(hash((shape, str(dtype), descending)) % 2**31)
+    x = jnp.asarray(rng.standard_normal(shape) * 50, dtype=dtype)
+    out = ops.bitonic_sort(x, -1, descending)
+    exp = ref.bitonic_sort(x, descending)
+    np.testing.assert_allclose(np.array(out, np.float64),
+                               np.array(exp, np.float64))
+
+
+@pytest.mark.parametrize("n,k", [(16, 4), (64, 8), (100, 10), (2048, 16),
+                                 (5000, 32), (51865, 50)])
+def test_bitonic_topk_sweep(n, k):
+    rng = np.random.default_rng(n * 31 + k)
+    x = jnp.asarray(rng.standard_normal((2, n)), dtype=jnp.float32)
+    v, i = ops.bitonic_topk(x, k)
+    vr, _ = ref.bitonic_topk(x, k)
+    np.testing.assert_allclose(np.array(v), np.array(vr))
+    np.testing.assert_allclose(
+        np.take_along_axis(np.array(x), np.array(i), -1), np.array(vr))
+
+
+@pytest.mark.parametrize("width", [2, 4, 8])
+def test_bitserial_cas_sweep(width):
+    rng = np.random.default_rng(width)
+    a = rng.integers(0, 2**width, 700)
+    b = rng.integers(0, 2**width, 700)
+    lo, hi = ops.bitserial_cas(jnp.asarray(a), jnp.asarray(b), width=width)
+    elo, ehi = ref.bitserial_cas(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.array(lo), np.array(elo))
+    np.testing.assert_array_equal(np.array(hi), np.array(ehi))
+
+
+def test_sort_vjp_matches_reference():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 32)),
+                    dtype=jnp.float32)
+    g1 = jax.grad(lambda v: ops.bitonic_sort(v, -1, False)[..., -4:].sum())(x)
+    # reference gradient: indicator of top-4 positions
+    exp = np.zeros(x.shape, np.float32)
+    xi = np.array(x)
+    for r in range(2):
+        exp[r, np.argsort(xi[r])[-4:]] = 1.0
+    np.testing.assert_allclose(np.array(g1), exp)
+
+
+def test_topk_vjp_scatter():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((3, 40)),
+                    dtype=jnp.float32)
+    gv = jax.grad(lambda v: ops.bitonic_topk(v, 5)[0].sum())(x)
+    gr = jax.grad(lambda v: jax.lax.top_k(v, 5)[0].sum())(x)
+    np.testing.assert_allclose(np.array(gv), np.array(gr))
+
+
+def test_kv_sort_stability_on_ties():
+    """Equal keys: payload order within the CAS keeps the a-side first."""
+    from repro.kernels.bitonic_sort import sort_kv_blocks
+    keys = jnp.zeros((1, 8), jnp.float32)
+    vals = jnp.arange(8, dtype=jnp.int32)[None]
+    sk, sv = sort_kv_blocks(keys, vals, interpret=True)
+    assert sorted(np.array(sv)[0].tolist()) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _ref_attn(q, k, v, causal, window=0):
+    b, s, n, h = q.shape
+    t, r = k.shape[1], k.shape[2]
+    g = n // r
+    q5 = q.reshape(b, s, r, g, h)
+    lg = jnp.einsum("bsrgh,btrh->brgst", q5, k) / np.sqrt(h)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = jnp.ones((s, t), bool)
+    if causal:
+        m = m & (kpos <= qpos)
+    if window:
+        m = m & (kpos > qpos - window)
+    lg = jnp.where(m[None, None, None], lg, -1e30)
+    p = jax.nn.softmax(lg, -1)
+    o = jnp.einsum("brgst,btrh->bsrgh", p, v)
+    return o.reshape(b, s, n, h)
+
+
+@pytest.mark.parametrize("b,s,n,r,h,causal,win", [
+    (2, 128, 4, 2, 32, True, 0),
+    (1, 100, 6, 6, 16, True, 0),     # MHA, ragged length
+    (2, 64, 4, 1, 32, True, 24),     # MQA + sliding window
+    (1, 96, 8, 2, 16, False, 0),     # non-causal
+])
+def test_flash_attention_vs_reference(b, s, n, r, h, causal, win):
+    from repro.kernels.flash_attention import flash_attention
+    rng = np.random.default_rng(s * 7 + n)
+    q = jnp.asarray(rng.standard_normal((b, s, n, h)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, r, h)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, r, h)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=win,
+                          q_block=32, k_block=32)
+    exp = _ref_attn(q, k, v, causal, win)
+    np.testing.assert_allclose(np.array(out), np.array(exp), atol=3e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((1, 64, 4, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.bfloat16)
+    out = flash_attention(q, k, v, q_block=32, k_block=32)
+    exp = _ref_attn(q.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), True)
+    np.testing.assert_allclose(np.array(out, np.float32), np.array(exp),
+                               atol=3e-2)

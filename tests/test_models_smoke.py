@@ -1,0 +1,96 @@
+"""REQUIRED per-arch smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build
+
+B, S = 2, 16
+
+
+def _batch(cfg, key=0):
+    rng = np.random.default_rng(key)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              dtype=jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                              dtype=jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.enc_seq, cfg.d_model)) * 0.1,
+            dtype=jnp.float32)
+    if cfg.vision_prefix:
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_prefix, cfg.d_model)) * 0.1,
+            dtype=jnp.bfloat16)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build(cfg, policy=None, remat=False)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: not isinstance(x, (dict, list)))
+    batch = _batch(cfg)
+
+    loss, aux = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.all(jnp.isfinite(g))), (arch, path)
+
+    if cfg.family != "encdec":
+        hid, _ = model.impl.hidden_states(params, batch["tokens"],
+                                          batch.get("positions"),
+                                          batch.get("vision_embeds"))
+        assert hid.shape == (B, S, cfg.d_model)
+        logits = model.impl.logits(params, hid)
+        assert logits.shape == (B, S, cfg.padded_vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_configs_have_published_dims(arch):
+    cfg = get_config(arch)
+    published = {
+        "whisper_tiny": (4, 384, 6, 6, 1536, 51865),
+        "deepseek_67b": (95, 8192, 64, 8, 22016, 102400),
+        "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+        "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+        "nemotron_4_340b": (96, 18432, 96, 8, 73728, 256000),
+        "moonshot_v1_16b": (48, 2048, 16, 16, 11264, 163840),
+        "dbrx_132b": (40, 6144, 48, 8, 10752, 100352),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen2_vl_72b": (80, 8192, 64, 8, 29568, 152064),
+        "mamba2_13b": (48, 2048, 1, 1, 0, 50280),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == published
+
+
+def test_moe_expert_configs():
+    m = get_config("moonshot_v1_16b").moe
+    assert (m.n_experts, m.top_k, m.d_ff_expert) == (64, 6, 1408)
+    d = get_config("dbrx_132b").moe
+    assert (d.n_experts, d.top_k, d.d_ff_expert) == (16, 4, 10752)
+
+
+def test_param_counts_in_published_ballpark():
+    # active params should land within ~20% of the published totals
+    expect = {"deepseek_67b": 67e9, "nemotron_4_340b": 340e9,
+              "dbrx_132b": 132e9, "qwen2_vl_72b": 72e9,
+              "mamba2_13b": 1.3e9, "gemma_2b": 2.5e9}
+    for arch, target in expect.items():
+        n = get_config(arch).n_params()
+        assert 0.75 * target < n < 1.35 * target, (arch, n, target)

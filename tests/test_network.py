@@ -1,0 +1,47 @@
+"""Property tests for the bitonic network + partition planning (Eq. 1-4)."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import network as nw
+
+
+@given(st.sampled_from([2, 4, 8, 16, 32, 64, 128]))
+def test_closed_forms_match_generated_network(n):
+    stages = nw.bitonic_stages(n)
+    assert len(stages) == nw.n_stages(n)
+    assert sum(len(s) for s in stages) == nw.n_cas_blocks(n)
+    for stage in stages:
+        touched = [i for pair in stage for i in pair[:2]]
+        assert sorted(touched) == list(range(n))  # each element exactly once
+
+
+@given(st.lists(st.integers(0, 255), min_size=2, max_size=64))
+@settings(max_examples=200)
+def test_network_sorts_any_input(values):
+    n = 1
+    while n < len(values):
+        n *= 2
+    padded = values + [255] * (n - len(values))
+    out = nw.apply_network(padded, nw.bitonic_stages(n))
+    assert out == sorted(padded)
+
+
+def test_paper_n8_constants():
+    assert nw.n_cas_blocks(8) == 24
+    assert nw.n_stages(8) == 6
+    assert nw.n_temp_rows(8) == 2
+    assert nw.movement_cycles(8) == 6
+    plan = nw.plan_partitions(8)
+    assert plan.moving_transitions == 4          # 4 x 6 = 24 extra cycles
+    assert plan.extra_cycles == 24
+    assert plan.n_partitions == 4
+
+
+@given(st.sampled_from([4, 8, 16, 32, 64]))
+def test_partition_plan_is_consistent(n):
+    plan = nw.plan_partitions(n)
+    assert 0 <= plan.moving_transitions < nw.n_stages(n)
+    # every stage's residency maps each element to a partition < n/2
+    for residency in plan.residency:
+        assert set(residency) == set(range(n))
+        assert all(0 <= p < n // 2 for p in residency.values())

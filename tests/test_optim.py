@@ -1,0 +1,89 @@
+"""Optimizers + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers as opt_lib
+from repro.optim.grad_compress import CompressorConfig, make_compressor
+
+
+def _rosenbrockish(params):
+    x = params["x"]
+    return jnp.sum((x - 1.5) ** 2) + jnp.sum(jnp.sin(x) ** 2) * 0.1
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizers_descend(name):
+    sched = opt_lib.cosine_schedule(1e-1, warmup=5, total=100)
+    opt = (opt_lib.adamw(sched, weight_decay=0.0) if name == "adamw"
+           else opt_lib.adafactor(sched))
+    params = {"x": jnp.linspace(-2, 2, 256).reshape(2, 128)}
+    state = opt.init(params)
+    l0 = float(_rosenbrockish(params))
+    for step in range(60):
+        g = jax.grad(_rosenbrockish)(params)
+        state, info = opt.update(g, state, jnp.asarray(step))
+        params = opt_lib.cast_like_params(state["master"], params)
+    assert float(_rosenbrockish(params)) < 0.5 * l0
+
+
+def test_adafactor_memory_is_sublinear():
+    params = {"w": jnp.zeros((512, 256))}
+    sched = opt_lib.cosine_schedule(1e-2, 1, 10)
+    state = opt_lib.adafactor(sched).init(params)
+    v = state["v"]["w"]
+    assert set(v) == {"vr", "vc"}
+    assert v["vr"].shape == (512,) and v["vc"].shape == (256,)
+
+
+def test_adafactor_state_specs_follow_factoring():
+    from jax.sharding import PartitionSpec as P
+    sched = opt_lib.cosine_schedule(1e-2, 1, 10)
+    opt = opt_lib.adafactor(sched)
+    specs = {"w": P("data", "model"), "b": P(None)}
+    abstract = {"w": jax.ShapeDtypeStruct((512, 256), jnp.float32),
+                "b": jax.ShapeDtypeStruct((256,), jnp.float32)}
+    ss = opt.state_specs(specs, abstract)
+    assert ss["v"]["w"]["vr"] == P("data")
+    assert ss["v"]["w"]["vc"] == P("model")
+    assert ss["v"]["b"] == {"v": P(None)}
+
+
+def test_grad_clip_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = opt_lib.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0))
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+@pytest.mark.parametrize("codec", ["int8", "topk"])
+def test_error_feedback_compression_converges(codec):
+    """Error feedback: the ACCUMULATED compressed signal tracks the
+    accumulated true gradient (bias does not build up)."""
+    cfg = CompressorConfig(codec=codec, topk_frac=0.25)
+    init_state, apply = make_compressor(cfg)
+    params = {"w": jnp.zeros((64,))}
+    state = init_state(params)
+    rng = np.random.default_rng(0)
+    g_true_sum = np.zeros(64)
+    g_sent_sum = np.zeros(64)
+    base = rng.standard_normal(64)
+    for _ in range(50):
+        g = {"w": jnp.asarray(base + 0.1 * rng.standard_normal(64),
+                              dtype=jnp.float32)}
+        g_true_sum += np.array(g["w"])
+        sent, state = apply(g, state)
+        g_sent_sum += np.array(sent["w"])
+    # residual error is bounded by one step's worth, not 50 steps' worth
+    err = np.abs(g_sent_sum - g_true_sum).max()
+    assert err < 2.0 * np.abs(base).max()
+
+
+def test_int8_roundtrip_quantization_error():
+    from repro.optim.grad_compress import _int8_roundtrip
+    g = jnp.asarray(np.random.default_rng(1).standard_normal(1000),
+                    dtype=jnp.float32)
+    rt = _int8_roundtrip(g)
+    scale = float(jnp.max(jnp.abs(g))) / 127
+    assert float(jnp.max(jnp.abs(rt - g))) <= scale * 0.5 + 1e-6

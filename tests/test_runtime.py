@@ -1,0 +1,50 @@
+"""Fault-tolerance runtime units."""
+import os
+import signal
+import time
+
+import pytest
+
+from repro.runtime.fault_tolerance import (ElasticPlan, PreemptionHandler,
+                                           StepWatchdog)
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(alpha=0.5, threshold=1.5, warmup_steps=2)
+    for step in range(8):
+        wd.start()
+        time.sleep(0.02 if step != 6 else 0.12)
+        wd.stop(step)
+    assert any(s == 6 for (s, _, _) in wd.flagged)
+    assert all(s != 3 for (s, _, _) in wd.flagged)
+
+
+def test_preemption_handler_catches_sigterm():
+    h = PreemptionHandler().install()
+    assert not h.preempted
+    os.kill(os.getpid(), signal.SIGTERM)
+    time.sleep(0.01)
+    assert h.preempted
+    h.uninstall()
+
+
+def test_elastic_plan_keeps_model_axis():
+    # lose 37 of 512 devices -> largest pow2 data degree with TP=16 intact
+    plan = ElasticPlan.plan(512 - 37, model_parallel=16, global_batch=256)
+    assert plan.mesh_shape == (16, 16)
+    assert plan.usable_devices == 256
+    assert plan.dropped_devices == 475 - 256
+    assert plan.global_batch == 256          # trajectory unchanged
+    assert plan.microbatch_for(512, 8) == 16  # 2x grad accumulation
+
+
+def test_elastic_plan_multi_pod():
+    plan = ElasticPlan.plan(512, model_parallel=16, global_batch=256,
+                            want_pods=2)
+    assert plan.mesh_shape == (2, 16, 16)
+    assert plan.axis_names == ("pod", "data", "model")
+
+
+def test_elastic_plan_rejects_too_few():
+    with pytest.raises(ValueError):
+        ElasticPlan.plan(8, model_parallel=16, global_batch=64)
