@@ -1,0 +1,104 @@
+"""Engine benchmark: merge engine vs whole-array pallas-bitonic vs XLA.
+
+Sweeps n from one-VMEM-tile scale to millions of elements and, for each of
+
+  * ``xla``            jnp.sort (the off-memory reference),
+  * ``pallas-bitonic`` the whole-array in-VMEM network (O(n log^2 n) CAS),
+  * ``merge-engine``   tiled runs + merge-path merge tree (O(n log n)),
+  * ``auto``           whatever the planner dispatches to,
+
+records TWO latencies:
+
+  ``cold_ms``   first call: trace + compile + run.  The honest cost of a
+                one-shot sort at a new size — the analytics workload the
+                engine targets.  The whole-array network is size-specialised
+                (every n compiles its own O(log^2 n)-substage program, and
+                the build explodes with n), while the engine reuses
+                tile-sized programs across n.
+  ``warm_us``   steady-state per call after compilation.
+
+Emits ``name,us_per_call,derived`` rows like the other suites (``cold`` rows
+carry ms in the value column, labelled in the name).  The summary rows
+compare merge vs pallas-bitonic at the largest n on both metrics.
+
+  PYTHONPATH=src python -m benchmarks.bench_engine [--full] [--sizes 4096,...]
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_SIZES = (4096, 65536, 1 << 20)
+FULL_SIZES = (4096, 16384, 65536, 262144, 1 << 20, 1 << 22)
+
+
+def _time_cold_warm(make_fn, x, reps: int):
+    """(cold first-call seconds, warm mean seconds) for a fresh jit."""
+    f = jax.jit(make_fn)
+    t0 = time.perf_counter()
+    f(x).block_until_ready()
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f(x).block_until_ready()
+    return cold, (time.perf_counter() - t0) / reps
+
+
+def run(sizes=DEFAULT_SIZES):
+    from repro import engine
+    from repro.core import sort_api
+
+    rows = []
+    rng = np.random.default_rng(0)
+    summary = {}
+    backends = [
+        ("xla", lambda v: sort_api.sort(v, method="xla")),
+        ("pallas_bitonic", lambda v: sort_api.sort(v, method="pallas")),
+        ("merge", lambda v: engine.sort(v, method="merge")),
+        ("auto", lambda v: engine.sort(v, method="auto")),
+    ]
+    for n in sizes:
+        x = jnp.asarray(rng.standard_normal((1, n)), jnp.float32)
+        reps = 3 if n <= 65536 else 1
+        for name, fn in backends:
+            cold, warm = _time_cold_warm(fn, x, reps)
+            tag = (f"{n}:{engine.choose_method(n, 1)}" if name == "auto"
+                   else n)
+            rows.append((f"engine.{name}.cold_ms.n{n}",
+                         round(cold * 1e3, 1), tag))
+            rows.append((f"engine.{name}.warm_us.n{n}",
+                         round(warm * 1e6, 1), tag))
+            summary[(name, n)] = (cold, warm)
+
+    n_max = max(sizes)
+    mc, mw = summary[("merge", n_max)]
+    pc, pw = summary[("pallas_bitonic", n_max)]
+    rows.append((f"engine.merge_vs_pallas_cold_speedup.n{n_max}",
+                 0.0, round(pc / mc, 2)))
+    rows.append((f"engine.merge_vs_pallas_warm_speedup.n{n_max}",
+                 0.0, round(pw / mw, 2)))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="sweep up to 4M elements")
+    ap.add_argument("--sizes", default="",
+                    help="comma-separated n values (overrides presets)")
+    args = ap.parse_args()
+    if args.sizes:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+    else:
+        sizes = FULL_SIZES if args.full else DEFAULT_SIZES
+    print("name,us_per_call,derived")
+    for row in run(sizes):
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

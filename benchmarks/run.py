@@ -11,12 +11,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     args = ap.parse_args()
-    from benchmarks import bench_paper_tables, bench_sort_methods, \
-        bench_system
+    from benchmarks import bench_engine, bench_paper_tables, \
+        bench_sort_methods, bench_system
     suites = {
         "paper": bench_paper_tables.run,
         "sort": bench_sort_methods.run,
         "system": bench_system.run,
+        "engine": bench_engine.run,
     }
     print("name,us_per_call,derived")
     failures = 0

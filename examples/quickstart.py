@@ -1,6 +1,6 @@
 """Quickstart: the ADS-IMC sorting stack in five minutes.
 
-1. sort with every backend (xla / bitonic / pallas / faithful imc)
+1. sort with every backend (xla / bitonic / pallas / merge / auto / imc)
 2. validate the paper's headline numbers from the cost model
 3. run the cycle-accurate in-memory sort and inspect its accounting
 
@@ -12,10 +12,10 @@ import jax.numpy as jnp
 from repro.core import sort_api, cost_model
 from repro.core.sorter import sort_in_memory
 
-print("== 1. one API, four backends ==")
+print("== 1. one API, six backends ==")
 x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 100)),
                 dtype=jnp.float32)
-for method in ("xla", "bitonic", "pallas"):
+for method in ("xla", "bitonic", "pallas", "merge", "auto"):
     out = sort_api.sort(x, method=method)
     assert (np.diff(np.array(out), axis=-1) >= 0).all()
     print(f"  sort(method={method!r}): ok, first row head "
@@ -23,6 +23,13 @@ for method in ("xla", "bitonic", "pallas"):
 
 vals, idx = sort_api.topk(x, 5, method="pallas")
 print(f"  topk(5, pallas): values[0]={np.array(vals)[0].round(3)}")
+
+big = jnp.asarray(np.random.default_rng(2).standard_normal(1 << 20),
+                  dtype=jnp.float32)
+out = sort_api.sort(big, method="merge")
+assert (np.diff(np.array(out)) >= 0).all()
+print(f"  sort(n={big.shape[0]}, method='merge'): ok "
+      f"(out-of-core engine: tiled runs + merge-path tree)")
 
 print("\n== 2. the paper's numbers, reproduced ==")
 claims = cost_model.validate_claims()

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): the default-marker test suite.
+# Extra args are passed straight to pytest, e.g.  scripts/tier1.sh -m slow
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -104,6 +104,58 @@ def memory_bits(n: int = 8, width: int = 4) -> int:
     return sorter.array_geometry(n, width)["bits"]
 
 
+# ---- device-level cost model (engine auto-dispatch) --------------------------
+#
+# The paper's model prices one SRAM macro; the engine's planner needs the same
+# kind of closed form one level up: how long does each *device* backend take
+# to sort (batch, n)?  Asymptotics are fixed per backend; the per-element
+# constants are seeded with coarse defaults and can be overwritten by
+# ``repro.engine.planner.calibrate()``, which times single-tile probes on the
+# actual backend (the "measured per-tile constants").
+
+@dataclasses.dataclass
+class DeviceSortConstants:
+    """ns-per-element leading constants for each software backend."""
+    xla: float = 6.0             # comparison sort: c * n log2 n
+    bitonic: float = 1.2         # word-parallel jnp network: c * n log2^2 n
+    pallas: float = 0.25         # VMEM-resident network: c * n log2^2 n
+    merge_run: float = 6.0       # run generation: c * n log2 run_len
+    merge_level: float = 12.0    # one merge-path level: c * n
+    pallas_interpret_penalty: float = 300.0   # CPU interpret-mode multiplier
+
+
+def _log2(v: float) -> float:
+    return math.log2(max(2.0, v))
+
+
+def device_sort_cost_ns(method: str, n: int, batch: int = 1, *,
+                        run_len: int = 2048,
+                        consts: DeviceSortConstants = None,
+                        pallas_interpreted: bool = False) -> float:
+    """Estimated ns to sort ``batch`` rows of ``n`` with a software backend.
+
+    ``n`` is priced at its padded (power-of-two / tiled) size, matching what
+    each backend actually executes.
+    """
+    c = consts or DeviceSortConstants()
+    m = 1 << max(0, (n - 1).bit_length())
+    if method == "xla":
+        return c.xla * batch * n * _log2(n)
+    if method == "bitonic":
+        return c.bitonic * batch * m * _log2(m) ** 2
+    if method == "pallas":
+        pen = c.pallas_interpret_penalty if pallas_interpreted else 1.0
+        return pen * c.pallas * batch * m * _log2(m) ** 2
+    if method == "merge":
+        run_len = min(run_len, m)
+        tiles = 1 << max(0, (-(-n // run_len) - 1).bit_length())
+        padded = tiles * run_len
+        gen = c.merge_run * batch * padded * _log2(run_len)
+        levels = _log2(tiles) if tiles > 1 else 0.0
+        return gen + c.merge_level * batch * padded * levels
+    raise ValueError(f"no device cost model for method {method!r}")
+
+
 # ---- report helpers ----------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)

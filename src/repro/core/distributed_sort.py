@@ -29,6 +29,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import sort_api
 
+try:  # jax >= 0.5 exports shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def bitonic_merge_halves(lo_sorted: jnp.ndarray, hi_sorted: jnp.ndarray):
     """Merge two ascending arrays (each length m) and return the ascending
@@ -49,11 +54,18 @@ def bitonic_merge_halves(lo_sorted: jnp.ndarray, hi_sorted: jnp.ndarray):
 
 
 def _round_permutation(n_dev: int, even_round: bool):
-    """Partner index per device for one odd-even transposition round."""
+    """Partner index per device for one odd-even transposition round.
+
+    A device paired with itself idles that round: the last device on even
+    rounds when the count is odd, and the edge devices on odd rounds
+    (device 0 always; the last device when the count is even).
+    """
     perm = []
     for i in range(n_dev):
         if even_round:
             partner = i ^ 1
+            if partner >= n_dev:
+                partner = i  # odd device count: last device idles
         else:
             if i == 0 or (i == n_dev - 1 and n_dev % 2 == 0):
                 partner = i  # edge devices idle this round
@@ -69,6 +81,12 @@ def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
 
     Length must divide evenly by the axis size.  Returns the globally-sorted
     array with the same sharding.
+
+    ``local_method`` accepts every ``sort_api`` backend including ``"merge"``
+    and ``"auto"``: the mesh path composes with the out-of-core engine, whose
+    planner prices the *shard* size it sees inside the shard_map — so a
+    vocab-scale shard gets tiled run generation + merge tree while a small
+    one stays on a single-tile backend.
     """
     n_dev = mesh.shape[axis_name]
     if x.shape[-1] % n_dev:
@@ -90,7 +108,7 @@ def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
         return xs
 
     spec = P(axis_name)
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    fn = _shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=spec)
     return fn(x)
 
 

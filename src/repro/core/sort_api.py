@@ -1,6 +1,6 @@
 """Public sorting API — the paper's technique as a composable JAX feature.
 
-One entry point, four interchangeable backends:
+One entry point, six interchangeable backends:
 
   ``xla``      jnp.sort / jax.lax.top_k — the "off-memory" reference point.
   ``bitonic``  the paper's Batcher network executed word-parallel in pure
@@ -12,6 +12,12 @@ One entry point, four interchangeable backends:
   ``imc``      the faithful bit-serial simulation (core/sorter.py): the
                28-cycle gate program on the simulated 6T SRAM array.
                Small unsigned ints only; used for validation and benchmarks.
+  ``merge``    the hierarchical out-of-core engine (repro.engine): tiled run
+               generation + merge-path merge tree for arrays bigger than one
+               VMEM tile — O(n log n) work where the whole-array network
+               pays O(n log^2 n).
+  ``auto``     cost-model dispatch (repro.engine.planner): picks the
+               cheapest *valid* backend from (n, batch, dtype).
 
 Everything downstream (MoE routing, sampling, serving schedulers) calls
 through this module, so the paper's contribution is a first-class,
@@ -26,7 +32,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-METHODS = ("xla", "bitonic", "pallas", "imc")
+METHODS = ("xla", "bitonic", "pallas", "imc", "merge", "auto")
 
 
 def _next_pow2(n: int) -> int:
@@ -40,31 +46,23 @@ def _pad_value(dtype, descending: bool):
     return jnp.array(info.min if descending else info.max, dtype)
 
 
-def bitonic_stage_params(n: int):
-    """Static (partner, keep_min) index tables per stage for size-n network."""
-    stages = []
-    ix = jnp.arange(n)
-    k = 2
-    while k <= n:
-        j = k // 2
-        while j >= 1:
-            partner = ix ^ j
-            up = (ix & k) == 0
-            keep_min = (ix < partner) == up
-            stages.append((partner, keep_min))
-            j //= 2
-        k *= 2
-    return stages
-
-
 def bitonic_sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
                  values: Optional[jnp.ndarray] = None):
     """Word-parallel bitonic sort along ``axis`` (optionally carrying a
-    values array, sorted by the keys — used for argsort / routing)."""
+    values array, sorted by the keys — used for argsort / routing).
+
+    Runs the reshape-addressed network (kernels/bitonic_sort.py) rather than
+    a gather-per-substage formulation: long chains of 1-D gathers send XLA's
+    CPU pipeline into a pathological simplification loop (minutes-to-never
+    compiles for n as small as 256), while the (n/(2j), 2, j) reshape view
+    compiles in seconds and is exactly what the Pallas kernel executes.
+    """
+    from repro.kernels.bitonic_sort import _apply_network, _apply_network_kv
     axis = axis % x.ndim
     x = jnp.moveaxis(x, axis, -1)
     if values is not None:
         values = jnp.moveaxis(values, axis, -1)
+    lead = x.shape[:-1]
     n = x.shape[-1]
     m = _next_pow2(n)
     if m != n:
@@ -72,24 +70,14 @@ def bitonic_sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
         x = jnp.pad(x, pad, constant_values=_pad_value(x.dtype, descending))
         if values is not None:
             values = jnp.pad(values, pad)
-    for partner, keep_min in bitonic_stage_params(m):
-        px = jnp.take(x, partner, axis=-1)
-        swap_mask = keep_min ^ descending
-        lo = jnp.minimum(x, px)
-        hi = jnp.maximum(x, px)
-        newx = jnp.where(swap_mask, lo, hi)
-        if values is not None:
-            take_self = jnp.where(swap_mask, x <= px, x > px)
-            # tie-break: on equal keys keep self at the lower index side
-            take_self = jnp.where(x == px, True, take_self)
-            pv = jnp.take(values, partner, axis=-1)
-            values = jnp.where(take_self, values, pv)
-        x = newx
-    x = x[..., :n]
+    rows = x.reshape(-1, m)
     if values is not None:
-        values = values[..., :n]
-        return jnp.moveaxis(x, -1, axis), jnp.moveaxis(values, -1, axis)
-    return jnp.moveaxis(x, -1, axis)
+        sk, sv = _apply_network_kv(rows, values.reshape(-1, m), descending)
+        sk = sk.reshape(*lead, m)[..., :n]
+        sv = sv.reshape(*lead, m)[..., :n]
+        return jnp.moveaxis(sk, -1, axis), jnp.moveaxis(sv, -1, axis)
+    out = _apply_network(rows, descending).reshape(*lead, m)[..., :n]
+    return jnp.moveaxis(out, -1, axis)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
@@ -143,6 +131,9 @@ def sort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
     if method == "pallas":
         from repro.kernels import ops as kops
         return kops.bitonic_sort(x, axis=axis, descending=descending)
+    if method in ("merge", "auto"):
+        from repro import engine
+        return engine.sort(x, axis=axis, descending=descending, method=method)
     # method == "imc": faithful bit-serial simulation, unsigned ints only
     from repro.core import sorter
     if axis not in (-1, x.ndim - 1):
@@ -163,9 +154,21 @@ def _imc_width(x) -> int:
 
 def argsort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
             descending: bool = False) -> jnp.ndarray:
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
     if method == "xla":
         order = jnp.argsort(x, axis=axis)
         return jnp.flip(order, axis=axis) if descending else order
+    if method == "pallas":
+        from repro.kernels import ops as kops
+        return kops.bitonic_argsort(x, axis, descending)
+    if method == "imc":
+        raise NotImplementedError(
+            "imc is a bit-serial validation backend; use sort() on ints")
+    if method in ("merge", "auto"):
+        from repro import engine
+        return engine.argsort(x, axis=axis, descending=descending,
+                              method=method)
     n = x.shape[axis % x.ndim]
     idx = jnp.broadcast_to(
         jnp.arange(n, dtype=jnp.int32).reshape(
@@ -192,6 +195,9 @@ def topk(x: jnp.ndarray, k: int, *, method: str = "xla",
     if method == "imc":
         raise NotImplementedError(
             "imc is a bit-serial validation backend; use sort() on ints")
+    if method in ("merge", "auto"):
+        from repro import engine
+        return engine.topk(x, k, method=method)
     n = x.shape[-1]
     idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), x.shape)
     sx, si = bitonic_sort(x, axis=-1, descending=True, values=idx)

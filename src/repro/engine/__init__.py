@@ -1,0 +1,119 @@
+"""repro.engine — hierarchical out-of-core sort engine.
+
+Completes the memory hierarchy between one VMEM tile (kernels/bitonic_sort)
+and the device mesh (core/distributed_sort):
+
+    SRAM array  ->  VMEM tile  ->  engine runs + merge tree  ->  mesh shards
+
+``sort`` / ``argsort`` / ``topk`` here accept any array size: tiled run
+generation (runs.py) sorts VMEM-sized pieces with an existing backend, a
+merge-path merge tree (merge.py, kernels/merge_path.py) combines them in
+O(n log n) total work, and the cost-model planner (planner.py) decides when
+the hierarchy pays for itself versus handing the whole array to one backend.
+``sort_api`` exposes all of this as ``method="merge"`` and ``method="auto"``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.engine import merge as merge  # noqa: F401  (re-export)
+from repro.engine import planner, runs
+from repro.engine.merge import kway_merge, merge_pairs, merge_runs  # noqa: F401
+from repro.engine.planner import Plan, calibrate, choose, choose_method  # noqa: F401
+from repro.engine.segmented import (  # noqa: F401
+    group_tokens_by_expert, segment_ids_from_row_splits, segmented_argsort,
+    segmented_sort, sort_padded_rows)
+
+
+# the same axis-flattening helpers the kernel entry points use
+from repro.kernels.ops import _from_rows, _to_rows
+
+
+def _delegate_sort(x, axis, descending, method):
+    from repro.core import sort_api
+    return sort_api.sort(x, axis=axis, method=method, descending=descending)
+
+
+def sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
+         method: str = "auto", run_len: Optional[int] = None,
+         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Sort along ``axis``; sizes beyond one tile go through runs + merges.
+
+    ``method`` is "auto" (cost-model pick), "merge" (force the engine), or
+    any concrete ``sort_api`` backend to delegate to.
+    """
+    x2, lead, ax = _to_rows(x, axis)
+    batch, n = x2.shape
+    plan = planner.choose(n, batch, x.dtype, requested=method,
+                          run_len=run_len)
+    if plan.method != "merge":
+        return _delegate_sort(x, ax, descending, plan.method)
+    rg = runs.generate_runs(x2, plan.run_len, method=plan.run_method,
+                            descending=descending, interpret=interpret)
+    merged = merge_runs(rg, descending=descending,
+                        backend=plan.merge_backend, interpret=interpret)
+    return _from_rows(merged[:, :n], lead, ax)
+
+
+def argsort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
+            method: str = "auto", stable: bool = False,
+            run_len: Optional[int] = None,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Sorting permutation along ``axis`` via the key-value engine path.
+
+    ``stable=True`` forces a stable pipeline: stable tile sort ("xla" run
+    backend) + merge-path merges (stable by construction), regardless of the
+    planner's backend preference — segmented sort and MoE grouping rely on
+    this.
+    """
+    x2, lead, ax = _to_rows(x, axis)
+    batch, n = x2.shape
+    plan = planner.choose(n, batch, x.dtype, requested=method,
+                          run_len=run_len)
+    if plan.method != "merge" and not stable:
+        from repro.core import sort_api
+        method_ = plan.method if plan.method != "imc" else "xla"
+        return sort_api.argsort(x, axis=ax, method=method_,
+                                descending=descending)
+    run_method = "xla" if stable else plan.run_method
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
+                           x2.shape)
+    rk, rv = runs.generate_runs_kv(x2, idx, plan.run_len, method=run_method,
+                                   descending=descending, interpret=interpret)
+    _, order = merge_runs(rk, rv, descending=descending,
+                          backend=plan.merge_backend, interpret=interpret)
+    return _from_rows(order[:, :n], lead, ax)
+
+
+def topk(x: jnp.ndarray, k: int, *, method: str = "auto",
+         run_len: Optional[int] = None,
+         interpret: Optional[bool] = None
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k along the last axis -> (values, indices), descending.
+
+    Engine path: per-run top-k candidates (the paper's partition-then-merge,
+    §II-B) followed by a key-value merge tree over the k-prefixes.
+    """
+    x2, lead, _ = _to_rows(x, -1)
+    batch, n = x2.shape
+    if not 0 < k <= n:
+        raise ValueError(f"k must be in (0, {n}], got {k}")
+    plan = planner.choose(n, batch, x.dtype, requested=method,
+                          run_len=run_len)
+    if plan.method != "merge":
+        from repro.core import sort_api
+        method_ = plan.method if plan.method != "imc" else "xla"
+        v, i = sort_api.topk(x2, k, method=method_)
+        return v.reshape(*lead, k), i.reshape(*lead, k)
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], x2.shape)
+    rk, rv = runs.generate_runs_kv(x2, idx, plan.run_len,
+                                   method=plan.run_method, descending=True,
+                                   interpret=interpret)
+    # candidate prefixes: only the first k of each run can reach the top k
+    kk = runs.next_pow2(min(k, rk.shape[-1]))
+    ck, cv = rk[..., :kk], rv[..., :kk]
+    mk, mv = merge_runs(ck, cv, descending=True, backend=plan.merge_backend,
+                        interpret=interpret)
+    return mk[:, :k].reshape(*lead, k), mv[:, :k].reshape(*lead, k)

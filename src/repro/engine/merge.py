@@ -1,0 +1,152 @@
+"""Merge tree over sorted runs — rung two of the out-of-core sort engine.
+
+Pairwise merge-path merges, applied level by level over a power-of-two run
+count: R runs of length L become R/2 runs of length 2L, log2(R) times.
+Each level is O(n) ranking work, so the whole tree is O(n log(n/run_len)) on
+top of the O(n log run_len) run generation — the O(n log n) total that the
+whole-array bitonic network (O(n log^2 n) CAS count) cannot reach.
+
+Two interchangeable merge backends:
+
+  ``xla``     rank merge in pure jnp: each element's output position is its
+              own index plus a binary-searched cross-rank in the partner run
+              (searchsorted), materialised with a batched scatter.
+  ``pallas``  the diagonal-partitioned VMEM kernel (kernels/merge_path.py).
+
+Both are ascending-stable (left run wins ties); descending merges flip in,
+merge ascending, flip out.  Key-value variants carry an int payload for
+argsort / top-k.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import runs as _runs
+
+MERGE_BACKENDS = ("xla", "pallas")
+
+
+def _vsearch(sorted_rows: jnp.ndarray, queries: jnp.ndarray, side: str):
+    return jax.vmap(lambda s, q: jnp.searchsorted(s, q, side=side))(
+        sorted_rows, queries)
+
+
+def _rank_merge(a, b, va, vb):
+    """Ascending merge of (rows, L) pairs via cross-rank + gathers.
+
+    Gather formulation (no scatter — XLA's CPU scatter is a serial loop):
+    ``pa`` is each a-element's output slot; ``i[o] = #a-elements in slots
+    [0..o]`` recovers, per output slot, which source to read and at what
+    index, so placement is two ``take_along_axis`` plus a select.
+    """
+    rows, l = a.shape
+    pos = jnp.arange(l, dtype=jnp.int32)
+    pa = pos[None, :] + _vsearch(b, a, "left")    # a first on ties
+    out_pos = jnp.broadcast_to(jnp.arange(2 * l, dtype=jnp.int32)[None, :],
+                               (rows, 2 * l))
+    i = _vsearch(pa, out_pos, "right")
+    j = out_pos - i
+    ia = jnp.clip(i - 1, 0, l - 1)
+    jb = jnp.clip(j, 0, l - 1)
+    from_a = jnp.diff(i, prepend=0, axis=-1) > 0
+    out = jnp.where(from_a, jnp.take_along_axis(a, ia, -1),
+                    jnp.take_along_axis(b, jb, -1))
+    if va is None:
+        return out, None
+    vout = jnp.where(from_a, jnp.take_along_axis(va, ia, -1),
+                     jnp.take_along_axis(vb, jb, -1))
+    return out, vout
+
+
+def merge_pairs(a: jnp.ndarray, b: jnp.ndarray, *, descending: bool = False,
+                backend: str = "xla", values: Tuple = (None, None),
+                interpret: Optional[bool] = None):
+    """Merge row-wise sorted (rows, L) a and b -> (rows, 2L) (+ payloads)."""
+    if backend not in MERGE_BACKENDS:
+        raise ValueError(
+            f"merge backend must be one of {MERGE_BACKENDS}, got {backend!r}")
+    va, vb = values
+    if descending:
+        # flip to ascending AND swap the pair: the ascending merge's
+        # left-wins-ties rule turns into right-wins after the final flip,
+        # so swapping roles restores "a first on equal keys" — keeping
+        # stable pipelines stable in both directions.
+        a, b = jnp.flip(b, -1), jnp.flip(a, -1)
+        va, vb = (None if vb is None else jnp.flip(vb, -1),
+                  None if va is None else jnp.flip(va, -1))
+    if backend == "pallas":
+        from repro.kernels import merge_path as _mp
+        if va is None:
+            out, vout = _mp.merge_pairs_blocks(a, b, interpret=interpret), None
+        else:
+            out, vout = _mp.merge_pairs_kv_blocks(a, b, va, vb,
+                                                  interpret=interpret)
+    else:
+        out, vout = _rank_merge(a, b, va, vb)
+    if descending:
+        out = jnp.flip(out, -1)
+        vout = None if vout is None else jnp.flip(vout, -1)
+    return (out, vout) if values[0] is not None else out
+
+
+def merge_runs(run_keys: jnp.ndarray, run_vals: Optional[jnp.ndarray] = None,
+               *, descending: bool = False, backend: str = "xla",
+               interpret: Optional[bool] = None):
+    """Collapse (rows, R, L) sorted runs into one (rows, R*L) sorted row.
+
+    R must be a power of two (run generation guarantees it).  This is the
+    k-way merge realised as a complete tournament of pairwise merge-path
+    merges — log2(R) levels, each touching every element once.
+    """
+    rows, r, l = run_keys.shape
+    if r & (r - 1):
+        raise ValueError(f"run count must be a power of two, got {r}")
+    keys, vals = run_keys, run_vals
+    while r > 1:
+        kv = keys.reshape(rows * (r // 2), 2, l)
+        a, b = kv[:, 0, :], kv[:, 1, :]
+        if vals is None:
+            merged = merge_pairs(a, b, descending=descending, backend=backend,
+                                 interpret=interpret)
+        else:
+            vv = vals.reshape(rows * (r // 2), 2, l)
+            merged, mvals = merge_pairs(
+                a, b, descending=descending, backend=backend,
+                values=(vv[:, 0, :], vv[:, 1, :]), interpret=interpret)
+            vals = mvals.reshape(rows, r // 2, 2 * l)
+        keys = merged.reshape(rows, r // 2, 2 * l)
+        r //= 2
+        l *= 2
+    keys = keys.reshape(rows, l)
+    if run_vals is None:
+        return keys
+    return keys, vals.reshape(rows, l)
+
+
+def kway_merge(arrays: Sequence[jnp.ndarray], *, descending: bool = False,
+               backend: str = "xla",
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Merge k independently sorted 1-D arrays into one sorted array.
+
+    Arrays may have different lengths; each is padded to a common
+    power-of-two run length with the direction's sentinel, and the pad is
+    sliced off the far end of the result.
+    """
+    if not arrays:
+        raise ValueError("need at least one array")
+    arrays = [jnp.ravel(a) for a in arrays]
+    dtype = arrays[0].dtype
+    total = sum(a.shape[0] for a in arrays)
+    l = _runs.next_pow2(max(a.shape[0] for a in arrays))
+    r = _runs.next_pow2(len(arrays))
+    sent = _runs.sort_sentinel(dtype, descending)
+    padded = [jnp.pad(a, (0, l - a.shape[0]), constant_values=sent)
+              for a in arrays]
+    padded += [jnp.full((l,), sent, dtype)] * (r - len(arrays))
+    stacked = jnp.stack(padded)[None, :, :]
+    merged = merge_runs(stacked, descending=descending, backend=backend,
+                        interpret=interpret)
+    return merged[0, :total]

@@ -1,0 +1,174 @@
+"""Cost-model dispatch — picks the sorting backend from (n, batch, dtype).
+
+Extends the paper-constant cost model (core/cost_model.py) with per-tile
+constants that can be *measured* on the running backend, then prices every
+eligible software backend and returns the cheapest as an executable plan.
+``sort_api.sort(..., method="auto")`` is a thin wrapper over this module.
+
+Hard validity rules come first — auto must never pick a backend that errors:
+
+  * ``imc`` is never auto-selected (bit-serial validation backend).
+  * ``bitonic`` / ``pallas`` whole-array paths are capped at sizes where the
+    power-of-two padded row still fits a sane VMEM tile.
+  * ``merge`` requires more than one run; below that it degenerates anyway.
+  * unknown / exotic dtypes fall back to ``xla`` unconditionally.
+
+Only then does the cost model arbitrate among the survivors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model
+from repro.engine import runs as _runs
+
+# whole-array network caps: beyond these the padded row stops being a
+# reasonable VMEM-resident tile and the hierarchy should take over
+MAX_BITONIC_N = 1 << 14
+MAX_PALLAS_N = 1 << 16
+
+# default engine tile size per substrate: on TPU a run is one VMEM tile; on
+# CPU larger runs trade (cheap, vectorised) tile-sort work for (expensive,
+# gather-bound) merge levels — 8K is the measured sweet spot for jnp tiles
+CPU_RUN_LEN = 8192
+
+# dtypes every backend's min/max compare handles (NaN-free floats assumed)
+_COMPARABLE = {"float32", "bfloat16", "float16", "int32", "uint32",
+               "int16", "uint16", "int8", "uint8"}
+
+_measured: Optional[cost_model.DeviceSortConstants] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Executable dispatch decision for one (n, batch, dtype) workload."""
+    method: str                  # "xla" | "bitonic" | "pallas" | "merge"
+    run_len: int                 # engine tile size (merge method only)
+    run_method: str              # backend sorting each run
+    merge_backend: str           # "xla" | "pallas" merge primitive
+    costs: Dict[str, float]      # estimated ns per candidate
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def constants() -> cost_model.DeviceSortConstants:
+    return _measured or cost_model.DeviceSortConstants()
+
+
+def _eligible(method: str, n: int, dtype) -> bool:
+    if jnp.dtype(dtype).name not in _COMPARABLE:
+        return method == "xla"
+    if method == "bitonic":
+        return _runs.next_pow2(n) <= MAX_BITONIC_N
+    if method == "pallas":
+        return _runs.next_pow2(n) <= MAX_PALLAS_N
+    if method == "merge":
+        return n > _runs.DEFAULT_RUN_LEN
+    return method == "xla"
+
+
+def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
+           requested: str = "auto",
+           run_len: Optional[int] = None) -> Plan:
+    """Resolve ``requested`` ("auto" or a concrete method) into a Plan."""
+    rl = run_len or (_runs.DEFAULT_RUN_LEN if on_tpu() else CPU_RUN_LEN)
+    consts = constants()
+    interp = not on_tpu()
+    costs = {
+        m: cost_model.device_sort_cost_ns(
+            m, n, batch, run_len=rl, consts=consts, pallas_interpreted=interp)
+        for m in ("xla", "bitonic", "pallas", "merge")
+    }
+    if requested == "auto":
+        candidates = [m for m in costs if _eligible(m, n, dtype)]
+        method = min(candidates, key=costs.__getitem__)
+    else:
+        method = requested
+    run_method = "pallas" if (on_tpu() and _eligible("pallas", rl, dtype)) \
+        else "xla"
+    merge_backend = "pallas" if on_tpu() else "xla"
+    return Plan(method=method, run_len=rl, run_method=run_method,
+                merge_backend=merge_backend, costs=costs)
+
+
+def choose_method(n: int, batch: int = 1, dtype=jnp.float32) -> str:
+    """Just the backend name — what sort_api's "auto" resolves to."""
+    return choose(n, batch, dtype).method
+
+
+# ---------------------------------------------------------------------------
+# measured per-tile constants
+# ---------------------------------------------------------------------------
+
+def _time_ns(fn, reps: int = 3) -> float:
+    fn()  # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e9
+
+
+def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
+              include_pallas: Optional[bool] = None
+              ) -> cost_model.DeviceSortConstants:
+    """Measure per-tile constants on the live backend and cache them.
+
+    Times one VMEM-tile-sized probe per backend plus one merge level, and
+    rescales the analytic constants so subsequent ``choose`` calls price
+    backends with numbers observed on this machine.  Optional: the defaults
+    are good enough for dispatch ordering; calibration sharpens crossover
+    points.
+
+    The Pallas probe only runs on a real TPU by default: interpret-mode
+    timings say nothing about kernel speed (the analytic constant plus the
+    interpret penalty already prices that path) and a single interpreted
+    tile sort can take minutes on CPU.
+    """
+    global _measured
+    import numpy as np
+    from repro.core import sort_api
+    from repro.engine import merge as _merge
+    if include_pallas is None:
+        include_pallas = on_tpu()
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((batch, tile_n)),
+                    jnp.float32)
+    elems = batch * tile_n
+    lg = cost_model._log2(tile_n)
+
+    xla_f = jax.jit(lambda v: sort_api.sort(v, method="xla"))
+    bit_f = jax.jit(lambda v: sort_api.sort(v, method="bitonic"))
+    half = tile_n // 2
+    mrg_f = jax.jit(lambda v: _merge.merge_pairs(
+        jnp.sort(v[:, :half]), jnp.sort(v[:, half:]), backend="xla"))
+
+    xla_ns = _time_ns(lambda: xla_f(x).block_until_ready(), reps)
+    bit_ns = _time_ns(lambda: bit_f(x).block_until_ready(), reps)
+    mrg_ns = _time_ns(lambda: mrg_f(x).block_until_ready(), reps)
+
+    pal_c = cost_model.DeviceSortConstants().pallas
+    if include_pallas:
+        pal_f = jax.jit(lambda v: sort_api.sort(v, method="pallas"))
+        pal_ns = _time_ns(lambda: pal_f(x).block_until_ready(), reps)
+        pal_c = pal_ns / (elems * lg * lg)
+        if not on_tpu():  # fold into (constant x penalty) form
+            pal_c /= cost_model.DeviceSortConstants().pallas_interpret_penalty
+    _measured = cost_model.DeviceSortConstants(
+        xla=xla_ns / (elems * lg),
+        bitonic=bit_ns / (elems * lg * lg),
+        pallas=pal_c,
+        merge_run=xla_ns / (elems * lg),
+        merge_level=mrg_ns / elems,
+    )
+    return _measured
+
+
+def reset_calibration() -> None:
+    global _measured
+    _measured = None

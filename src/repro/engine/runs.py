@@ -1,0 +1,123 @@
+"""Tiled run generation — rung one of the out-of-core sort engine.
+
+An arbitrarily large (batched) array is cut into VMEM-sized tiles ("runs"),
+each sorted independently by one of the existing ``sort_api`` backends; the
+merge tree (engine/merge.py) then combines runs into the full result.  This
+is the paper's partitioned-macro structure (§II-B) lifted one level: SRAM
+subarray -> CAS partition becomes HBM array -> VMEM run.
+
+Runs are padded to ``n_tiles * run_len`` where ``n_tiles`` is a power of two
+(so the merge tree is a complete binary tree); padding carries the dtype's
+sort sentinel so it falls to the far end and is sliced off after the merge.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_RUN_LEN = 2048
+
+RUN_METHODS = ("xla", "bitonic", "pallas")
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def sort_sentinel(dtype, descending: bool):
+    """Value that sorts to the end of the array for the given direction."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf if descending else jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min if descending else info.max, dtype)
+
+
+def run_layout(n: int, run_len: int) -> Tuple[int, int]:
+    """(n_tiles, padded_n) for sorting ``n`` elements with ``run_len`` tiles.
+
+    ``run_len`` is rounded up to a power of two: the Pallas tile sort and
+    the merge-path kernel both address power-of-two rows.
+    """
+    run_len = min(next_pow2(run_len), next_pow2(n))
+    n_tiles = next_pow2(-(-n // run_len))
+    return n_tiles, n_tiles * run_len
+
+
+def _pad_rows(x: jnp.ndarray, m: int, fill) -> jnp.ndarray:
+    n = x.shape[-1]
+    if m == n:
+        return x
+    return jnp.pad(x, ((0, 0), (0, m - n)), constant_values=fill)
+
+
+def _sort_tiles(tiles: jnp.ndarray, method: str, descending: bool,
+                interpret: Optional[bool]) -> jnp.ndarray:
+    """Sort each row of (rows*n_tiles, run_len) with the chosen backend."""
+    if method == "xla":
+        out = jnp.sort(tiles, axis=-1)
+        return jnp.flip(out, axis=-1) if descending else out
+    if method == "bitonic":
+        from repro.core import sort_api
+        return sort_api.bitonic_sort(tiles, axis=-1, descending=descending)
+    if method == "pallas":
+        from repro.kernels import bitonic_sort as _bs
+        return _bs.sort_blocks(tiles, descending=descending,
+                               interpret=interpret)
+    raise ValueError(f"run method must be one of {RUN_METHODS}, got {method!r}")
+
+
+def _sort_tiles_kv(keys: jnp.ndarray, vals: jnp.ndarray, method: str,
+                   descending: bool, interpret: Optional[bool]):
+    if method == "xla":
+        if descending:
+            # stable descending (ties keep ascending index order): stable
+            # ascending argsort of the reversed row, mapped back and flipped
+            order = jnp.flip(jnp.argsort(
+                jnp.flip(keys, -1), axis=-1, stable=True), -1)
+            order = keys.shape[-1] - 1 - order
+        else:
+            order = jnp.argsort(keys, axis=-1, stable=True)
+        return (jnp.take_along_axis(keys, order, axis=-1),
+                jnp.take_along_axis(vals, order, axis=-1))
+    if method == "bitonic":
+        from repro.core import sort_api
+        return sort_api.bitonic_sort(keys, axis=-1, descending=descending,
+                                     values=vals)
+    if method == "pallas":
+        from repro.kernels import bitonic_sort as _bs
+        return _bs.sort_kv_blocks(keys, vals, descending=descending,
+                                  interpret=interpret)
+    raise ValueError(f"run method must be one of {RUN_METHODS}, got {method!r}")
+
+
+def generate_runs(x: jnp.ndarray, run_len: int = DEFAULT_RUN_LEN, *,
+                  method: str = "xla", descending: bool = False,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(rows, n) -> (rows, n_tiles, run_len) independently sorted runs."""
+    rows, n = x.shape
+    n_tiles, m = run_layout(n, run_len)
+    run_len = m // n_tiles
+    x = _pad_rows(x, m, sort_sentinel(x.dtype, descending))
+    tiles = x.reshape(rows * n_tiles, run_len)
+    out = _sort_tiles(tiles, method, descending, interpret)
+    return out.reshape(rows, n_tiles, run_len)
+
+
+def generate_runs_kv(keys: jnp.ndarray, vals: jnp.ndarray,
+                     run_len: int = DEFAULT_RUN_LEN, *,
+                     method: str = "xla", descending: bool = False,
+                     interpret: Optional[bool] = None):
+    """Key-value run generation: payloads follow their keys into the runs."""
+    rows, n = keys.shape
+    n_tiles, m = run_layout(n, run_len)
+    run_len = m // n_tiles
+    keys = _pad_rows(keys, m, sort_sentinel(keys.dtype, descending))
+    # pad payloads with out-of-range positions so callers can identify them
+    vals = _pad_rows(vals, m, jnp.array(n, vals.dtype))
+    sk, sv = _sort_tiles_kv(keys.reshape(rows * n_tiles, run_len),
+                            vals.reshape(rows * n_tiles, run_len),
+                            method, descending, interpret)
+    return (sk.reshape(rows, n_tiles, run_len),
+            sv.reshape(rows, n_tiles, run_len))

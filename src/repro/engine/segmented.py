@@ -1,0 +1,95 @@
+"""Segmented sort over ragged row groups.
+
+Serving length-buckets and MoE expert groups both need "sort within each
+group" where groups are ragged: a flat token stream plus segment ids (or row
+splits).  Done as a composite two-pass sort:
+
+  1. order the values with the engine (any backend, need not be stable);
+  2. stably re-order that permutation by segment id, so groups come out
+     contiguous and each group's interior stays value-sorted.
+
+The stable second pass runs through the engine's merge path (merge-path
+merges are stable by construction when runs are generated with a stable tile
+sort), so segmented sort scales exactly like the flat engine sort.
+
+Padded-batch variant (``sort_padded_rows``) covers the scheduler's
+fixed-shape buckets: rows valid up to ``lengths[i]``, tail restored after
+the sort.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_ids_from_row_splits(row_splits: jnp.ndarray,
+                                n: int) -> jnp.ndarray:
+    """[0, 3, 5, n] -> [0,0,0,1,1,2,...]: dense ids from boundaries."""
+    pos = jnp.arange(n, dtype=jnp.int32)
+    return (jnp.searchsorted(row_splits, pos, side="right") - 1).astype(
+        jnp.int32)
+
+
+def segmented_argsort(values: jnp.ndarray, segment_ids: jnp.ndarray, *,
+                      descending: bool = False,
+                      method: str = "auto") -> jnp.ndarray:
+    """Permutation grouping ``values`` by segment, value-sorted per group.
+
+    ``values`` and ``segment_ids`` are flat (n,) or batched (..., n) with
+    segment ids non-decreasing or not — groups need not be contiguous on
+    input; they are contiguous (in ascending segment-id order) in the output
+    permutation.
+    """
+    from repro import engine
+    order1 = engine.argsort(values, method=method, descending=descending)
+    seg1 = jnp.take_along_axis(segment_ids, order1, axis=-1)
+    order2 = engine.argsort(seg1, method=method, stable=True)
+    return jnp.take_along_axis(order1, order2, axis=-1)
+
+
+def segmented_sort(values: jnp.ndarray, segment_ids: jnp.ndarray, *,
+                   descending: bool = False, method: str = "auto"
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(sorted values, grouped segment ids), groups contiguous & ascending."""
+    order = segmented_argsort(values, segment_ids, descending=descending,
+                              method=method)
+    return (jnp.take_along_axis(values, order, axis=-1),
+            jnp.take_along_axis(segment_ids, order, axis=-1))
+
+
+def sort_padded_rows(values: jnp.ndarray, lengths: jnp.ndarray, *,
+                     descending: bool = False, method: str = "auto",
+                     fill_value=0) -> jnp.ndarray:
+    """Sort each row's valid prefix of a padded (rows, L) batch.
+
+    Positions >= lengths[row] are padding; they are pushed past the valid
+    prefix during the sort and rewritten with ``fill_value`` afterwards, so
+    the ragged layout is preserved.
+    """
+    from repro import engine
+    from repro.engine import runs as _runs
+    rows, l = values.shape
+    pos = jnp.arange(l, dtype=jnp.int32)[None, :]
+    valid = pos < lengths[:, None]
+    sent = _runs.sort_sentinel(values.dtype, descending)
+    masked = jnp.where(valid, values, sent)
+    out = engine.sort(masked, method=method, descending=descending)
+    return jnp.where(valid, out, jnp.array(fill_value, values.dtype))
+
+
+def group_tokens_by_expert(expert_ids: jnp.ndarray, num_experts: int, *,
+                           method: str = "auto"
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE dispatch order: (permutation, row_splits) grouping tokens by expert.
+
+    The permutation is stable (tokens keep arrival order inside each expert
+    group), which is what capacity-truncation policies assume.
+    """
+    from repro import engine
+    perm = engine.argsort(expert_ids, method=method, stable=True)
+    counts = jnp.bincount(expert_ids.reshape(-1), length=num_experts)
+    row_splits = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])
+    return perm, row_splits

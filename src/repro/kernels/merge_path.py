@@ -1,0 +1,190 @@
+"""Merge-path (diagonal-partitioned) merge of sorted runs, in VMEM.
+
+The engine's merge tree needs a merge primitive whose work is O(n) per level
+instead of the bitonic merge box's O(n log n) compare-and-swaps.  Merge path
+(Green/McColl/Odeh) splits the output of ``merge(a, b)`` into equal chunks by
+binary-searching the merge matrix's diagonals; each chunk then depends on one
+bounded window of ``a`` and one of ``b`` (|window_a| + |window_b| = chunk), so
+chunks are embarrassingly parallel and perfectly load-balanced — the same
+partition-then-exchange structure ADS-IMC uses across its SRAM CAS partitions
+(§II-B), applied one level up the hierarchy.
+
+Division of labour:
+
+  host (jnp)     diagonal binary search -> per-chunk window starts/counts,
+                 windows gathered into contiguous (rows*chunks, C) arrays.
+  kernel (VMEM)  rank-based merge of the two windows: each element's output
+                 slot is its window index plus its cross-rank in the other
+                 window (counted with a C x C comparison matrix on the VPU),
+                 then a one-hot select writes the chunk — no dynamic scatter,
+                 no serial loop, everything vector ops.
+
+Validity is tracked with explicit per-window counts (not key sentinels), so
+inputs containing the dtype's extreme values still merge bit-exactly.  Keys
+must be NaN-free (comparisons follow min/max semantics, like the bitonic
+kernels).  Ascending only — callers flip for descending merges.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 256
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _window_ranks(a, b, ca):
+    """Output slot of every window element (ascending, a wins ties).
+
+    a, b: (br, C) value windows; ca: (br, 1) count of valid a-elements
+    (valid b-count is C - ca).  Invalid slots rank past the chunk (>= C).
+    """
+    br, c = a.shape
+    ii = jax.lax.broadcasted_iota(jnp.int32, (br, c), 1)
+    valid_a = ii < ca
+    valid_b = ii < (c - ca)
+    # b_before[r, i, j]: does b[j] precede a[i]?  (strict: a first on ties)
+    b_before = (b[:, None, :] < a[:, :, None]) & valid_b[:, None, :]
+    ra = ii + jnp.sum(b_before.astype(jnp.int32), axis=2)
+    ra = jnp.where(valid_a, ra, c)
+    # a_before_or_tie[r, i, j]: does a[i] precede b[j]?
+    a_before = (a[:, :, None] <= b[:, None, :]) & valid_a[:, :, None]
+    rb = ii + jnp.sum(a_before.astype(jnp.int32), axis=1)
+    rb = jnp.where(valid_b, rb, c)
+    return ra, rb
+
+
+def _one_hot_place(src, ranks, c):
+    """Route src[r, i] to output slot ranks[r, i]; slots >= c drop out."""
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, 1, c), 2)
+    hit = ranks[:, :, None] == slots
+    zero = jnp.zeros((), src.dtype)
+    return jnp.sum(jnp.where(hit, src[:, :, None], zero), axis=1)
+
+
+def _merge_chunk_kernel(ca_ref, wa_ref, wb_ref, o_ref):
+    a, b = wa_ref[...], wb_ref[...]
+    c = a.shape[-1]
+    ra, rb = _window_ranks(a, b, ca_ref[...])
+    o_ref[...] = _one_hot_place(a, ra, c) + _one_hot_place(b, rb, c)
+
+
+def _merge_chunk_kv_kernel(ca_ref, wa_ref, wb_ref, va_ref, vb_ref,
+                           ok_ref, ov_ref):
+    a, b = wa_ref[...], wb_ref[...]
+    c = a.shape[-1]
+    ra, rb = _window_ranks(a, b, ca_ref[...])
+    ok_ref[...] = _one_hot_place(a, ra, c) + _one_hot_place(b, rb, c)
+    ov_ref[...] = (_one_hot_place(va_ref[...], ra, c)
+                   + _one_hot_place(vb_ref[...], rb, c))
+
+
+# ---------------------------------------------------------------------------
+# host side: diagonal partition + window gather
+# ---------------------------------------------------------------------------
+
+def _diag_search(a, b, diag):
+    """Merge-path split: #a-elements among the first ``diag`` merged outputs.
+
+    a, b: (rows, La/Lb) ascending; diag: (n_diag,) int32.  Returns
+    (rows, n_diag).  Ties go to ``a`` (stable when a precedes b).  Classic
+    monotone-predicate binary search, vectorised over rows x diagonals.
+    """
+    la, lb = a.shape[-1], b.shape[-1]
+    d = jnp.broadcast_to(diag[None, :], (a.shape[0], diag.shape[0]))
+    lo = jnp.maximum(0, d - lb)
+    hi = jnp.minimum(d, la)
+    steps = max(1, int(la).bit_length())
+    for _ in range(steps):
+        mid = (lo + hi + 1) // 2
+        a_prev = jnp.take_along_axis(a, jnp.clip(mid - 1, 0, la - 1), axis=-1)
+        b_next = jnp.take_along_axis(b, jnp.clip(d - mid, 0, lb - 1), axis=-1)
+        # feasible(mid): can take >= mid elements of a before diag?
+        feasible = (mid <= lo) | (d - mid >= lb) | (a_prev <= b_next)
+        lo = jnp.where(feasible, jnp.maximum(lo, mid), lo)
+        hi = jnp.where(feasible, hi, jnp.minimum(hi, mid - 1))
+    return lo
+
+
+def _gather_windows(x, starts, c):
+    """x: (rows, L) -> (rows, n_chunks, c) windows starting at ``starts``."""
+    l = x.shape[-1]
+    idx = jnp.clip(starts[..., None]
+                   + jnp.arange(c, dtype=jnp.int32)[None, None, :], 0, l - 1)
+    return jnp.take_along_axis(x[:, None, :], idx, axis=-1)
+
+
+def _pick_block_rows(total_rows: int, c: int) -> int:
+    # the (br, C, C) comparison tensor dominates VMEM: keep it ~2 MB
+    br = max(1, min(total_rows, (2 << 20) // max(1, c * c * 4)))
+    while total_rows % br:
+        br -= 1
+    return br
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def merge_pairs_blocks(a: jnp.ndarray, b: jnp.ndarray, *,
+                       chunk: int = DEFAULT_CHUNK,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Merge row-wise sorted (rows, L) + (rows, L) -> (rows, 2L), ascending."""
+    (out,) = _merge_impl(a, b, (), chunk, interpret)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def merge_pairs_kv_blocks(a: jnp.ndarray, b: jnp.ndarray,
+                          va: jnp.ndarray, vb: jnp.ndarray, *,
+                          chunk: int = DEFAULT_CHUNK,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Key-value variant: payloads ride along their keys through the merge."""
+    return tuple(_merge_impl(a, b, (va, vb), chunk, interpret))
+
+
+def _merge_impl(a, b, values, chunk, interpret):
+    interp = _interpret_default() if interpret is None else interpret
+    rows, l = a.shape
+    total = 2 * l
+    c = min(chunk, total)
+    nc = total // c
+    diag = (jnp.arange(nc, dtype=jnp.int32)) * c
+    starts_a = _diag_search(a, b, diag)                     # (rows, nc)
+    ends_a = jnp.concatenate(
+        [starts_a[:, 1:], jnp.full((rows, 1), l, jnp.int32)], axis=-1)
+    counts_a = (ends_a - starts_a).reshape(rows * nc, 1)
+    starts_b = diag[None, :] - starts_a
+    wa = _gather_windows(a, starts_a, c).reshape(rows * nc, c)
+    wb = _gather_windows(b, starts_b, c).reshape(rows * nc, c)
+    ins = [counts_a, wa, wb]
+    outs = [jax.ShapeDtypeStruct((rows * nc, c), a.dtype)]
+    kernel = _merge_chunk_kernel
+    if values:
+        va, vb = values
+        ins += [_gather_windows(va, starts_a, c).reshape(rows * nc, c),
+                _gather_windows(vb, starts_b, c).reshape(rows * nc, c)]
+        outs.append(jax.ShapeDtypeStruct((rows * nc, c), va.dtype))
+        kernel = _merge_chunk_kv_kernel
+    br = _pick_block_rows(rows * nc, c)
+    grid = (rows * nc // br,)
+    cspec = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    wspec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    res = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[cspec] + [wspec] * (len(ins) - 1),
+        out_specs=[wspec] * len(outs),
+        out_shape=outs,
+        interpret=interp,
+    )(*ins)
+    return [r.reshape(rows, total) for r in res]

@@ -97,6 +97,13 @@ def _sort_bwd(axis, descending, interpret, order, g):
 bitonic_sort.defvjp(_sort_fwd, _sort_bwd)
 
 
+def bitonic_argsort(x: jnp.ndarray, axis: int = -1, descending: bool = False,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Argsort along ``axis`` with the in-VMEM kv kernel (int32 indices)."""
+    _, order = _sort_fwd_impl(x, axis, descending, interpret)
+    return order
+
+
 # ---------------------------------------------------------------------------
 # top-k (hierarchical for large n)
 # ---------------------------------------------------------------------------

@@ -38,9 +38,14 @@ class Request:
 
 
 class LengthSortedScheduler:
-    """Batch requests by sorted prompt length (paper technique #3)."""
+    """Batch requests by sorted prompt length (paper technique #3).
 
-    def __init__(self, batch_size: int, method: str = "bitonic"):
+    ``method`` takes any ``sort_api`` backend; the default ``"auto"`` lets
+    the engine's cost-model planner pick per queue size, so the scheduler
+    scales from a handful of requests to engine-sized backlogs unchanged.
+    """
+
+    def __init__(self, batch_size: int, method: str = "auto"):
         self.batch_size = batch_size
         self.method = method
         self.queue: List[Request] = []

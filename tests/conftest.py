@@ -1,3 +1,16 @@
+import os
+import sys
 import warnings
 
 warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+# Property tests use hypothesis when available; otherwise fall back to a
+# deterministic fixed-sample replay shim so the suite still collects and the
+# properties still execute (see tests/_hypothesis_stub.py).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
