@@ -5,6 +5,7 @@ Sweeps n from one-VMEM-tile scale to millions of elements and, for each of
   * ``xla``            jnp.sort (the off-memory reference),
   * ``pallas-bitonic`` the whole-array in-VMEM network (O(n log^2 n) CAS),
   * ``merge-engine``   tiled runs + merge-path merge tree (O(n log n)),
+  * ``radix``          keycodec + Pallas LSD radix sort (O(n·b)),
   * ``auto``           whatever the planner dispatches to,
 
 records TWO latencies:
@@ -34,6 +35,10 @@ import numpy as np
 DEFAULT_SIZES = (4096, 65536, 1 << 20)
 FULL_SIZES = (4096, 16384, 65536, 262144, 1 << 20, 1 << 22)
 
+# interpret-mode radix pays the planner's ~300x penalty; cap its leg off-TPU
+# so --full stays runnable (the crossover summary uses its largest timed n)
+RADIX_INTERPRET_CAP = 65536
+
 
 def _time_cold_warm(make_fn, x, reps: int):
     """(cold first-call seconds, warm mean seconds) for a fresh jit."""
@@ -58,12 +63,16 @@ def run(sizes=DEFAULT_SIZES):
         ("xla", lambda v: sort_api.sort(v, method="xla")),
         ("pallas_bitonic", lambda v: sort_api.sort(v, method="pallas")),
         ("merge", lambda v: engine.sort(v, method="merge")),
+        ("radix", lambda v: sort_api.sort(v, method="radix")),
         ("auto", lambda v: engine.sort(v, method="auto")),
     ]
+    interp = jax.default_backend() != "tpu"
     for n in sizes:
         x = jnp.asarray(rng.standard_normal((1, n)), jnp.float32)
         reps = 3 if n <= 65536 else 1
         for name, fn in backends:
+            if name == "radix" and interp and n > RADIX_INTERPRET_CAP:
+                continue
             cold, warm = _time_cold_warm(fn, x, reps)
             tag = (f"{n}:{engine.choose_method(n, 1)}" if name == "auto"
                    else n)
@@ -80,6 +89,14 @@ def run(sizes=DEFAULT_SIZES):
                  0.0, round(pc / mc, 2)))
     rows.append((f"engine.merge_vs_pallas_warm_speedup.n{n_max}",
                  0.0, round(pw / mw, 2)))
+    radix_ns = [n for (b, n) in summary if b == "radix"]
+    if radix_ns:      # every size may exceed the interpret-mode cap
+        rn = max(radix_ns)
+        _, rw = summary[("radix", rn)]
+        rows.append((f"engine.radix_vs_xla_warm_speedup.n{rn}",
+                     0.0, round(summary[("xla", rn)][1] / rw, 2)))
+        rows.append((f"engine.radix_vs_merge_warm_speedup.n{rn}",
+                     0.0, round(summary[("merge", rn)][1] / rw, 2)))
     return rows
 
 

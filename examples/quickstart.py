@@ -12,10 +12,10 @@ import jax.numpy as jnp
 from repro.core import sort_api, cost_model
 from repro.core.sorter import sort_in_memory
 
-print("== 1. one API, six backends ==")
+print("== 1. one API, seven backends ==")
 x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 100)),
                 dtype=jnp.float32)
-for method in ("xla", "bitonic", "pallas", "merge", "auto"):
+for method in ("xla", "bitonic", "pallas", "merge", "radix", "auto"):
     out = sort_api.sort(x, method=method)
     assert (np.diff(np.array(out), axis=-1) >= 0).all()
     print(f"  sort(method={method!r}): ok, first row head "

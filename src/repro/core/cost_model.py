@@ -104,6 +104,12 @@ def memory_bits(n: int = 8, width: int = 4) -> int:
     return sorter.array_geometry(n, width)["bits"]
 
 
+# radix-backend shape constants (kernels/radix_sort.py imports these, so the
+# analytic model and the kernel can't drift apart)
+RADIX_DIGIT_BITS = 8                 # radix 256: 4 passes for 32-bit keys
+RADIX_TILE = 256                     # elements per histogram partition
+
+
 # ---- device-level cost model (engine auto-dispatch) --------------------------
 #
 # The paper's model prices one SRAM macro; the engine's planner needs the same
@@ -121,6 +127,7 @@ class DeviceSortConstants:
     pallas: float = 0.25         # VMEM-resident network: c * n log2^2 n
     merge_run: float = 6.0       # run generation: c * n log2 run_len
     merge_level: float = 12.0    # one merge-path level: c * n
+    radix: float = 12.0          # LSD digit pass: c * n * ceil(b/8) passes
     pallas_interpret_penalty: float = 300.0   # CPU interpret-mode multiplier
 
 
@@ -131,11 +138,13 @@ def _log2(v: float) -> float:
 def device_sort_cost_ns(method: str, n: int, batch: int = 1, *,
                         run_len: int = 2048,
                         consts: DeviceSortConstants = None,
-                        pallas_interpreted: bool = False) -> float:
+                        pallas_interpreted: bool = False,
+                        key_bits: int = 32) -> float:
     """Estimated ns to sort ``batch`` rows of ``n`` with a software backend.
 
     ``n`` is priced at its padded (power-of-two / tiled) size, matching what
-    each backend actually executes.
+    each backend actually executes.  ``key_bits`` is the encoded key width
+    (keycodec) — only the radix backend's pass count depends on it.
     """
     c = consts or DeviceSortConstants()
     m = 1 << max(0, (n - 1).bit_length())
@@ -146,6 +155,14 @@ def device_sort_cost_ns(method: str, n: int, batch: int = 1, *,
     if method == "pallas":
         pen = c.pallas_interpret_penalty if pallas_interpreted else 1.0
         return pen * c.pallas * batch * m * _log2(m) ** 2
+    if method == "radix":
+        # O(n·b): ceil(b/8) digit passes, each touching every element once
+        # (histogram + rank + scatter); Pallas kernels, so interpret mode
+        # pays the same penalty as the bitonic kernel path
+        passes = -(-key_bits // RADIX_DIGIT_BITS)
+        tiled = -(-n // RADIX_TILE) * RADIX_TILE
+        pen = c.pallas_interpret_penalty if pallas_interpreted else 1.0
+        return pen * c.radix * batch * tiled * passes
     if method == "merge":
         run_len = min(run_len, m)
         tiles = 1 << max(0, (-(-n // run_len) - 1).bit_length())

@@ -1,0 +1,122 @@
+"""Order-preserving key codec — the radix front-end every ordered path shares.
+
+The paper sorts "in the standard weighted binary radix format" (§II), which
+is only directly true of *unsigned* integers: two's-complement negatives and
+IEEE-754 floats compare differently from their raw bit patterns.  The fix is
+the classic pair of monotone bijections (the same front-end MemSort-style
+designs and the hardware-sorting literature assume):
+
+  signed int   flip the sign bit          (biased / excess-2^(b-1) code)
+  float        sign-magnitude -> lexicographic: negative values flip ALL
+               bits, non-negative values flip only the sign bit
+
+Both are bijections on the b-bit patterns, so ``decode(encode(x)) == x``
+bit-exactly, and both are strictly monotone:
+
+  x < y  (in the source dtype's order)  <=>  encode(x) < encode(y)  (unsigned)
+
+which is exactly what a radix / bit-serial comparator needs.  ``descending``
+complements the encoded key — an order-*reversing* bijection — so a single
+ascending, stable radix sort serves both directions while ties keep
+ascending index order (the engine's tie convention).
+
+Supported dtypes: uint8/16/32, int8/16/32, float16, bfloat16, float32.
+
+Caveats (matching the repo's kernel conventions):
+  * NaN-free floats assumed (like the bitonic / merge-path kernels).  If
+    present, positive NaNs encode above +inf and negative NaNs below -inf,
+    not to one end like ``jnp.sort``.
+  * The float code is a *total* order refining IEEE equality: -0.0 encodes
+    strictly below +0.0 (numerically equal either way).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# source dtype name -> (bits, unsigned carrier dtype name, kind)
+_TABLE = {
+    "uint8": (8, "uint8", "u"),
+    "uint16": (16, "uint16", "u"),
+    "uint32": (32, "uint32", "u"),
+    "int8": (8, "uint8", "i"),
+    "int16": (16, "uint16", "i"),
+    "int32": (32, "uint32", "i"),
+    "float16": (16, "uint16", "f"),
+    "bfloat16": (16, "uint16", "f"),
+    "float32": (32, "uint32", "f"),
+}
+
+SUPPORTED = tuple(_TABLE)
+
+
+def supports(dtype) -> bool:
+    """True if ``dtype`` has an order-preserving unsigned encoding here."""
+    return jnp.dtype(dtype).name in _TABLE
+
+
+def key_bits(dtype) -> int:
+    """Radix key width in bits for ``dtype`` (== its storage width)."""
+    return _entry(dtype)[0]
+
+
+def key_dtype(dtype):
+    """The unsigned carrier dtype the encoded keys live in."""
+    return jnp.dtype(_entry(dtype)[1])
+
+
+def _entry(dtype):
+    name = jnp.dtype(dtype).name
+    if name not in _TABLE:
+        raise ValueError(
+            f"keycodec supports {SUPPORTED}, got {name!r}")
+    return _TABLE[name]
+
+
+def _masks(bits: int, udtype):
+    sign = jnp.array(1 << (bits - 1), udtype)
+    full = jnp.array((1 << bits) - 1, udtype)
+    return sign, full
+
+
+def encode(x: jnp.ndarray, *, descending: bool = False) -> jnp.ndarray:
+    """Map ``x`` to unsigned keys whose ``<`` matches the source order.
+
+    With ``descending=True`` the key is complemented, so ascending key order
+    is descending source order (stability / tie order is unaffected: equal
+    inputs still map to equal keys).
+    """
+    bits, uname, kind = _entry(x.dtype)
+    udtype = jnp.dtype(uname)
+    u = x if x.dtype == udtype else jax.lax.bitcast_convert_type(x, udtype)
+    sign, full = _masks(bits, udtype)
+    if kind == "i":
+        u = u ^ sign
+    elif kind == "f":
+        neg = jax.lax.shift_right_logical(u, jnp.array(bits - 1, udtype)) != 0
+        u = u ^ jnp.where(neg, full, sign)
+    if descending:
+        u = u ^ full
+    return u
+
+
+def decode(keys: jnp.ndarray, dtype, *, descending: bool = False
+           ) -> jnp.ndarray:
+    """Inverse of :func:`encode`: unsigned keys back to ``dtype``, bit-exact."""
+    bits, uname, kind = _entry(dtype)
+    udtype = jnp.dtype(uname)
+    if keys.dtype != udtype:
+        raise ValueError(
+            f"keys for {jnp.dtype(dtype).name} must be {uname}, "
+            f"got {keys.dtype.name}")
+    sign, full = _masks(bits, udtype)
+    u = keys ^ full if descending else keys
+    if kind == "i":
+        u = u ^ sign
+    elif kind == "f":
+        # encoded non-negatives have the top bit set; negatives had all
+        # bits flipped, so their encoded top bit is clear
+        top = jax.lax.shift_right_logical(u, jnp.array(bits - 1, udtype)) != 0
+        u = u ^ jnp.where(top, sign, full)
+    dtype = jnp.dtype(dtype)
+    return u if dtype == udtype else jax.lax.bitcast_convert_type(u, dtype)

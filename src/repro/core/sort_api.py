@@ -1,6 +1,6 @@
 """Public sorting API — the paper's technique as a composable JAX feature.
 
-One entry point, six interchangeable backends:
+One entry point, seven interchangeable backends:
 
   ``xla``      jnp.sort / jax.lax.top_k — the "off-memory" reference point.
   ``bitonic``  the paper's Batcher network executed word-parallel in pure
@@ -11,13 +11,33 @@ One entry point, six interchangeable backends:
                data — the TPU analogue of "sorting inside the memory array".
   ``imc``      the faithful bit-serial simulation (core/sorter.py): the
                28-cycle gate program on the simulated 6T SRAM array.
-               Small unsigned ints only; used for validation and benchmarks.
+               Small integer keys (any signedness via keycodec); used for
+               validation and benchmarks.
   ``merge``    the hierarchical out-of-core engine (repro.engine): tiled run
                generation + merge-path merge tree for arrays bigger than one
                VMEM tile — O(n log n) work where the whole-array network
                pays O(n log^2 n).
+  ``radix``    digit-serial LSD radix sort (kernels/radix_sort.py) over
+               keycodec-encoded keys — the VMEM analogue of the paper's
+               bit-serial CAS program, O(n·b) work, stable.
   ``auto``     cost-model dispatch (repro.engine.planner): picks the
                cheapest *valid* backend from (n, batch, dtype).
+
+Key encoding (core/keycodec.py) is shared plumbing: ``imc`` and ``radix``
+both route keys through the same order-preserving unsigned encoding
+(sign-bit flip for ints, sign-magnitude -> lexicographic for floats), so
+signed and float keys sort correctly on every radix-ordered path.
+
+Supported key dtypes by backend:
+
+  xla / bitonic / pallas / merge   any comparable dtype (NaN-free floats)
+  radix                            uint8/16/32, int8/16/32, f16, bf16, f32
+  imc                              int8/16/32, uint8/16/32
+
+Tie convention: ``argsort`` ties keep *ascending* index order in both
+directions on every backend that defines tie order (xla, radix, and the
+engine's stable pipeline; the kv bitonic network tie-breaks on its payload,
+which is an index everywhere in this repo, so bitonic/pallas follow too).
 
 Everything downstream (MoE routing, sampling, serving schedulers) calls
 through this module, so the paper's contribution is a first-class,
@@ -32,7 +52,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-METHODS = ("xla", "bitonic", "pallas", "imc", "merge", "auto")
+METHODS = ("xla", "bitonic", "pallas", "imc", "merge", "radix", "auto")
 
 
 def _next_pow2(n: int) -> int:
@@ -69,7 +89,10 @@ def bitonic_sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
         pad = [(0, 0)] * (x.ndim - 1) + [(0, m - n)]
         x = jnp.pad(x, pad, constant_values=_pad_value(x.dtype, descending))
         if values is not None:
-            values = jnp.pad(values, pad)
+            # out-of-range marker: pad keys can tie genuine extreme keys,
+            # and the kv network tie-breaks on ascending payload, so the
+            # pad payload must sort after every real one
+            values = jnp.pad(values, pad, constant_values=n)
     rows = x.reshape(-1, m)
     if values is not None:
         sk, sv = _apply_network_kv(rows, values.reshape(-1, m), descending)
@@ -134,22 +157,62 @@ def sort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
     if method in ("merge", "auto"):
         from repro import engine
         return engine.sort(x, axis=axis, descending=descending, method=method)
-    # method == "imc": faithful bit-serial simulation, unsigned ints only
-    from repro.core import sorter
+    if method == "radix":
+        return _radix_sort(x, axis=axis, descending=descending)
+    # method == "imc": faithful bit-serial simulation on radix-encoded keys
+    from repro.core import keycodec, sorter
     if axis not in (-1, x.ndim - 1):
         raise ValueError("imc method sorts along the last axis only")
     if not jnp.issubdtype(x.dtype, jnp.integer):
-        raise ValueError("imc method requires unsigned integer inputs")
-    width = _imc_width(x)
+        raise ValueError("imc method requires integer inputs")
+    # signed keys mis-sort in raw two's complement (the bit-serial compare
+    # reads the sign bit as the top magnitude bit): encode to the biased
+    # unsigned code first, sort, decode back
+    enc = keycodec.encode(x)
+    width = keycodec.key_bits(x.dtype)
     lead = x.shape[:-1]
-    res = sorter.sort_in_memory(x.reshape(-1, x.shape[-1]), width=width)
-    out = res.values.reshape(*lead, x.shape[-1]).astype(x.dtype)
+    res = sorter.sort_in_memory(enc.reshape(-1, x.shape[-1]), width=width)
+    out = keycodec.decode(
+        res.values.astype(keycodec.key_dtype(x.dtype)), x.dtype
+    ).reshape(*lead, x.shape[-1])
     return jnp.flip(out, axis=-1) if descending else out
 
 
-def _imc_width(x) -> int:
-    bits = jnp.iinfo(x.dtype).bits if jnp.issubdtype(x.dtype, jnp.integer) else 32
-    return min(bits, 32)
+def _radix_sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
+                values: Optional[jnp.ndarray] = None,
+                interpret: Optional[bool] = None):
+    """Stable LSD radix sort via the order-preserving key codec.
+
+    Descending order complements the encoded key, so ties still keep
+    ascending index order — the engine's tie convention — in both
+    directions.  With ``values`` the payload follows its key (argsort/topk).
+    """
+    from repro.core import keycodec
+    from repro.kernels import radix_sort as _rs
+    from repro.kernels.ops import _from_rows, _to_rows
+    if not keycodec.supports(x.dtype):
+        raise ValueError(
+            f"radix method supports {keycodec.SUPPORTED}, got {x.dtype.name}")
+    x2, lead, ax = _to_rows(x, axis)
+    enc = keycodec.encode(x2, descending=descending)
+    if values is None:
+        out = _rs.sort_blocks(enc, interpret=interpret)
+        return _from_rows(keycodec.decode(out, x.dtype,
+                                          descending=descending), lead, ax)
+    v2, _, _ = _to_rows(values, ax)
+    sk, sv = _rs.sort_kv_blocks(enc, v2, interpret=interpret)
+    return (_from_rows(keycodec.decode(sk, x.dtype, descending=descending),
+                       lead, ax),
+            _from_rows(sv, lead, ax))
+
+
+def _index_payload(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Positions along ``axis`` broadcast to ``x.shape`` (argsort payload)."""
+    ax = axis % x.ndim
+    n = x.shape[ax]
+    return jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32).reshape(
+            (1,) * ax + (n,) + (1,) * (x.ndim - 1 - ax)), x.shape)
 
 
 def argsort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
@@ -157,8 +220,10 @@ def argsort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
     if method not in METHODS:
         raise ValueError(f"method must be one of {METHODS}, got {method!r}")
     if method == "xla":
-        order = jnp.argsort(x, axis=axis)
-        return jnp.flip(order, axis=axis) if descending else order
+        # ties keep ascending index order in BOTH directions (the engine's
+        # convention): a flipped stable ascending argsort would reverse tie
+        # order, and jnp's descending comparator matches the flip-remap form
+        return jnp.argsort(x, axis=axis, stable=True, descending=descending)
     if method == "pallas":
         from repro.kernels import ops as kops
         return kops.bitonic_argsort(x, axis, descending)
@@ -169,11 +234,11 @@ def argsort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
         from repro import engine
         return engine.argsort(x, axis=axis, descending=descending,
                               method=method)
-    n = x.shape[axis % x.ndim]
-    idx = jnp.broadcast_to(
-        jnp.arange(n, dtype=jnp.int32).reshape(
-            (1,) * (axis % x.ndim) + (n,) + (1,) * (x.ndim - 1 - axis % x.ndim)),
-        x.shape)
+    idx = _index_payload(x, axis)
+    if method == "radix":
+        _, order = _radix_sort(x, axis=axis, descending=descending,
+                               values=idx)
+        return order
     _, order = bitonic_sort(x, axis=axis, descending=descending, values=idx)
     return order
 
@@ -198,8 +263,10 @@ def topk(x: jnp.ndarray, k: int, *, method: str = "xla",
     if method in ("merge", "auto"):
         from repro import engine
         return engine.topk(x, k, method=method)
-    n = x.shape[-1]
-    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), x.shape)
+    idx = _index_payload(x, -1)
+    if method == "radix":
+        sx, si = _radix_sort(x, axis=-1, descending=True, values=idx)
+        return sx[..., :k], si[..., :k]
     sx, si = bitonic_sort(x, axis=-1, descending=True, values=idx)
     return sx[..., :k], si[..., :k]
 

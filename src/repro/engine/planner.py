@@ -10,7 +10,10 @@ Hard validity rules come first — auto must never pick a backend that errors:
   * ``imc`` is never auto-selected (bit-serial validation backend).
   * ``bitonic`` / ``pallas`` whole-array paths are capped at sizes where the
     power-of-two padded row still fits a sane VMEM tile.
-  * ``merge`` requires more than one run; below that it degenerates anyway.
+  * ``merge`` requires more than one run (vs the *resolved* run length);
+    below that it degenerates anyway.
+  * ``radix`` requires a keycodec-encodable dtype ({u,i}{8,16,32}, f16,
+    bf16, f32); its pass count is priced from the encoded key width.
   * unknown / exotic dtypes fall back to ``xla`` unconditionally.
 
 Only then does the cost model arbitrate among the survivors.
@@ -47,7 +50,7 @@ _measured: Optional[cost_model.DeviceSortConstants] = None
 @dataclasses.dataclass(frozen=True)
 class Plan:
     """Executable dispatch decision for one (n, batch, dtype) workload."""
-    method: str                  # "xla" | "bitonic" | "pallas" | "merge"
+    method: str                  # "xla" | "bitonic" | "pallas" | "merge" | "radix"
     run_len: int                 # engine tile size (merge method only)
     run_method: str              # backend sorting each run
     merge_backend: str           # "xla" | "pallas" merge primitive
@@ -62,7 +65,7 @@ def constants() -> cost_model.DeviceSortConstants:
     return _measured or cost_model.DeviceSortConstants()
 
 
-def _eligible(method: str, n: int, dtype) -> bool:
+def _eligible(method: str, n: int, dtype, run_len: int) -> bool:
     if jnp.dtype(dtype).name not in _COMPARABLE:
         return method == "xla"
     if method == "bitonic":
@@ -70,7 +73,13 @@ def _eligible(method: str, n: int, dtype) -> bool:
     if method == "pallas":
         return _runs.next_pow2(n) <= MAX_PALLAS_N
     if method == "merge":
-        return n > _runs.DEFAULT_RUN_LEN
+        # a single run degenerates to "sort one tile and merge nothing":
+        # compare against the run length the plan will actually use, not
+        # the module default (8K on CPU vs the 2K default)
+        return n > run_len
+    if method == "radix":
+        from repro.core import keycodec
+        return keycodec.supports(dtype)
     return method == "xla"
 
 
@@ -81,17 +90,20 @@ def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
     rl = run_len or (_runs.DEFAULT_RUN_LEN if on_tpu() else CPU_RUN_LEN)
     consts = constants()
     interp = not on_tpu()
+    from repro.core import keycodec
+    kb = keycodec.key_bits(dtype) if keycodec.supports(dtype) else 32
     costs = {
         m: cost_model.device_sort_cost_ns(
-            m, n, batch, run_len=rl, consts=consts, pallas_interpreted=interp)
-        for m in ("xla", "bitonic", "pallas", "merge")
+            m, n, batch, run_len=rl, consts=consts, pallas_interpreted=interp,
+            key_bits=kb)
+        for m in ("xla", "bitonic", "pallas", "merge", "radix")
     }
     if requested == "auto":
-        candidates = [m for m in costs if _eligible(m, n, dtype)]
+        candidates = [m for m in costs if _eligible(m, n, dtype, rl)]
         method = min(candidates, key=costs.__getitem__)
     else:
         method = requested
-    run_method = "pallas" if (on_tpu() and _eligible("pallas", rl, dtype)) \
+    run_method = "pallas" if (on_tpu() and _eligible("pallas", rl, dtype, rl)) \
         else "xla"
     merge_backend = "pallas" if on_tpu() else "xla"
     return Plan(method=method, run_len=rl, run_method=run_method,
@@ -126,10 +138,11 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
     are good enough for dispatch ordering; calibration sharpens crossover
     points.
 
-    The Pallas probe only runs on a real TPU by default: interpret-mode
-    timings say nothing about kernel speed (the analytic constant plus the
-    interpret penalty already prices that path) and a single interpreted
-    tile sort can take minutes on CPU.
+    The Pallas probes (the whole-array bitonic AND the radix kernel) only
+    run on a real TPU by default: interpret-mode timings say nothing about
+    kernel speed (the analytic constant plus the interpret penalty already
+    prices those paths) and a single interpreted tile sort can take minutes
+    on CPU.
     """
     global _measured
     import numpy as np
@@ -152,17 +165,26 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
     bit_ns = _time_ns(lambda: bit_f(x).block_until_ready(), reps)
     mrg_ns = _time_ns(lambda: mrg_f(x).block_until_ready(), reps)
 
-    pal_c = cost_model.DeviceSortConstants().pallas
+    defaults = cost_model.DeviceSortConstants()
+    pal_c, rad_c = defaults.pallas, defaults.radix
     if include_pallas:
+        from repro.core import keycodec
+        from repro.kernels import radix_sort as _rs
         pal_f = jax.jit(lambda v: sort_api.sort(v, method="pallas"))
         pal_ns = _time_ns(lambda: pal_f(x).block_until_ready(), reps)
         pal_c = pal_ns / (elems * lg * lg)
+        rad_f = jax.jit(lambda v: sort_api.sort(v, method="radix"))
+        rad_ns = _time_ns(lambda: rad_f(x).block_until_ready(), reps)
+        passes = -(-keycodec.key_bits(x.dtype) // _rs.DIGIT_BITS)
+        rad_c = rad_ns / (elems * passes)
         if not on_tpu():  # fold into (constant x penalty) form
-            pal_c /= cost_model.DeviceSortConstants().pallas_interpret_penalty
+            pal_c /= defaults.pallas_interpret_penalty
+            rad_c /= defaults.pallas_interpret_penalty
     _measured = cost_model.DeviceSortConstants(
         xla=xla_ns / (elems * lg),
         bitonic=bit_ns / (elems * lg * lg),
         pallas=pal_c,
+        radix=rad_c,
         merge_run=xla_ns / (elems * lg),
         merge_level=mrg_ns / elems,
     )

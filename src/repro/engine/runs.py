@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 DEFAULT_RUN_LEN = 2048
 
-RUN_METHODS = ("xla", "bitonic", "pallas")
+RUN_METHODS = ("xla", "bitonic", "pallas", "radix")
 
 
 def next_pow2(n: int) -> int:
@@ -65,6 +65,12 @@ def _sort_tiles(tiles: jnp.ndarray, method: str, descending: bool,
         from repro.kernels import bitonic_sort as _bs
         return _bs.sort_blocks(tiles, descending=descending,
                                interpret=interpret)
+    if method == "radix":
+        from repro.core import keycodec
+        from repro.kernels import radix_sort as _rs
+        enc = keycodec.encode(tiles, descending=descending)
+        out = _rs.sort_blocks(enc, interpret=interpret)
+        return keycodec.decode(out, tiles.dtype, descending=descending)
     raise ValueError(f"run method must be one of {RUN_METHODS}, got {method!r}")
 
 
@@ -89,6 +95,13 @@ def _sort_tiles_kv(keys: jnp.ndarray, vals: jnp.ndarray, method: str,
         from repro.kernels import bitonic_sort as _bs
         return _bs.sort_kv_blocks(keys, vals, descending=descending,
                                   interpret=interpret)
+    if method == "radix":
+        # stable (like "xla"): safe for the engine's stable kv pipelines
+        from repro.core import keycodec
+        from repro.kernels import radix_sort as _rs
+        enc = keycodec.encode(keys, descending=descending)
+        sk, sv = _rs.sort_kv_blocks(enc, vals, interpret=interpret)
+        return keycodec.decode(sk, keys.dtype, descending=descending), sv
     raise ValueError(f"run method must be one of {RUN_METHODS}, got {method!r}")
 
 

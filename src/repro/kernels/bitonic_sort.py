@@ -71,17 +71,27 @@ def _apply_network(x: jnp.ndarray, descending: bool) -> jnp.ndarray:
 
 def _apply_network_kv(keys: jnp.ndarray, vals: jnp.ndarray,
                       descending: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Network on (rows, n) keys carrying an int payload (for argsort/topk)."""
+    """Network on (rows, n) keys carrying an int payload (for argsort/topk).
+
+    The CAS comparator is the *composite* (key, payload) order: key in the
+    requested direction, payload ascending on key ties.  Payloads are unique
+    indices everywhere in this repo, so the composite is a strict total
+    order — which makes the (otherwise unstable) bitonic network produce the
+    stable ties-keep-ascending-index result in both directions, matching the
+    engine / xla tie convention.
+    """
     rows, n = keys.shape
     for (k, j) in _substages(n):
         kv = keys.reshape(rows, n // (2 * j), 2, j)
         vv = vals.reshape(rows, n // (2 * j), 2, j)
         ka, kb = kv[:, :, 0, :], kv[:, :, 1, :]
         va, vb = vv[:, :, 0, :], vv[:, :, 1, :]
-        desc = _stage_dirs(n, k, j, descending)
-        # a-side keeps min unless this chunk is descending; ties keep a-side
-        # payload on the first slot (index-stability within the CAS).
-        a_first = jnp.where(desc, ka >= kb, ka <= kb)
+        # raw chunk directions: the final direction lives in the comparator,
+        # so chunks flagged here are exactly "reversed w.r.t. final order"
+        rev = _stage_dirs(n, k, j, False)
+        key_first = (ka > kb) if descending else (ka < kb)
+        prec = key_first | ((ka == kb) & (va < vb))
+        a_first = prec != rev       # XOR: reversed chunks take the maximum
         kf = jnp.where(a_first, ka, kb)
         ks = jnp.where(a_first, kb, ka)
         vf = jnp.where(a_first, va, vb)

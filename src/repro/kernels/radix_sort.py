@@ -1,0 +1,195 @@
+"""LSD radix sort over encoded keys — the O(n·b) digit-serial backend.
+
+ADS-IMC's CAS program is *bit*-serial: one pass over the operands per key
+bit, constant work per pass.  This kernel is the VMEM analogue one level up:
+a least-significant-digit radix sort whose passes are *digit*-serial
+(``DIGIT_BITS`` bits at a time), giving O(n·b/DIGIT_BITS) total work — the
+asymptotic the comparison backends (O(n log n) merge, O(n log^2 n) bitonic)
+cannot reach once n outgrows the key width.
+
+Keys must already be unsigned with order matching ``<`` on the source dtype
+— that is ``core/keycodec.py``'s job (sign-flip for ints, sign-magnitude ->
+lexicographic for floats, complement for descending).  This module is
+ascending-only and *stable*: equal keys keep their input order, which also
+makes the padding scheme safe (pads carry the max key and are appended
+after the payload, so stability parks them at the far end).
+
+Division of labour per digit pass (the classic three-phase LSD structure):
+
+  kernel 1 (VMEM)  per-tile digit histogram + per-element local stable rank
+                   (exclusive running count of equal digits), both from one
+                   one-hot expansion on the VPU.
+  host (jnp)       digit-major exclusive prefix-sum across all tiles of a
+                   row -> the global base offset of every (tile, digit).
+  kernel 2 (VMEM)  global position = base[digit] gathered by one-hot select
+                   + local rank.
+  host (jnp)       one stable scatter materialises the permutation (flat
+                   int32 indices), then keys/values move with gathers.
+
+The grid partitions tiles exactly like the paper partitions its SRAM macro
+(§II-B): each grid cell histograms its own partition concurrently, and the
+exclusive prefix-sum plays the role of the operand-exchange step between
+partitions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# shared with the analytic cost model so pricing and kernel never drift
+from repro.core.cost_model import RADIX_DIGIT_BITS as DIGIT_BITS
+from repro.core.cost_model import RADIX_TILE as DEFAULT_TILE
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _one_hot(d, radix: int):
+    """(br, C) int32 digits -> (br, C, radix) int32 one-hot."""
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, 1, radix), 2)
+    return (d[:, :, None] == slots).astype(jnp.int32)
+
+
+def _digit_stats_kernel(d_ref, hist_ref, rank_ref, *, radix: int):
+    """Per-tile histogram + local stable rank of each element's digit."""
+    oh = _one_hot(d_ref[...], radix)
+    hist_ref[...] = jnp.sum(oh, axis=1)
+    # exclusive running count of this digit within the tile = stable rank
+    rank_ref[...] = jnp.sum((jnp.cumsum(oh, axis=1) - oh) * oh, axis=2)
+
+
+def _global_pos_kernel(d_ref, base_ref, rank_ref, pos_ref, *, radix: int):
+    """Global slot = base offset of (tile, digit) + local rank."""
+    oh = _one_hot(d_ref[...], radix)
+    base = base_ref[...]                                  # (br, radix)
+    pos_ref[...] = jnp.sum(base[:, None, :] * oh, axis=2) + rank_ref[...]
+
+
+# ---------------------------------------------------------------------------
+# pallas wrappers
+# ---------------------------------------------------------------------------
+
+def _pick_block_rows(total_rows: int, c: int, radix: int) -> int:
+    # the (br, C, radix) one-hot tensor dominates VMEM: keep it ~2 MB
+    br = max(1, min(total_rows, (2 << 20) // max(1, c * radix * 4)))
+    while total_rows % br:
+        br -= 1
+    return br
+
+
+@functools.partial(jax.jit, static_argnames=("radix", "interpret"))
+def _digit_stats(d: jnp.ndarray, radix: int, interpret: bool):
+    rows, c = d.shape
+    br = _pick_block_rows(rows, c, radix)
+    dspec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    hspec = pl.BlockSpec((br, radix), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_digit_stats_kernel, radix=radix),
+        grid=(rows // br,),
+        in_specs=[dspec],
+        out_specs=[hspec, dspec],
+        out_shape=[jax.ShapeDtypeStruct((rows, radix), jnp.int32),
+                   jax.ShapeDtypeStruct((rows, c), jnp.int32)],
+        interpret=interpret,
+    )(d)
+
+
+@functools.partial(jax.jit, static_argnames=("radix", "interpret"))
+def _global_pos(d: jnp.ndarray, base: jnp.ndarray, rank: jnp.ndarray,
+                radix: int, interpret: bool) -> jnp.ndarray:
+    rows, c = d.shape
+    br = _pick_block_rows(rows, c, radix)
+    dspec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    bspec = pl.BlockSpec((br, radix), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_global_pos_kernel, radix=radix),
+        grid=(rows // br,),
+        in_specs=[dspec, bspec, dspec],
+        out_specs=dspec,
+        out_shape=jax.ShapeDtypeStruct((rows, c), jnp.int32),
+        interpret=interpret,
+    )(d, base, rank)
+
+
+# ---------------------------------------------------------------------------
+# host orchestration: pass loop, padding, permutation
+# ---------------------------------------------------------------------------
+
+def _pass_permutation(keys: jnp.ndarray, shift: int, tile: int,
+                      interpret: bool) -> jnp.ndarray:
+    """Stable permutation ordering ``keys`` by digit ``shift`` (gather form)."""
+    rows, n = keys.shape
+    radix = 1 << DIGIT_BITS
+    n_tiles = n // tile
+    digits = jax.lax.shift_right_logical(
+        keys, jnp.array(shift, keys.dtype)).astype(jnp.int32) & (radix - 1)
+    d = digits.reshape(rows * n_tiles, tile)
+    hist, rank = _digit_stats(d, radix, interpret)
+    # exclusive prefix-sum in digit-major, tile-minor order: every element
+    # with a smaller digit anywhere in the row, or the same digit in an
+    # earlier tile, precedes you
+    h = hist.reshape(rows, n_tiles, radix)
+    flat = jnp.swapaxes(h, 1, 2).reshape(rows, radix * n_tiles)
+    excl = jnp.cumsum(flat, axis=-1) - flat
+    base = jnp.swapaxes(excl.reshape(rows, radix, n_tiles), 1, 2)
+    pos = _global_pos(d, base.reshape(rows * n_tiles, radix), rank,
+                      radix, interpret).reshape(rows, n)
+    # stable scatter: invert the position map once, then everything moves
+    # by gathers (XLA CPU scatters serialise; one int32 scatter is the floor)
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (rows, n))
+    inv = jnp.zeros((rows, n), jnp.int32).at[
+        jnp.arange(rows, dtype=jnp.int32)[:, None], pos].set(src)
+    return inv
+
+
+def _padded(keys, vals, tile):
+    rows, n = keys.shape
+    tile = min(tile, max(8, n))
+    m = -(-n // tile) * tile
+    if m != n:
+        maxkey = jnp.array((1 << jnp.iinfo(keys.dtype).bits) - 1, keys.dtype)
+        keys = jnp.pad(keys, ((0, 0), (0, m - n)), constant_values=maxkey)
+        if vals is not None:
+            # out-of-range marker; stability keeps pads behind real
+            # elements even when genuine keys equal the pad key
+            vals = jnp.pad(vals, ((0, 0), (0, m - n)),
+                           constant_values=jnp.array(n, vals.dtype))
+    return keys, vals, tile
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sort_blocks(keys: jnp.ndarray, *, tile: int = DEFAULT_TILE,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Stable ascending LSD radix sort of each row of unsigned (rows, n)."""
+    interp = _interpret_default() if interpret is None else interpret
+    rows, n = keys.shape
+    keys, _, tile = _padded(keys, None, tile)
+    for shift in range(0, jnp.iinfo(keys.dtype).bits, DIGIT_BITS):
+        inv = _pass_permutation(keys, shift, tile, interp)
+        keys = jnp.take_along_axis(keys, inv, axis=-1)
+    return keys[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sort_kv_blocks(keys: jnp.ndarray, vals: jnp.ndarray, *,
+                   tile: int = DEFAULT_TILE,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Key-value variant: payloads ride their keys through every pass."""
+    interp = _interpret_default() if interpret is None else interpret
+    rows, n = keys.shape
+    keys, vals, tile = _padded(keys, vals, tile)
+    for shift in range(0, jnp.iinfo(keys.dtype).bits, DIGIT_BITS):
+        inv = _pass_permutation(keys, shift, tile, interp)
+        keys = jnp.take_along_axis(keys, inv, axis=-1)
+        vals = jnp.take_along_axis(vals, inv, axis=-1)
+    return keys[:, :n], vals[:, :n]

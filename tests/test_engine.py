@@ -193,7 +193,7 @@ def test_kway_merge_ragged_lengths():
 @pytest.mark.parametrize("dtype", [np.float32, np.int32, np.uint32])
 def test_auto_never_selects_invalid_backend(n, dtype):
     method = engine.choose_method(n, 2, jnp.dtype(dtype))
-    assert method in ("xla", "bitonic", "pallas", "merge")
+    assert method in ("xla", "bitonic", "pallas", "merge", "radix")
     x = _rand(np.random.default_rng(n), (2, min(n, 50000)), dtype)
     out = np.array(sort_api.sort(jnp.asarray(x), method="auto"))
     np.testing.assert_array_equal(out, np.sort(x, -1))
@@ -204,6 +204,20 @@ def test_auto_respects_whole_array_caps():
     plan = planner.choose(big, 1)
     assert plan.method in ("xla", "merge")
     assert plan.costs["merge"] < plan.costs["bitonic"]
+
+
+def test_choose_merge_eligibility_uses_resolved_run_len():
+    """Regression: _eligible('merge') compared n against DEFAULT_RUN_LEN
+    (2048) while the plan ran with the CPU run length (8192), so auto could
+    pick a degenerate single-run merge for 2048 < n <= 8192."""
+    plan = planner.choose(4096, 1)
+    assert plan.method != "merge"
+    assert plan.run_len == (runs.DEFAULT_RUN_LEN if planner.on_tpu()
+                            else planner.CPU_RUN_LEN)
+    # with an explicit small run_len, 4096 is multiple runs again: merge
+    # must be a *candidate* (picked or not is the cost model's call)
+    assert planner._eligible("merge", 4096, jnp.dtype(jnp.float32), 1024)
+    assert not planner._eligible("merge", 4096, jnp.dtype(jnp.float32), 8192)
 
 
 def test_plan_is_executable():
@@ -220,10 +234,11 @@ def test_calibrate_updates_constants():
         c = planner.calibrate(tile_n=256, batch=8, reps=1,
                               include_pallas=False)
         assert c.xla > 0 and c.bitonic > 0 and c.merge_level > 0
+        assert c.radix > 0     # analytic default kept off-TPU
         assert planner.constants() is c
         # post-calibration dispatch still returns an executable method
         assert planner.choose(100000, 1).method in (
-            "xla", "bitonic", "pallas", "merge")
+            "xla", "bitonic", "pallas", "merge", "radix")
     finally:
         planner.reset_calibration()
     from repro.core import cost_model

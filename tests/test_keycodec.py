@@ -1,0 +1,90 @@
+"""keycodec: order-preserving encode/decode round-trip + monotonicity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import keycodec
+
+
+def _samples(dtype, rng, n=512):
+    """Random values plus every adversarial corner the dtype has."""
+    d = jnp.dtype(dtype)
+    if d.name == "bfloat16":
+        x = jnp.asarray(rng.standard_normal(n) * 100, jnp.bfloat16)
+        extra = jnp.asarray([0.0, -0.0, jnp.inf, -jnp.inf, 1e-30, -1e-30],
+                            jnp.bfloat16)
+        return jnp.concatenate([x, extra])
+    if jnp.issubdtype(d, jnp.floating):
+        vals = np.concatenate([
+            (rng.standard_normal(n) * 100).astype(d.name),
+            np.array([0.0, -0.0, np.inf, -np.inf, 1e-4, -1e-4], d.name)])
+        return jnp.asarray(vals)
+    info = np.iinfo(d.name)
+    vals = np.concatenate([
+        rng.integers(info.min, info.max, n, dtype=d.name, endpoint=True),
+        np.array([info.min, info.max, 0], d.name)])
+    return jnp.asarray(vals)
+
+
+@pytest.mark.parametrize("dtype", keycodec.SUPPORTED)
+@pytest.mark.parametrize("descending", [False, True])
+def test_roundtrip_bit_exact(dtype, descending):
+    x = _samples(dtype, np.random.default_rng(1))
+    enc = keycodec.encode(x, descending=descending)
+    assert enc.dtype == keycodec.key_dtype(dtype)
+    back = keycodec.decode(enc, dtype, descending=descending)
+    assert back.dtype == x.dtype
+    assert np.asarray(back).tobytes() == np.asarray(x).tobytes()
+
+
+@pytest.mark.parametrize("dtype", keycodec.SUPPORTED)
+@pytest.mark.parametrize("descending", [False, True])
+def test_encoding_is_monotone(dtype, descending):
+    """x < y in source order <=> encode(x) < encode(y) as unsigned ints
+    (strictly reversed for descending)."""
+    x = _samples(dtype, np.random.default_rng(2))
+    enc = np.asarray(keycodec.encode(x, descending=descending)
+                     ).astype(np.int64)
+    # sort by source value through a wider dtype on the host (jnp's astype
+    # would truncate to 32 bits with x64 disabled; ml_dtypes handles bf16)
+    as_f = np.asarray(x).astype(
+        np.float64 if jnp.issubdtype(x.dtype, jnp.floating) else np.int64)
+    order = np.argsort(as_f, kind="stable")
+    es = enc[order]
+    # equal source values must map to equal keys except the documented
+    # -0.0 < +0.0 refinement, so compare through the strictly-increasing
+    # source values only
+    src = as_f[order]
+    strict = np.diff(src) > 0
+    steps = np.diff(es)[strict]
+    assert (steps < 0).all() if descending else (steps > 0).all()
+
+
+def test_float_total_order_refines_ieee_zero():
+    """-0.0 encodes strictly below +0.0 (documented total-order refinement)."""
+    for dt in (jnp.float16, jnp.bfloat16, jnp.float32):
+        neg = int(keycodec.encode(jnp.array(-0.0, dt)))
+        pos = int(keycodec.encode(jnp.array(0.0, dt)))
+        assert neg + 1 == pos
+
+
+def test_signed_encode_is_bias_flip():
+    """int encoding is the excess-2^(b-1) code: min -> 0, -1 -> 2^(b-1)-1."""
+    x = jnp.asarray([-128, -1, 0, 127], jnp.int8)
+    enc = np.asarray(keycodec.encode(x))
+    np.testing.assert_array_equal(enc, [0, 127, 128, 255])
+
+
+def test_unsupported_dtype_raises():
+    with pytest.raises(ValueError, match="keycodec supports"):
+        keycodec.encode(jnp.zeros(4, jnp.bool_))
+    with pytest.raises(ValueError, match="must be uint32"):
+        keycodec.decode(jnp.zeros(4, jnp.uint16), jnp.float32)
+
+
+def test_key_bits_match_storage_width():
+    assert keycodec.key_bits(jnp.int8) == 8
+    assert keycodec.key_bits(jnp.bfloat16) == 16
+    assert keycodec.key_bits(jnp.float32) == 32
+    assert not keycodec.supports(jnp.bool_)
+    assert keycodec.supports(jnp.float16)

@@ -1,0 +1,190 @@
+"""Pallas LSD radix sort: kernel-level + sort_api wiring + engine run backend."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import keycodec, sort_api
+from repro.kernels import radix_sort
+
+
+def _rand(rng, shape, dtype):
+    if np.issubdtype(dtype, np.floating):
+        return (rng.standard_normal(shape) * 100).astype(dtype)
+    info = np.iinfo(dtype)
+    return rng.integers(info.min, info.max, size=shape, dtype=dtype,
+                        endpoint=True)
+
+
+# ---------------------------------------------------------------------------
+# kernel level: unsigned encoded keys
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.uint8, np.uint16, np.uint32])
+@pytest.mark.parametrize("n", [8, 200, 256, 1000])
+def test_sort_blocks_matches_np(dtype, n):
+    rng = np.random.default_rng(n)
+    x = _rand(rng, (3, n), dtype)
+    out = np.asarray(radix_sort.sort_blocks(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.sort(x, -1))
+
+
+def test_sort_blocks_multi_tile_rows():
+    """n spanning many tiles exercises the cross-tile prefix-sum."""
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (2, 5 * radix_sort.DEFAULT_TILE + 17), np.uint32)
+    out = np.asarray(radix_sort.sort_blocks(jnp.asarray(x)))
+    np.testing.assert_array_equal(out, np.sort(x, -1))
+
+
+def test_sort_kv_blocks_is_stable():
+    """Heavy ties: payload order within equal keys must be input order."""
+    rng = np.random.default_rng(7)
+    k = rng.integers(0, 4, (2, 3000)).astype(np.uint32)
+    v = np.broadcast_to(np.arange(3000, dtype=np.int32), k.shape).copy()
+    sk, sv = radix_sort.sort_kv_blocks(jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(k, -1))
+    for r in range(k.shape[0]):
+        np.testing.assert_array_equal(np.asarray(sv)[r],
+                                      np.argsort(k[r], kind="stable"))
+
+
+def test_padding_survives_max_keys():
+    """Genuine all-ones keys collide with the pad key; stability must keep
+    the real elements (earlier positions) and drop the pads."""
+    n = 300                                # pads to 2 tiles of 256
+    k = np.full((1, n), np.uint32(0xFFFFFFFF))
+    v = np.arange(n, dtype=np.int32)[None, :]
+    sk, sv = radix_sort.sort_kv_blocks(jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_array_equal(np.asarray(sk), k)
+    np.testing.assert_array_equal(np.asarray(sv), v)
+
+
+# ---------------------------------------------------------------------------
+# sort_api method="radix": codec + kernel end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.int8, np.int16, np.int32, np.uint16,
+                                   np.uint32, np.float16, np.float32])
+@pytest.mark.parametrize("descending", [False, True])
+def test_radix_sort_all_dtypes(dtype, descending):
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (2, 777), dtype)
+    out = np.asarray(sort_api.sort(jnp.asarray(x), method="radix",
+                                   descending=descending))
+    ref = np.sort(x, -1)
+    if descending:
+        ref = np.flip(ref, -1)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_radix_sort_bfloat16():
+    x = jnp.asarray(np.random.default_rng(13).standard_normal((2, 300)),
+                    jnp.bfloat16)
+    out = sort_api.sort(x, method="radix")
+    ref = jnp.sort(x, axis=-1)
+    assert np.asarray(out).tobytes() == np.asarray(ref).tobytes()
+
+
+def test_radix_sort_negative_extremes():
+    x = np.array([[3, -1, 2, -5, 0, 7, -2, 1,
+                   np.iinfo(np.int32).min, np.iinfo(np.int32).max]], np.int32)
+    out = np.asarray(sort_api.sort(jnp.asarray(x), method="radix"))
+    np.testing.assert_array_equal(out, np.sort(x, -1))
+
+
+def test_radix_sort_axis_and_lead_dims():
+    x = _rand(np.random.default_rng(17), (300, 2, 3), np.float32)
+    out = np.asarray(sort_api.sort(jnp.asarray(x), axis=0, method="radix"))
+    np.testing.assert_array_equal(out, np.sort(x, 0))
+
+
+def test_radix_sort_orders_signed_zero():
+    """The codec's total order: every -0.0 lands before every +0.0."""
+    x = jnp.asarray([0.0, 1.0, -0.0, 0.0, -0.0, -1.0], jnp.float32)
+    out = np.asarray(sort_api.sort(x, method="radix")).view(np.uint32)
+    np.testing.assert_array_equal(
+        out, np.array([-1.0, -0.0, -0.0, 0.0, 0.0, 1.0],
+                      np.float32).view(np.uint32))
+
+
+@pytest.mark.parametrize("descending", [False, True])
+def test_radix_argsort_stable_ties(descending):
+    rng = np.random.default_rng(19)
+    x = rng.integers(0, 5, (2, 1500)).astype(np.int32)
+    order = np.asarray(sort_api.argsort(jnp.asarray(x), method="radix",
+                                        descending=descending))
+    n = x.shape[-1]
+    if descending:
+        ref = n - 1 - np.flip(np.argsort(np.flip(x, -1), -1, kind="stable"),
+                              -1)
+    else:
+        ref = np.argsort(x, -1, kind="stable")
+    np.testing.assert_array_equal(order, ref)
+
+
+def test_radix_topk_matches_lax():
+    import jax
+    x = jnp.asarray(np.random.default_rng(23).standard_normal((2, 400)),
+                    jnp.float32)
+    vr, _ = jax.lax.top_k(x, 9)
+    v, i = sort_api.topk(x, 9, method="radix")
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(
+        np.take_along_axis(np.asarray(x), np.asarray(i), -1), np.asarray(vr))
+
+
+def test_radix_rejects_uncodable_dtype():
+    with pytest.raises(ValueError, match="radix method supports"):
+        sort_api.sort(jnp.zeros(8, jnp.bool_), method="radix")
+
+
+# ---------------------------------------------------------------------------
+# engine integration: radix as a run backend + planner wiring
+# ---------------------------------------------------------------------------
+
+def test_runs_radix_backend():
+    from repro.engine import runs
+    rng = np.random.default_rng(29)
+    x = rng.integers(-1000, 1000, (2, 2000)).astype(np.int32)
+    rg = np.asarray(runs.generate_runs(jnp.asarray(x), 512, method="radix"))
+    assert rg.shape == (2, 4, 512)
+    pad = np.full((2, 48), np.iinfo(np.int32).max, np.int32)
+    ref = np.concatenate([x, pad], -1).reshape(2, 4, 512)
+    np.testing.assert_array_equal(rg, np.sort(ref, -1))
+
+
+def test_engine_merge_with_radix_runs():
+    from repro.engine import merge as engine_merge
+    from repro.engine import runs
+    rng = np.random.default_rng(31)
+    x = rng.integers(-1000, 1000, (1, 4000)).astype(np.int32)
+    rg = runs.generate_runs(jnp.asarray(x), 1024, method="radix")
+    out = np.asarray(engine_merge.merge_runs(rg))[0, :4000]
+    np.testing.assert_array_equal(out, np.sort(x[0]))
+
+
+def test_planner_prices_radix_and_can_select_it():
+    from repro.core import cost_model
+    from repro.engine import planner
+    plan = planner.choose(1 << 20, 1, jnp.float32)
+    assert "radix" in plan.costs and plan.costs["radix"] > 0
+    # 8-bit keys cost a quarter of the passes of 32-bit keys
+    assert planner.choose(1 << 20, 1, jnp.uint8).costs["radix"] == \
+        pytest.approx(plan.costs["radix"] / 4)
+    # with kernel-speed constants (no interpret penalty), the O(n·b) path
+    # must win at sizes where log2(n) dwarfs the pass count — i.e. auto
+    # CAN dispatch to radix when it is the cheapest valid backend
+    c = {m: cost_model.device_sort_cost_ns(
+            m, 1 << 20, run_len=2048, pallas_interpreted=False)
+         for m in ("xla", "bitonic", "pallas", "merge", "radix")}
+    assert min(c, key=c.get) == "radix"
+    assert planner._eligible("radix", 1 << 20, jnp.dtype(jnp.float32), 2048)
+    assert not planner._eligible("radix", 1 << 20, jnp.dtype(jnp.float64),
+                                 2048)
+
+
+def test_sort_api_auto_still_valid_with_radix_candidate():
+    x = jnp.asarray(np.random.default_rng(37).integers(-50, 50, (2, 3000)),
+                    jnp.int32)
+    out = np.asarray(sort_api.sort(x, method="auto"))
+    np.testing.assert_array_equal(out, np.sort(np.asarray(x), -1))
