@@ -17,7 +17,7 @@ import time
 
 import numpy as np
 
-from repro.core import cas, cost_model, network
+from repro.core import cas, cost_model
 from repro.core.sorter import sort_in_memory
 
 

@@ -44,7 +44,7 @@ sv, sseg = np.array(sv), np.array(sseg)
 for s in range(5):
     grp = sv[sseg == s]
     assert (np.diff(grp) >= 0).all()
-print(f"  5 ragged groups sorted independently in one pass: ok")
+print("  5 ragged groups sorted independently in one pass: ok")
 
 perm, splits = segmented.group_tokens_by_expert(
     jnp.asarray(rng.integers(0, 8, 256).astype(np.int32)), 8)

@@ -4,5 +4,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# lint first (cheap, config in ruff.toml); CI runs the same check as its
+# own job, so keep local and CI gates identical
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+else
+  echo "[tier1] ruff not installed; skipping lint (CI still runs it)" >&2
+fi
 # --durations=10 surfaces the suite's hot spots (it runs ~9 min on CPU CI)
 exec python -m pytest -x -q --durations=10 "$@"

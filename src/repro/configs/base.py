@@ -26,7 +26,7 @@ class MoEConfig:
     d_ff_expert: int
     n_shared_experts: int = 0
     capacity_factor: float = 1.25
-    router_method: str = "bitonic"      # sort_api backend for expert top-k
+    router_method: str = "bitonic"      # registered sort backend for expert top-k
     first_dense_layers: int = 0         # leading layers use a dense MLP
 
 

@@ -1,6 +1,14 @@
-"""ADS-IMC core: in-memory sorting as a composable JAX feature."""
+"""ADS-IMC core: in-memory sorting as a composable JAX feature.
+
+API v2 lives in :mod:`repro.core.sortspec` (SortSpec + backend registry)
+with the front door in :mod:`repro.sort`; the re-exported ``sort`` /
+``argsort`` / ``topk`` here are the v1 shims kept for compatibility.
+"""
 from repro.core.sort_api import sort, argsort, topk, top_p_mask, bitonic_sort
+from repro.core.sortspec import (Capabilities, SortBackend, SortSpec,
+                                 register_backend, sort_defaults)
 from repro.core import network, cost_model
 
 __all__ = ["sort", "argsort", "topk", "top_p_mask", "bitonic_sort",
-           "network", "cost_model"]
+           "Capabilities", "SortBackend", "SortSpec", "register_backend",
+           "sort_defaults", "network", "cost_model"]

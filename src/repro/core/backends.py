@@ -1,0 +1,255 @@
+"""The six built-in SortBackend implementations.
+
+Each backend is a thin adapter from the registry's rows-form contract
+(``(rows, n)``, last axis) onto an existing engine: the jnp/XLA reference,
+the word-parallel bitonic network, the in-VMEM Pallas kernel, the
+cycle-accurate bit-serial simulator, the out-of-core run/merge hierarchy,
+and the LSD radix kernels.  Kernel modules are imported lazily inside the
+methods so importing the registry stays cheap and cycle-free.
+
+Capability declarations here are load-bearing: ``repro.engine.planner``
+derives *all* auto-dispatch eligibility from them (no per-backend rules in
+the planner), and tests/test_sortspec.py sweeps every claim for truth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import keycodec as _keycodec
+from repro.core.sortspec import (Capabilities, SortBackend, next_pow2,
+                                 register_backend)
+
+# whole-array network caps: beyond these the power-of-two padded row stops
+# being a reasonable VMEM-resident tile and the hierarchy should take over
+MAX_BITONIC_N = 1 << 14
+MAX_PALLAS_N = 1 << 16
+
+# dtypes every comparison backend's min/max handles (NaN-free floats assumed)
+COMPARABLE_DTYPES = frozenset({
+    "float32", "bfloat16", "float16", "int32", "uint32",
+    "int16", "uint16", "int8", "uint8"})
+
+_INT_DTYPES = frozenset({"int8", "int16", "int32",
+                         "uint8", "uint16", "uint32"})
+
+
+def _gather_kv(keys, values, order):
+    """(sorted keys, permuted payload) from an argsort permutation.
+
+    The bitonic/pallas kv networks pad with (sentinel key, position ``n``)
+    pairs, which only sort *after* every genuine element when the payload is
+    an index array — an arbitrary user payload can tie or exceed the pad
+    marker and be displaced by it.  So the kv front doors of those backends
+    sort a (key, index) composite and gather both sides instead.
+    """
+    return (jnp.take_along_axis(keys, order, axis=-1),
+            jnp.take_along_axis(values, order, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# xla — the "off-memory" reference point
+# ---------------------------------------------------------------------------
+
+@register_backend
+class XlaBackend(SortBackend):
+    """jnp.sort / lax.top_k with the repo's grad-safe VJP and the unified
+    tie convention (ties keep ascending index order in both directions)."""
+    name = "xla"
+    capabilities = Capabilities(dtypes=None, stable=True, substrate="host")
+
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.core.sort_api import _xla_sort
+        return _xla_sort(rows, -1, descending)
+
+    def sort_kv(self, keys, values, *, descending=False, plan=None,
+                interpret=None):
+        order = self.argsort(keys, descending=descending)
+        return (jnp.take_along_axis(keys, order, axis=-1),
+                jnp.take_along_axis(values, order, axis=-1))
+
+    def argsort(self, rows, *, descending=False, plan=None, interpret=None):
+        # jnp's descending comparator == the flip-remap stable form: ties
+        # keep ascending index order in BOTH directions
+        return jnp.argsort(rows, axis=-1, stable=True, descending=descending)
+
+    def topk(self, rows, k, *, plan=None, interpret=None):
+        return jax.lax.top_k(rows, k)
+
+
+# ---------------------------------------------------------------------------
+# bitonic — the paper's network, word-parallel in pure jnp
+# ---------------------------------------------------------------------------
+
+@register_backend
+class BitonicBackend(SortBackend):
+    name = "bitonic"
+    capabilities = Capabilities(dtypes=COMPARABLE_DTYPES, stable=False,
+                                max_n=MAX_BITONIC_N, substrate="host")
+
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.core.sort_api import bitonic_sort
+        return bitonic_sort(rows, axis=-1, descending=descending)
+
+    def sort_kv(self, keys, values, *, descending=False, plan=None,
+                interpret=None):
+        return _gather_kv(keys, values,
+                          self.argsort(keys, descending=descending))
+
+    def argsort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.core.sort_api import bitonic_sort
+        idx = jnp.broadcast_to(
+            jnp.arange(rows.shape[-1], dtype=jnp.int32), rows.shape)
+        _, order = bitonic_sort(rows, axis=-1, descending=descending,
+                                values=idx)
+        return order
+
+
+# ---------------------------------------------------------------------------
+# pallas — the whole network on VMEM-resident tiles
+# ---------------------------------------------------------------------------
+
+@register_backend
+class PallasBackend(SortBackend):
+    name = "pallas"
+    capabilities = Capabilities(dtypes=COMPARABLE_DTYPES, stable=False,
+                                max_n=MAX_PALLAS_N, substrate="vmem")
+
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.kernels import ops as kops
+        return kops.bitonic_sort(rows, -1, descending, interpret)
+
+    def argsort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.kernels import ops as kops
+        return kops.bitonic_argsort(rows, -1, descending, interpret)
+
+    def sort_kv(self, keys, values, *, descending=False, plan=None,
+                interpret=None):
+        return _gather_kv(keys, values,
+                          self.argsort(keys, descending=descending,
+                                       interpret=interpret))
+
+    def topk(self, rows, k, *, plan=None, interpret=None):
+        from repro.kernels import ops as kops
+        # positional: custom_vjp entry points don't take keyword args
+        return kops.bitonic_topk(rows, k, kops._TOPK_CHUNK, interpret)
+
+
+# ---------------------------------------------------------------------------
+# imc — the faithful bit-serial simulation
+# ---------------------------------------------------------------------------
+
+@register_backend
+class ImcBackend(SortBackend):
+    """The 28-cycle gate program on the simulated 6T SRAM array.  Validation
+    and benchmarking only (never auto-dispatched); keys go through the
+    order-preserving codec so signed ints sort correctly."""
+    name = "imc"
+    capabilities = Capabilities(dtypes=_INT_DTYPES, stable=False,
+                                supports_kv=False, supports_topk=False,
+                                supports_segments=False, auto_dispatch=False,
+                                substrate="sram")
+
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.core import keycodec, sorter
+        self.check_dtype(rows.dtype)
+        enc = keycodec.encode(rows)
+        res = sorter.sort_in_memory(enc, width=keycodec.key_bits(rows.dtype))
+        out = keycodec.decode(
+            res.values.astype(keycodec.key_dtype(rows.dtype)), rows.dtype)
+        return jnp.flip(out, axis=-1) if descending else out
+
+    def argsort(self, rows, *, descending=False, plan=None, interpret=None):
+        """Argsort on the bit-serial sorter via an encoded (key, index)
+        composite: the codec key in the high bits, the position in the low
+        bits.  Composites are unique, so the (unstable) network still yields
+        the engine's tie convention — ties keep ascending index order — in
+        both directions (``descending`` complements only the key bits).
+        """
+        from repro.core import keycodec, sorter
+        self.check_dtype(rows.dtype)
+        n = rows.shape[-1]
+        idx_bits = max(1, (n - 1).bit_length())
+        if keycodec.key_bits(rows.dtype) + idx_bits > 32:
+            raise ValueError(
+                f"imc argsort packs (key, index) into one word: "
+                f"key_bits({jnp.dtype(rows.dtype).name})="
+                f"{keycodec.key_bits(rows.dtype)} + index bits({n})="
+                f"{idx_bits} exceeds the 32-bit array word; use a narrower "
+                f"key dtype or a smaller n")
+        # the CAS gate program is built for power-of-two word widths
+        width = next_pow2(keycodec.key_bits(rows.dtype) + idx_bits)
+        enc = keycodec.encode(rows, descending=descending).astype(jnp.uint32)
+        comp = (enc << idx_bits) | jnp.arange(n, dtype=jnp.uint32)[None, :]
+        res = sorter.sort_in_memory(comp, width=width)
+        return (res.values & ((1 << idx_bits) - 1)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# merge — the hierarchical out-of-core engine
+# ---------------------------------------------------------------------------
+
+@register_backend
+class MergeBackend(SortBackend):
+    """Tiled run generation + merge-path merge tree (repro.engine)."""
+    name = "merge"
+    capabilities = Capabilities(dtypes=COMPARABLE_DTYPES, stable=False,
+                                substrate="hierarchy")
+
+    def eligible(self, n, dtype, run_len=None):
+        # a single run degenerates to "sort one tile and merge nothing"
+        if run_len is not None and n <= run_len:
+            return False
+        return super().eligible(n, dtype, run_len)
+
+    def _plan(self, rows, plan, run_len=None):
+        if plan is not None:
+            return plan
+        from repro.engine import planner
+        return planner.choose_cached(rows.shape[-1], rows.shape[0],
+                                     rows.dtype, requested="merge",
+                                     run_len=run_len)
+
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro import engine
+        return engine.merge_sort_rows(rows, descending=descending,
+                                      plan=self._plan(rows, plan),
+                                      interpret=interpret)
+
+    def sort_kv(self, keys, values, *, descending=False, plan=None,
+                interpret=None):
+        from repro import engine
+        return engine.merge_sort_rows_kv(keys, values, descending=descending,
+                                         plan=self._plan(keys, plan),
+                                         interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# radix — digit-serial LSD radix sort over encoded keys
+# ---------------------------------------------------------------------------
+
+@register_backend
+class RadixBackend(SortBackend):
+    """Stable LSD radix sort (kernels/radix_sort.py) through the
+    order-preserving key codec; ``descending`` complements the encoded key,
+    so ties keep ascending index order in both directions."""
+    name = "radix"
+    capabilities = Capabilities(dtypes=frozenset(_keycodec.SUPPORTED),
+                                stable=True, substrate="vmem")
+
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.core import keycodec
+        from repro.kernels import radix_sort as _rs
+        self.check_dtype(rows.dtype)
+        enc = keycodec.encode(rows, descending=descending)
+        out = _rs.sort_blocks(enc, interpret=interpret)
+        return keycodec.decode(out, rows.dtype, descending=descending)
+
+    def sort_kv(self, keys, values, *, descending=False, plan=None,
+                interpret=None):
+        from repro.core import keycodec
+        from repro.kernels import radix_sort as _rs
+        self.check_dtype(keys.dtype)
+        enc = keycodec.encode(keys, descending=descending)
+        sk, sv = _rs.sort_kv_blocks(enc, values, interpret=interpret)
+        return keycodec.decode(sk, keys.dtype, descending=descending), sv

@@ -9,7 +9,7 @@ scale the same structure maps 1:1 onto a device mesh:
     temp-row exchange       ->  jax.lax.ppermute shard exchange (ICI)
 
 Algorithm: odd-even transposition merge over D devices.  Each device first
-sorts its local shard (any sort_api backend), then D rounds of
+sorts its local shard (any registered backend), then D rounds of
 neighbour-exchange + bitonic-merge-split.  After D rounds the concatenation
 of shards in device order is globally sorted — the standard block-sorting
 correctness result.
@@ -20,14 +20,11 @@ Eq. 3-4 analogue that shows up in the §Roofline collective term.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.core import sort_api
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.5 exports shard_map at the top level
     _shard_map = jax.shard_map
@@ -76,24 +73,26 @@ def _round_permutation(n_dev: int, even_round: bool):
 
 
 def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
-                     local_method: str = "xla") -> jnp.ndarray:
+                     local_method: Optional[str] = "xla") -> jnp.ndarray:
     """Globally sort a 1-D array sharded over ``axis_name`` of ``mesh``.
 
     Length must divide evenly by the axis size.  Returns the globally-sorted
     array with the same sharding.
 
-    ``local_method`` accepts every ``sort_api`` backend including ``"merge"``
-    and ``"auto"``: the mesh path composes with the out-of-core engine, whose
+    ``local_method`` accepts every registered backend name including
+    ``"merge"`` and ``"auto"`` (or ``None`` for the ambient ``sort_defaults``
+    method): the mesh path composes with the out-of-core engine, whose
     planner prices the *shard* size it sees inside the shard_map — so a
     vocab-scale shard gets tiled run generation + merge tree while a small
     one stays on a single-tile backend.
     """
+    from repro import sort as _front
     n_dev = mesh.shape[axis_name]
     if x.shape[-1] % n_dev:
         raise ValueError(f"array length {x.shape[-1]} must divide {n_dev}")
 
     def local(xs):
-        xs = sort_api.sort(xs, method=local_method)
+        xs = _front.sort(xs, method=local_method)
         my = jax.lax.axis_index(axis_name)
         for r in range(n_dev):
             pairs = _round_permutation(n_dev, r % 2 == 0)

@@ -41,8 +41,7 @@ import dataclasses
 import math
 from typing import List
 
-from repro.core.imc_array import (Movement, Op, OpKind, ROW_A, ROW_B, ROW_ONE,
-                                  ROW_ZERO)
+from repro.core.imc_array import Movement, Op, OpKind, ROW_A, ROW_B
 
 
 @dataclasses.dataclass(frozen=True)

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import jax.numpy as jnp
 

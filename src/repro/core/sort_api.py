@@ -1,58 +1,47 @@
-"""Public sorting API — the paper's technique as a composable JAX feature.
+"""Legacy public sorting API — deprecation shims over ``repro.sort``.
 
-One entry point, seven interchangeable backends:
+This module was the original string-dispatched front door.  The system's
+API v2 (see README §API v2) replaces it with one spec-driven entry point:
 
-  ``xla``      jnp.sort / jax.lax.top_k — the "off-memory" reference point.
-  ``bitonic``  the paper's Batcher network executed word-parallel in pure
-               jnp (every CAS = vector min/max). Beyond-paper: lifts the
-               bit-serial constraint, keeps the oblivious schedule.
-  ``pallas``   the in-VMEM Pallas kernel (kernels/bitonic_sort.py): tiles are
-               read from HBM once, the whole network runs on VMEM-resident
-               data — the TPU analogue of "sorting inside the memory array".
-  ``imc``      the faithful bit-serial simulation (core/sorter.py): the
-               28-cycle gate program on the simulated 6T SRAM array.
-               Small integer keys (any signedness via keycodec); used for
-               validation and benchmarks.
-  ``merge``    the hierarchical out-of-core engine (repro.engine): tiled run
-               generation + merge-path merge tree for arrays bigger than one
-               VMEM tile — O(n log n) work where the whole-array network
-               pays O(n log^2 n).
-  ``radix``    digit-serial LSD radix sort (kernels/radix_sort.py) over
-               keycodec-encoded keys — the VMEM analogue of the paper's
-               bit-serial CAS program, O(n·b) work, stable.
-  ``auto``     cost-model dispatch (repro.engine.planner): picks the
-               cheapest *valid* backend from (n, batch, dtype).
+  * :mod:`repro.core.sortspec` — ``SortSpec`` + the ``SortBackend``
+    registry (``@register_backend``): backends declare Capabilities and the
+    planner dispatches from those declarations alone.
+  * :mod:`repro.sort` — ``run(spec, x)`` plus ``sort`` / ``argsort`` /
+    ``topk`` / ``sort_kv`` / ``segment_sort`` wrappers and the
+    ``sort_defaults`` ambient-configuration context.
 
-Key encoding (core/keycodec.py) is shared plumbing: ``imc`` and ``radix``
-both route keys through the same order-preserving unsigned encoding
-(sign-bit flip for ints, sign-magnitude -> lexicographic for floats), so
-signed and float keys sort correctly on every radix-ordered path.
+Every historical call form here still works and forwards to a spec, so
+downstream code migrates at its own pace; new code should import
+``repro.sort`` directly.  The implementation pieces other modules share —
+the word-parallel bitonic network entry and the grad-safe XLA sort — stay
+here, un-deprecated (kernels and backends import them).
 
-Supported key dtypes by backend:
-
-  xla / bitonic / pallas / merge   any comparable dtype (NaN-free floats)
-  radix                            uint8/16/32, int8/16/32, f16, bf16, f32
-  imc                              int8/16/32, uint8/16/32
-
-Tie convention: ``argsort`` ties keep *ascending* index order in both
-directions on every backend that defines tie order (xla, radix, and the
-engine's stable pipeline; the kv bitonic network tie-breaks on its payload,
-which is an index everywhere in this repo, so bitonic/pallas follow too).
-
-Everything downstream (MoE routing, sampling, serving schedulers) calls
-through this module, so the paper's contribution is a first-class,
-swappable component of the framework.
+Tie convention (unchanged): ``argsort`` ties keep *ascending* index order
+in both directions on every backend.
 """
 from __future__ import annotations
 
 import functools
-import math
+import warnings
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+# kept for backwards compatibility: the v1 method strings ("auto" plus the
+# built-in backends).  The live list is repro.core.sortspec.backend_names().
 METHODS = ("xla", "bitonic", "pallas", "imc", "merge", "radix", "auto")
+
+_warned: set = set()
+
+
+def _deprecated(name: str) -> None:
+    if name not in _warned:
+        _warned.add(name)
+        warnings.warn(
+            f"repro.core.sort_api.{name} is deprecated; use "
+            f"repro.sort.{name} (SortSpec front door) instead",
+            DeprecationWarning, stacklevel=3)
 
 
 def _next_pow2(n: int) -> int:
@@ -142,148 +131,52 @@ def _xla_sort_bwd(axis, descending, order, g):
 _xla_sort.defvjp(_xla_sort_fwd, _xla_sort_bwd)
 
 
+# ---------------------------------------------------------------------------
+# deprecation shims — every v1 call form forwards to a SortSpec
+# ---------------------------------------------------------------------------
+
 def sort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
          descending: bool = False) -> jnp.ndarray:
-    """Sort along ``axis`` with the selected backend."""
-    if method not in METHODS:
-        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
-    if method == "xla":
-        return _xla_sort(x, axis, descending)
-    if method == "bitonic":
-        return bitonic_sort(x, axis=axis, descending=descending)
-    if method == "pallas":
-        from repro.kernels import ops as kops
-        return kops.bitonic_sort(x, axis=axis, descending=descending)
-    if method in ("merge", "auto"):
-        from repro import engine
-        return engine.sort(x, axis=axis, descending=descending, method=method)
-    if method == "radix":
-        return _radix_sort(x, axis=axis, descending=descending)
-    # method == "imc": faithful bit-serial simulation on radix-encoded keys
-    from repro.core import keycodec, sorter
-    if axis not in (-1, x.ndim - 1):
-        raise ValueError("imc method sorts along the last axis only")
-    if not jnp.issubdtype(x.dtype, jnp.integer):
-        raise ValueError("imc method requires integer inputs")
-    # signed keys mis-sort in raw two's complement (the bit-serial compare
-    # reads the sign bit as the top magnitude bit): encode to the biased
-    # unsigned code first, sort, decode back
-    enc = keycodec.encode(x)
-    width = keycodec.key_bits(x.dtype)
-    lead = x.shape[:-1]
-    res = sorter.sort_in_memory(enc.reshape(-1, x.shape[-1]), width=width)
-    out = keycodec.decode(
-        res.values.astype(keycodec.key_dtype(x.dtype)), x.dtype
-    ).reshape(*lead, x.shape[-1])
-    return jnp.flip(out, axis=-1) if descending else out
-
-
-def _radix_sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
-                values: Optional[jnp.ndarray] = None,
-                interpret: Optional[bool] = None):
-    """Stable LSD radix sort via the order-preserving key codec.
-
-    Descending order complements the encoded key, so ties still keep
-    ascending index order — the engine's tie convention — in both
-    directions.  With ``values`` the payload follows its key (argsort/topk).
-    """
-    from repro.core import keycodec
-    from repro.kernels import radix_sort as _rs
-    from repro.kernels.ops import _from_rows, _to_rows
-    if not keycodec.supports(x.dtype):
-        raise ValueError(
-            f"radix method supports {keycodec.SUPPORTED}, got {x.dtype.name}")
-    x2, lead, ax = _to_rows(x, axis)
-    enc = keycodec.encode(x2, descending=descending)
-    if values is None:
-        out = _rs.sort_blocks(enc, interpret=interpret)
-        return _from_rows(keycodec.decode(out, x.dtype,
-                                          descending=descending), lead, ax)
-    v2, _, _ = _to_rows(values, ax)
-    sk, sv = _rs.sort_kv_blocks(enc, v2, interpret=interpret)
-    return (_from_rows(keycodec.decode(sk, x.dtype, descending=descending),
-                       lead, ax),
-            _from_rows(sv, lead, ax))
-
-
-def _index_payload(x: jnp.ndarray, axis: int) -> jnp.ndarray:
-    """Positions along ``axis`` broadcast to ``x.shape`` (argsort payload)."""
-    ax = axis % x.ndim
-    n = x.shape[ax]
-    return jnp.broadcast_to(
-        jnp.arange(n, dtype=jnp.int32).reshape(
-            (1,) * ax + (n,) + (1,) * (x.ndim - 1 - ax)), x.shape)
+    """Sort along ``axis`` with the selected backend (shim over
+    ``repro.sort.sort``)."""
+    _deprecated("sort")
+    from repro import sort as _front
+    return _front.sort(x, axis=axis, method=method, descending=descending)
 
 
 def argsort(x: jnp.ndarray, *, axis: int = -1, method: str = "xla",
             descending: bool = False) -> jnp.ndarray:
-    if method not in METHODS:
-        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
-    if method == "xla":
-        # ties keep ascending index order in BOTH directions (the engine's
-        # convention): a flipped stable ascending argsort would reverse tie
-        # order, and jnp's descending comparator matches the flip-remap form
-        return jnp.argsort(x, axis=axis, stable=True, descending=descending)
-    if method == "pallas":
-        from repro.kernels import ops as kops
-        return kops.bitonic_argsort(x, axis, descending)
-    if method == "imc":
-        raise NotImplementedError(
-            "imc is a bit-serial validation backend; use sort() on ints")
-    if method in ("merge", "auto"):
-        from repro import engine
-        return engine.argsort(x, axis=axis, descending=descending,
-                              method=method)
-    idx = _index_payload(x, axis)
-    if method == "radix":
-        _, order = _radix_sort(x, axis=axis, descending=descending,
-                               values=idx)
-        return order
-    _, order = bitonic_sort(x, axis=axis, descending=descending, values=idx)
-    return order
+    _deprecated("argsort")
+    from repro import sort as _front
+    return _front.argsort(x, axis=axis, method=method, descending=descending)
 
 
 def topk(x: jnp.ndarray, k: int, *, method: str = "xla",
          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-k along the last axis -> (values, indices), descending.
-
-    This is the routing/sampling entry point: MoE expert selection and
-    top-k sampling both come through here.
-    """
-    if method not in METHODS:
-        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
-    if method == "xla":
-        return jax.lax.top_k(x, k)
-    if method == "pallas":
-        from repro.kernels import ops as kops
-        return kops.bitonic_topk(x, k)
-    if method == "imc":
-        raise NotImplementedError(
-            "imc is a bit-serial validation backend; use sort() on ints")
-    if method in ("merge", "auto"):
-        from repro import engine
-        return engine.topk(x, k, method=method)
-    idx = _index_payload(x, -1)
-    if method == "radix":
-        sx, si = _radix_sort(x, axis=-1, descending=True, values=idx)
-        return sx[..., :k], si[..., :k]
-    sx, si = bitonic_sort(x, axis=-1, descending=True, values=idx)
-    return sx[..., :k], si[..., :k]
+    """Top-k along the last axis -> (values, indices), descending (shim
+    over ``repro.sort.topk``; k is validated at the spec layer)."""
+    _deprecated("topk")
+    from repro import sort as _front
+    return _front.topk(x, k, method=method)
 
 
-def top_p_mask(logits: jnp.ndarray, p: float, *, method: str = "bitonic"
-               ) -> jnp.ndarray:
+def top_p_mask(logits: jnp.ndarray, p: float, *, axis: int = -1,
+               method: str = "auto") -> jnp.ndarray:
     """Nucleus-sampling mask: True for logits inside the top-p mass.
 
     Requires a descending sort of the probabilities — i.e. the paper's
-    workload sitting directly on the serving path.
+    workload sitting directly on the serving path.  ``method`` defaults to
+    "auto" so large-vocab serving gets cost-model dispatch; ``axis`` and
+    ``method`` pass straight through the spec front door.
     """
-    probs = jax.nn.softmax(logits, axis=-1)
-    sorted_probs = sort(probs, axis=-1, method=method, descending=True)
-    cum = jnp.cumsum(sorted_probs, axis=-1)
+    from repro import sort as _front
+    probs = jax.nn.softmax(logits, axis=axis)
+    sorted_probs = _front.sort(probs, axis=axis, method=method,
+                               descending=True)
+    cum = jnp.cumsum(sorted_probs, axis=axis)
     # number of entries needed to reach mass p
     keep_sorted = cum - sorted_probs < p
-    kth = jnp.sum(keep_sorted, axis=-1, keepdims=True)  # count kept
+    kth = jnp.sum(keep_sorted, axis=axis, keepdims=True)  # count kept
     threshold = jnp.take_along_axis(sorted_probs, jnp.maximum(kth - 1, 0),
-                                    axis=-1)
+                                    axis=axis)
     return probs >= threshold

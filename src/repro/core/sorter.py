@@ -16,13 +16,10 @@ stage ONE CAS program (28 cycles at W=4), not N/2 of them.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cas, gates, network
+from repro.core import cas, network
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,10 +16,9 @@ repeated motifs, so cross-entropy has learnable structure (motif copying)
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -5,12 +5,15 @@ and the device mesh (core/distributed_sort):
 
     SRAM array  ->  VMEM tile  ->  engine runs + merge tree  ->  mesh shards
 
-``sort`` / ``argsort`` / ``topk`` here accept any array size: tiled run
-generation (runs.py) sorts VMEM-sized pieces with an existing backend, a
-merge-path merge tree (merge.py, kernels/merge_path.py) combines them in
-O(n log n) total work, and the cost-model planner (planner.py) decides when
-the hierarchy pays for itself versus handing the whole array to one backend.
-``sort_api`` exposes all of this as ``method="merge"`` and ``method="auto"``.
+``sort`` / ``argsort`` / ``topk`` / ``sort_kv`` here accept any array size:
+tiled run generation (runs.py) sorts VMEM-sized pieces with a registered
+backend, a merge-path merge tree (merge.py, kernels/merge_path.py) combines
+them in O(n log n) total work, and the cost-model planner (planner.py)
+decides when the hierarchy pays for itself versus handing the whole array
+to one backend.  The engine is the *execution* layer under the SortSpec
+front door (repro.sort): plans come from ``planner.choose_cached`` and
+single-backend work is delegated through the registry
+(core/sortspec.py), never by backend name.
 """
 from __future__ import annotations
 
@@ -18,10 +21,12 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.core import sortspec
 from repro.engine import merge as merge  # noqa: F401  (re-export)
 from repro.engine import planner, runs
 from repro.engine.merge import kway_merge, merge_pairs, merge_runs  # noqa: F401
-from repro.engine.planner import Plan, calibrate, choose, choose_method  # noqa: F401
+from repro.engine.planner import (  # noqa: F401
+    Plan, calibrate, choose, choose_cached, choose_method, clear_plan_cache)
 from repro.engine.segmented import (  # noqa: F401
     group_tokens_by_expert, segment_ids_from_row_splits, segmented_argsort,
     segmented_sort, sort_padded_rows)
@@ -31,10 +36,39 @@ from repro.engine.segmented import (  # noqa: F401
 from repro.kernels.ops import _from_rows, _to_rows
 
 
-def _delegate_sort(x, axis, descending, method):
-    from repro.core import sort_api
-    return sort_api.sort(x, axis=axis, method=method, descending=descending)
+# ---------------------------------------------------------------------------
+# merge pipeline over rows form — what the "merge" backend executes
+# ---------------------------------------------------------------------------
 
+def merge_sort_rows(x2: jnp.ndarray, *, descending: bool, plan: planner.Plan,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(rows, n) -> sorted rows via run generation + the merge tree."""
+    rg = runs.generate_runs(x2, plan.run_len, method=plan.run_method,
+                            descending=descending, interpret=interpret)
+    merged = merge_runs(rg, descending=descending,
+                        backend=plan.merge_backend, interpret=interpret)
+    return merged[:, :x2.shape[-1]]
+
+
+def merge_sort_rows_kv(k2: jnp.ndarray, v2: jnp.ndarray, *, descending: bool,
+                       plan: planner.Plan, stable: bool = False,
+                       interpret: Optional[bool] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Key-value merge pipeline.  ``stable=True`` forces a stable tile sort
+    ("xla" run backend) so the whole pipeline is stable (merge-path merges
+    are stable by construction)."""
+    run_method = "xla" if stable else plan.run_method
+    rk, rv = runs.generate_runs_kv(k2, v2, plan.run_len, method=run_method,
+                                   descending=descending, interpret=interpret)
+    mk, mv = merge_runs(rk, rv, descending=descending,
+                        backend=plan.merge_backend, interpret=interpret)
+    n = k2.shape[-1]
+    return mk[:, :n], mv[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# public entry points (any array size, planner-dispatched)
+# ---------------------------------------------------------------------------
 
 def sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
          method: str = "auto", run_len: Optional[int] = None,
@@ -42,19 +76,46 @@ def sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
     """Sort along ``axis``; sizes beyond one tile go through runs + merges.
 
     ``method`` is "auto" (cost-model pick), "merge" (force the engine), or
-    any concrete ``sort_api`` backend to delegate to.
+    any registered backend name to delegate to.
     """
     x2, lead, ax = _to_rows(x, axis)
     batch, n = x2.shape
-    plan = planner.choose(n, batch, x.dtype, requested=method,
-                          run_len=run_len)
+    plan = planner.choose_cached(n, batch, x.dtype, requested=method,
+                                 run_len=run_len)
+    if plan.method == "merge":
+        out = merge_sort_rows(x2, descending=descending, plan=plan,
+                              interpret=interpret)
+    else:
+        out = sortspec.get_backend(plan.method).sort(
+            x2, descending=descending, plan=plan, interpret=interpret)
+    return _from_rows(out, lead, ax)
+
+
+def sort_kv(keys: jnp.ndarray, values: jnp.ndarray, *, axis: int = -1,
+            descending: bool = False, method: str = "auto",
+            stable: bool = False, run_len: Optional[int] = None,
+            interpret: Optional[bool] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort ``keys`` along ``axis`` carrying ``values`` with them.
+
+    ``stable=True`` forces the engine's stable pipeline regardless of the
+    planner's backend preference — segmented sort and MoE grouping rely on
+    equal keys keeping their input order.
+    """
+    k2, lead, ax = _to_rows(keys, axis)
+    v2, _, _ = _to_rows(values, axis)
+    batch, n = k2.shape
+    plan = planner.choose_cached(n, batch, keys.dtype, requested=method,
+                                 run_len=run_len)
     if plan.method != "merge":
-        return _delegate_sort(x, ax, descending, plan.method)
-    rg = runs.generate_runs(x2, plan.run_len, method=plan.run_method,
-                            descending=descending, interpret=interpret)
-    merged = merge_runs(rg, descending=descending,
-                        backend=plan.merge_backend, interpret=interpret)
-    return _from_rows(merged[:, :n], lead, ax)
+        be = sortspec.get_backend(plan.method)
+        if not stable or be.capabilities.stable:
+            sk, sv = be.sort_kv(k2, v2, descending=descending, plan=plan,
+                                interpret=interpret)
+            return _from_rows(sk, lead, ax), _from_rows(sv, lead, ax)
+    sk, sv = merge_sort_rows_kv(k2, v2, descending=descending, plan=plan,
+                                stable=stable, interpret=interpret)
+    return _from_rows(sk, lead, ax), _from_rows(sv, lead, ax)
 
 
 def argsort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
@@ -63,28 +124,24 @@ def argsort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
             interpret: Optional[bool] = None) -> jnp.ndarray:
     """Sorting permutation along ``axis`` via the key-value engine path.
 
-    ``stable=True`` forces a stable pipeline: stable tile sort ("xla" run
-    backend) + merge-path merges (stable by construction), regardless of the
-    planner's backend preference — segmented sort and MoE grouping rely on
-    this.
+    ``stable=True`` forces a stable pipeline: a stable backend if the plan
+    resolved to one, else stable tile sort + merge-path merges (stable by
+    construction), regardless of the planner's preference.
     """
     x2, lead, ax = _to_rows(x, axis)
     batch, n = x2.shape
-    plan = planner.choose(n, batch, x.dtype, requested=method,
-                          run_len=run_len)
-    if plan.method != "merge" and not stable:
-        from repro.core import sort_api
-        method_ = plan.method if plan.method != "imc" else "xla"
-        return sort_api.argsort(x, axis=ax, method=method_,
-                                descending=descending)
-    run_method = "xla" if stable else plan.run_method
-    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
-                           x2.shape)
-    rk, rv = runs.generate_runs_kv(x2, idx, plan.run_len, method=run_method,
-                                   descending=descending, interpret=interpret)
-    _, order = merge_runs(rk, rv, descending=descending,
-                          backend=plan.merge_backend, interpret=interpret)
-    return _from_rows(order[:, :n], lead, ax)
+    plan = planner.choose_cached(n, batch, x.dtype, requested=method,
+                                 run_len=run_len)
+    if plan.method != "merge":
+        be = sortspec.get_backend(plan.method)
+        if not stable or be.capabilities.stable:
+            order = be.argsort(x2, descending=descending, plan=plan,
+                               interpret=interpret)
+            return _from_rows(order, lead, ax)
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], x2.shape)
+    _, order = merge_sort_rows_kv(x2, idx, descending=descending, plan=plan,
+                                  stable=stable, interpret=interpret)
+    return _from_rows(order, lead, ax)
 
 
 def topk(x: jnp.ndarray, k: int, *, method: str = "auto",
@@ -98,14 +155,14 @@ def topk(x: jnp.ndarray, k: int, *, method: str = "auto",
     """
     x2, lead, _ = _to_rows(x, -1)
     batch, n = x2.shape
-    if not 0 < k <= n:
-        raise ValueError(f"k must be in (0, {n}], got {k}")
-    plan = planner.choose(n, batch, x.dtype, requested=method,
-                          run_len=run_len)
+    if not 1 <= k <= n:
+        raise ValueError(
+            f"topk k must satisfy 1 <= k <= n (n={n}); got k={k}")
+    plan = planner.choose_cached(n, batch, x.dtype, requested=method,
+                                 run_len=run_len)
     if plan.method != "merge":
-        from repro.core import sort_api
-        method_ = plan.method if plan.method != "imc" else "xla"
-        v, i = sort_api.topk(x2, k, method=method_)
+        v, i = sortspec.get_backend(plan.method).topk(
+            x2, k, plan=plan, interpret=interpret)
         return v.reshape(*lead, k), i.reshape(*lead, k)
     idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], x2.shape)
     rk, rv = runs.generate_runs_kv(x2, idx, plan.run_len,

@@ -2,21 +2,21 @@
 
 Extends the paper-constant cost model (core/cost_model.py) with per-tile
 constants that can be *measured* on the running backend, then prices every
-eligible software backend and returns the cheapest as an executable plan.
-``sort_api.sort(..., method="auto")`` is a thin wrapper over this module.
+eligible backend and returns the cheapest as an executable plan.
+``method="auto"`` on the public API is a thin wrapper over this module.
 
-Hard validity rules come first — auto must never pick a backend that errors:
+Eligibility is a pure capability query against the backend registry
+(core/sortspec.py): each backend declares the dtypes it sorts correctly,
+an optional auto-dispatch size cap, and whether auto may pick it at all —
+there are no per-backend validity rules here, so a third-party backend
+registered with ``@register_backend`` is priced and dispatched without any
+planner edits.  Pricing likewise goes through ``SortBackend.cost_ns``
+(defaulting to the analytic model; unknown backends price at +inf until
+they override it).
 
-  * ``imc`` is never auto-selected (bit-serial validation backend).
-  * ``bitonic`` / ``pallas`` whole-array paths are capped at sizes where the
-    power-of-two padded row still fits a sane VMEM tile.
-  * ``merge`` requires more than one run (vs the *resolved* run length);
-    below that it degenerates anyway.
-  * ``radix`` requires a keycodec-encodable dtype ({u,i}{8,16,32}, f16,
-    bf16, f32); its pass count is priced from the encoded key width.
-  * unknown / exotic dtypes fall back to ``xla`` unconditionally.
-
-Only then does the cost model arbitrate among the survivors.
+Resolved plans are cached per (n, batch, dtype, requested, run_len) and
+invalidated on calibration or registry changes, so repeated serving-shape
+calls skip re-planning entirely.
 """
 from __future__ import annotations
 
@@ -27,22 +27,14 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import cost_model
+from repro.core import cost_model, sortspec
+from repro.core.backends import MAX_BITONIC_N, MAX_PALLAS_N  # noqa: F401
 from repro.engine import runs as _runs
-
-# whole-array network caps: beyond these the padded row stops being a
-# reasonable VMEM-resident tile and the hierarchy should take over
-MAX_BITONIC_N = 1 << 14
-MAX_PALLAS_N = 1 << 16
 
 # default engine tile size per substrate: on TPU a run is one VMEM tile; on
 # CPU larger runs trade (cheap, vectorised) tile-sort work for (expensive,
 # gather-bound) merge levels — 8K is the measured sweet spot for jnp tiles
 CPU_RUN_LEN = 8192
-
-# dtypes every backend's min/max compare handles (NaN-free floats assumed)
-_COMPARABLE = {"float32", "bfloat16", "float16", "int32", "uint32",
-               "int16", "uint16", "int8", "uint8"}
 
 _measured: Optional[cost_model.DeviceSortConstants] = None
 
@@ -50,7 +42,7 @@ _measured: Optional[cost_model.DeviceSortConstants] = None
 @dataclasses.dataclass(frozen=True)
 class Plan:
     """Executable dispatch decision for one (n, batch, dtype) workload."""
-    method: str                  # "xla" | "bitonic" | "pallas" | "merge" | "radix"
+    method: str                  # any auto-dispatchable registered backend
     run_len: int                 # engine tile size (merge method only)
     run_method: str              # backend sorting each run
     merge_backend: str           # "xla" | "pallas" merge primitive
@@ -66,21 +58,13 @@ def constants() -> cost_model.DeviceSortConstants:
 
 
 def _eligible(method: str, n: int, dtype, run_len: int) -> bool:
-    if jnp.dtype(dtype).name not in _COMPARABLE:
-        return method == "xla"
-    if method == "bitonic":
-        return _runs.next_pow2(n) <= MAX_BITONIC_N
-    if method == "pallas":
-        return _runs.next_pow2(n) <= MAX_PALLAS_N
-    if method == "merge":
-        # a single run degenerates to "sort one tile and merge nothing":
-        # compare against the run length the plan will actually use, not
-        # the module default (8K on CPU vs the 2K default)
-        return n > run_len
-    if method == "radix":
-        from repro.core import keycodec
-        return keycodec.supports(dtype)
-    return method == "xla"
+    """Generic capability query: may auto hand (n, dtype) to ``method``?"""
+    return sortspec.get_backend(method).eligible(n, dtype, run_len)
+
+
+def _auto_candidates() -> Dict[str, sortspec.SortBackend]:
+    return {name: be for name, be in sortspec.registered_backends().items()
+            if be.capabilities.auto_dispatch}
 
 
 def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
@@ -90,17 +74,16 @@ def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
     rl = run_len or (_runs.DEFAULT_RUN_LEN if on_tpu() else CPU_RUN_LEN)
     consts = constants()
     interp = not on_tpu()
-    from repro.core import keycodec
-    kb = keycodec.key_bits(dtype) if keycodec.supports(dtype) else 32
+    candidates = _auto_candidates()
     costs = {
-        m: cost_model.device_sort_cost_ns(
-            m, n, batch, run_len=rl, consts=consts, pallas_interpreted=interp,
-            key_bits=kb)
-        for m in ("xla", "bitonic", "pallas", "merge", "radix")
+        name: be.cost_ns(n, batch, dtype, run_len=rl, consts=consts,
+                         interpreted=interp)
+        for name, be in candidates.items()
     }
     if requested == "auto":
-        candidates = [m for m in costs if _eligible(m, n, dtype, rl)]
-        method = min(candidates, key=costs.__getitem__)
+        valid = [m for m in costs
+                 if candidates[m].eligible(n, dtype, rl)]
+        method = min(valid, key=costs.__getitem__)
     else:
         method = requested
     run_method = "pallas" if (on_tpu() and _eligible("pallas", rl, dtype, rl)) \
@@ -111,8 +94,39 @@ def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
 
 
 def choose_method(n: int, batch: int = 1, dtype=jnp.float32) -> str:
-    """Just the backend name — what sort_api's "auto" resolves to."""
+    """Just the backend name — what the public "auto" resolves to."""
     return choose(n, batch, dtype).method
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[tuple, Plan] = {}
+
+
+def choose_cached(n: int, batch: int = 1, dtype=jnp.float32, *,
+                  requested: str = "auto",
+                  run_len: Optional[int] = None) -> Plan:
+    """``choose`` memoized on the workload statics.
+
+    Serving paths hit the same (shape, dtype, spec) combination every step;
+    this skips re-pricing entirely.  The cache key folds in the calibration
+    state and the registry generation, so ``calibrate()`` or registering a
+    new backend transparently re-plans.
+    """
+    key = (n, batch, jnp.dtype(dtype).name, requested, run_len,
+           id(_measured), sortspec.registry_generation(),
+           jax.default_backend())
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = choose(n, batch, dtype, requested=requested, run_len=run_len)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -146,17 +160,17 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
     """
     global _measured
     import numpy as np
-    from repro.core import sort_api
     from repro.engine import merge as _merge
     if include_pallas is None:
         include_pallas = on_tpu()
+    be = sortspec.get_backend
     x = jnp.asarray(np.random.default_rng(0).standard_normal((batch, tile_n)),
                     jnp.float32)
     elems = batch * tile_n
     lg = cost_model._log2(tile_n)
 
-    xla_f = jax.jit(lambda v: sort_api.sort(v, method="xla"))
-    bit_f = jax.jit(lambda v: sort_api.sort(v, method="bitonic"))
+    xla_f = jax.jit(lambda v: be("xla").sort(v))
+    bit_f = jax.jit(lambda v: be("bitonic").sort(v))
     half = tile_n // 2
     mrg_f = jax.jit(lambda v: _merge.merge_pairs(
         jnp.sort(v[:, :half]), jnp.sort(v[:, half:]), backend="xla"))
@@ -170,10 +184,10 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
     if include_pallas:
         from repro.core import keycodec
         from repro.kernels import radix_sort as _rs
-        pal_f = jax.jit(lambda v: sort_api.sort(v, method="pallas"))
+        pal_f = jax.jit(lambda v: be("pallas").sort(v))
         pal_ns = _time_ns(lambda: pal_f(x).block_until_ready(), reps)
         pal_c = pal_ns / (elems * lg * lg)
-        rad_f = jax.jit(lambda v: sort_api.sort(v, method="radix"))
+        rad_f = jax.jit(lambda v: be("radix").sort(v))
         rad_ns = _time_ns(lambda: rad_f(x).block_until_ready(), reps)
         passes = -(-keycodec.key_bits(x.dtype) // _rs.DIGIT_BITS)
         rad_c = rad_ns / (elems * passes)
@@ -188,9 +202,11 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
         merge_run=xla_ns / (elems * lg),
         merge_level=mrg_ns / elems,
     )
+    clear_plan_cache()
     return _measured
 
 
 def reset_calibration() -> None:
     global _measured
     _measured = None
+    clear_plan_cache()

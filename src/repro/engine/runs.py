@@ -1,7 +1,7 @@
 """Tiled run generation — rung one of the out-of-core sort engine.
 
 An arbitrarily large (batched) array is cut into VMEM-sized tiles ("runs"),
-each sorted independently by one of the existing ``sort_api`` backends; the
+each sorted independently by one of the registered single-tile backends; the
 merge tree (engine/merge.py) then combines runs into the full result.  This
 is the paper's partitioned-macro structure (§II-B) lifted one level: SRAM
 subarray -> CAS partition becomes HBM array -> VMEM run.
@@ -14,7 +14,6 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 DEFAULT_RUN_LEN = 2048

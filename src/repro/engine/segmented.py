@@ -20,8 +20,16 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
+
+from repro.core import sortspec
+
+
+def _resolve(method: Optional[str]) -> str:
+    """None -> the ambient sort_defaults method (API v2), default "auto"."""
+    if method is not None:
+        return method
+    return sortspec.default("method") or "auto"
 
 
 def segment_ids_from_row_splits(row_splits: jnp.ndarray,
@@ -34,7 +42,9 @@ def segment_ids_from_row_splits(row_splits: jnp.ndarray,
 
 def segmented_argsort(values: jnp.ndarray, segment_ids: jnp.ndarray, *,
                       descending: bool = False,
-                      method: str = "auto") -> jnp.ndarray:
+                      method: Optional[str] = None,
+                      run_len: Optional[int] = None,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """Permutation grouping ``values`` by segment, value-sorted per group.
 
     ``values`` and ``segment_ids`` are flat (n,) or batched (..., n) with
@@ -43,25 +53,32 @@ def segmented_argsort(values: jnp.ndarray, segment_ids: jnp.ndarray, *,
     permutation.
     """
     from repro import engine
-    order1 = engine.argsort(values, method=method, descending=descending)
+    method = _resolve(method)
+    order1 = engine.argsort(values, method=method, descending=descending,
+                            run_len=run_len, interpret=interpret)
     seg1 = jnp.take_along_axis(segment_ids, order1, axis=-1)
-    order2 = engine.argsort(seg1, method=method, stable=True)
+    order2 = engine.argsort(seg1, method=method, stable=True,
+                            run_len=run_len, interpret=interpret)
     return jnp.take_along_axis(order1, order2, axis=-1)
 
 
 def segmented_sort(values: jnp.ndarray, segment_ids: jnp.ndarray, *,
-                   descending: bool = False, method: str = "auto"
+                   descending: bool = False, method: Optional[str] = None,
+                   run_len: Optional[int] = None,
+                   interpret: Optional[bool] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(sorted values, grouped segment ids), groups contiguous & ascending."""
     order = segmented_argsort(values, segment_ids, descending=descending,
-                              method=method)
+                              method=method, run_len=run_len,
+                              interpret=interpret)
     return (jnp.take_along_axis(values, order, axis=-1),
             jnp.take_along_axis(segment_ids, order, axis=-1))
 
 
 def sort_padded_rows(values: jnp.ndarray, lengths: jnp.ndarray, *,
-                     descending: bool = False, method: str = "auto",
-                     fill_value=0) -> jnp.ndarray:
+                     descending: bool = False, method: Optional[str] = None,
+                     fill_value=0, run_len: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Sort each row's valid prefix of a padded (rows, L) batch.
 
     Positions >= lengths[row] are padding; they are pushed past the valid
@@ -70,17 +87,19 @@ def sort_padded_rows(values: jnp.ndarray, lengths: jnp.ndarray, *,
     """
     from repro import engine
     from repro.engine import runs as _runs
+    method = _resolve(method)
     rows, l = values.shape
     pos = jnp.arange(l, dtype=jnp.int32)[None, :]
     valid = pos < lengths[:, None]
     sent = _runs.sort_sentinel(values.dtype, descending)
     masked = jnp.where(valid, values, sent)
-    out = engine.sort(masked, method=method, descending=descending)
+    out = engine.sort(masked, method=method, descending=descending,
+                      run_len=run_len, interpret=interpret)
     return jnp.where(valid, out, jnp.array(fill_value, values.dtype))
 
 
 def group_tokens_by_expert(expert_ids: jnp.ndarray, num_experts: int, *,
-                           method: str = "auto"
+                           method: Optional[str] = None
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """MoE dispatch order: (permutation, row_splits) grouping tokens by expert.
 
@@ -88,7 +107,7 @@ def group_tokens_by_expert(expert_ids: jnp.ndarray, num_experts: int, *,
     group), which is what capacity-truncation policies assume.
     """
     from repro import engine
-    perm = engine.argsort(expert_ids, method=method, stable=True)
+    perm = engine.argsort(expert_ids, method=_resolve(method), stable=True)
     counts = jnp.bincount(expert_ids.reshape(-1), length=num_experts)
     row_splits = jnp.concatenate(
         [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)])

@@ -20,7 +20,7 @@ backward is handled by remat), serving/prefill use this kernel.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -127,9 +127,8 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         interpret = jax.default_backend() != "tpu"
     b, s, n, h = q.shape
     t, r = k.shape[1], k.shape[2]
-    g = n // r
     # rows: q (B,S,N,H) -> (B,N,S,H) -> (B*N, S, H); N = R*G blocked, so
-    # q row (b*n) maps to kv row (b*r + n//g)
+    # q row (b*n) maps to kv row (b*r + n//g) with g = n // r
     q2 = jnp.moveaxis(q, 1, 2).reshape(b * n, s, h)
     k2 = jnp.moveaxis(k, 1, 2).reshape(b * r, t, h)
     v2 = jnp.moveaxis(v, 1, 2).reshape(b * r, t, h)

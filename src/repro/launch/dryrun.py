@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeSpec,
-                                cell_is_supported, get_config)
+from repro.configs.base import (ARCH_IDS, SHAPES, cell_is_supported,
+                                get_config)
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import dp_axes_of, make_production_mesh
 from repro.models.model_zoo import build

@@ -123,8 +123,6 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
         if opcode == "while":
             trip = int(mt.group(1)) if mt else 1
         for cm in _CALLEE_RE.finditer(attrs):
-            kind = "fusion" if "calls=" in attrs and \
-                f"calls=%{cm.group(1)}" in attrs else opcode
             w = trip if opcode == "while" else 1
             cur.callees.append((cm.group(1), w, opcode))
             if opcode == "fusion":

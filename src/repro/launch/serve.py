@@ -2,7 +2,7 @@
 
 The scheduler is the third place the paper's technique lands in the
 framework (after MoE routing and sampling): incoming requests are sorted by
-prompt length (``sort_api`` backends) so each prefill batch is
+prompt length (any registered ``repro.sort`` backend) so each prefill batch is
 length-homogeneous — padding waste drops from worst-case to
 max-within-bucket, exactly the data-movement argument of the paper applied
 to request scheduling.
@@ -21,8 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sort as sorting
 from repro.configs.base import get_config, get_smoke_config
-from repro.core import sort_api
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import dp_axes_of, make_host_mesh
 from repro.models.model_zoo import build
@@ -40,7 +40,7 @@ class Request:
 class LengthSortedScheduler:
     """Batch requests by sorted prompt length (paper technique #3).
 
-    ``method`` takes any ``sort_api`` backend; the default ``"auto"`` lets
+    ``method`` takes any registered backend name; the default ``"auto"`` lets
     the engine's cost-model planner pick per queue size, so the scheduler
     scales from a handful of requests to engine-sized backlogs unchanged.
     """
@@ -58,7 +58,7 @@ class LengthSortedScheduler:
             return []
         lens = jnp.asarray([len(r.prompt) for r in self.queue],
                            dtype=jnp.int32)
-        order = np.array(sort_api.argsort(lens, method=self.method))
+        order = np.array(sorting.argsort(lens, method=self.method))
         batch = [self.queue[i] for i in order[:self.batch_size]]
         picked = set(order[:self.batch_size].tolist())
         self.queue = [r for i, r in enumerate(self.queue)

@@ -12,8 +12,7 @@ parameter refresh.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -153,8 +152,6 @@ def build_train_step(model: Model, optimizer: opt_lib.Optimizer,
                      policy: ShardingPolicy, shape: ShapeSpec,
                      microbatch: int = 1, accum_dtype=jnp.float32,
                      grad_compressor=None) -> TrainStep:
-    param_specs = model.init_specs if hasattr(model, "init_specs") else None
-
     def loss_fn(params, mb):
         loss, aux = model.loss(params, mb)
         return loss, aux
@@ -235,8 +232,8 @@ def make_serve_step(model: Model, shape: ShapeSpec, sample_topk: int = 0):
     def serve_step(params, token, state, rng):
         logits, new_state = model.decode_step(params, token, state)
         if sample_topk:
-            from repro.core import sort_api
-            v, i = sort_api.topk(logits, sample_topk, method=method)
+            from repro import sort as sorting
+            v, i = sorting.topk(logits, sample_topk, method=method)
             gumbel = -jnp.log(-jnp.log(
                 jax.random.uniform(rng, v.shape) + 1e-9) + 1e-9)
             choice = jnp.argmax(v / 1.0 + gumbel, axis=-1)

@@ -14,7 +14,6 @@ shardings are identical to what the dry-run compiles.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +21,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs.base import ALIASES, SHAPES, ShapeSpec, get_config, \
-    get_smoke_config
+from repro.configs.base import ShapeSpec, get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticLM, device_put_batch
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import dp_axes_of, make_host_mesh
@@ -88,7 +86,6 @@ def train(arch: str, smoke: bool = True, steps: int = 50, batch: int = 8,
     preempt = PreemptionHandler().install()
     watchdog = StepWatchdog()
     losses = []
-    step_arr = jnp.asarray(start_step, jnp.int32)
     for step in range(start_step, steps):
         np_batch = data.global_batch_at(step)
         if model.is_encdec:

@@ -9,7 +9,6 @@ never appears in parameter specs (pure-DP outer axis).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Optional, Tuple
 

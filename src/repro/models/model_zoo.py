@@ -11,7 +11,7 @@ The facade exposes exactly what launch/, examples/ and tests/ need:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

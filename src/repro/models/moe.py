@@ -4,7 +4,7 @@ as the dispatch backbone.
 Routing pipeline (per data shard, device-local by construction):
 
   1. router logits -> softmax -> top-k experts per token
-     (top-k runs through repro.core.sort_api: bitonic / pallas backends)
+     (top-k runs through the repro.sort front door: any registered backend)
   2. the (token, expert) assignment list is *sorted by expert id* with the
      bitonic kv-sort — grouping tokens by expert is literally the paper's
      sorting workload sitting in the middle of the MoE layer
@@ -23,16 +23,14 @@ tokens intact.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import sort as sorting
 from repro.configs.base import MoEConfig
-from repro.core import sort_api
 from repro.models import layers
 
 
@@ -100,7 +98,7 @@ def apply(params, x, cfg: MoEConfig, mlp_type: str, policy=None):
     rl = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
     rl = constrain(rl, P(dp, None, None))
     probs = jax.nn.softmax(rl, axis=-1)
-    gate_v, gate_i = sort_api.topk(probs, k, method=cfg.router_method)
+    gate_v, gate_i = sorting.topk(probs, k, method=cfg.router_method)
     gate_v = gate_v / (jnp.sum(gate_v, axis=-1, keepdims=True) + 1e-9)
 
     # aux: load-balance (Switch) + router z-loss (global means — pjit

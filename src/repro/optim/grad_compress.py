@@ -22,8 +22,6 @@ a custom collective (documented, out of scope for the CPU dry-run).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,8 +43,8 @@ def _int8_roundtrip(g):
 def _topk_roundtrip(g, frac: float, method: str):
     flat = g.reshape(-1)
     k = max(1, int(flat.shape[0] * frac))
-    from repro.core import sort_api
-    vals, idx = sort_api.topk(jnp.abs(flat), k, method=method)
+    from repro import sort as sorting
+    vals, _ = sorting.topk(jnp.abs(flat), k, method=method)
     thresh = vals[..., -1]
     mask = jnp.abs(flat) >= thresh
     return (flat * mask).reshape(g.shape)

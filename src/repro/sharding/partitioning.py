@@ -19,7 +19,6 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

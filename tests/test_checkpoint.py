@@ -1,5 +1,4 @@
 """Checkpointer: atomic async save, bf16 roundtrip, retention, resume."""
-import time
 
 import jax
 import jax.numpy as jnp

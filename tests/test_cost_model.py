@@ -1,7 +1,7 @@
 """Every quantitative claim in the paper, checked against the model."""
 import pytest
 
-from repro.core import cost_model, network, sorter
+from repro.core import cost_model, sorter
 
 
 def test_all_paper_claims():

@@ -126,9 +126,12 @@ def test_argsort_pallas_routes_to_kernel_and_agrees():
         np.take_along_axis(np.array(x), order, -1), np.sort(np.array(x), -1))
 
 
-def test_argsort_imc_raises():
-    x = jnp.asarray(np.arange(8, dtype=jnp.uint32))
-    with pytest.raises(NotImplementedError):
+def test_argsort_imc_wide_keys_raise():
+    """imc argsort packs (key, index) into one array word: 32-bit keys
+    leave no index bits, so the composite path must refuse clearly (narrow
+    keys work — see test_sort_conformance.test_imc_argsort_conformance)."""
+    x = jnp.asarray(np.arange(8, dtype=np.uint32))
+    with pytest.raises(ValueError, match="32-bit"):
         sort_api.argsort(x, method="imc")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="method must be one of"):
         sort_api.argsort(x, method="nope")

@@ -1,6 +1,5 @@
 """Gate-level CAS block: exhaustive + property validation."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cas, gates

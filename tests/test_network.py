@@ -1,5 +1,4 @@
 """Property tests for the bitonic network + partition planning (Eq. 1-4)."""
-import hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import network as nw

@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import keycodec, sort_api
+from repro.core import sort_api
 from repro.kernels import radix_sort
 
 

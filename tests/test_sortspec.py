@@ -1,0 +1,344 @@
+"""API v2: SortSpec validation, backend registry truthfulness, plan cache.
+
+The capability sweep is the drift net: every registered backend's declared
+``Capabilities`` are exercised — each claimed dtype must actually sort
+correctly, claimed stability must survive a tie-order check, claimed kv /
+top-k support must round-trip — so a backend whose declaration rots fails
+CI here, not in production dispatch.
+"""
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.sort as rsort
+from repro.core import sort_api, sortspec
+from repro.core.backends import COMPARABLE_DTYPES
+from repro.engine import planner
+
+
+def _keys(dtype_name: str, shape, rng):
+    """Small-integer-valued keys exactly representable in every dtype."""
+    raw = rng.integers(-7, 8, size=shape)
+    if dtype_name.startswith("uint"):
+        raw = np.abs(raw)
+    return jnp.asarray(raw).astype(jnp.dtype(dtype_name))
+
+
+def _n_for(backend) -> int:
+    # the bit-serial simulator targets the paper's N≈8; everything else
+    # gets a size that exercises padding (non-power-of-two)
+    return 8 if backend.capabilities.substrate == "sram" else 33
+
+
+def _claimed_dtypes(backend):
+    caps = backend.capabilities
+    return sorted(caps.dtypes) if caps.dtypes is not None \
+        else sorted(COMPARABLE_DTYPES)
+
+
+@pytest.mark.parametrize("name", sorted(sortspec.backend_names()))
+def test_capabilities_dtype_claims_are_truthful(name):
+    backend = sortspec.get_backend(name)
+    n = _n_for(backend)
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
+    for dtype_name in _claimed_dtypes(backend):
+        x = _keys(dtype_name, (2, n), rng)
+        ref = np.sort(np.asarray(x).astype(np.float64), -1)
+        for descending in (False, True):
+            out = np.asarray(backend.sort(x, descending=descending)
+                             ).astype(np.float64)
+            np.testing.assert_array_equal(
+                out, np.flip(ref, -1) if descending else ref,
+                err_msg=f"{name}/{dtype_name}/desc={descending}")
+
+
+@pytest.mark.parametrize("name", sorted(sortspec.backend_names()))
+def test_capabilities_stability_claims_are_truthful(name):
+    backend = sortspec.get_backend(name)
+    if not backend.capabilities.stable:
+        pytest.skip(f"{name} does not claim stability")
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, 4, (2, 65)).astype(np.int32))
+    payload = jnp.broadcast_to(jnp.arange(65, dtype=jnp.int32), keys.shape)
+    for descending in (False, True):
+        _, perm = backend.sort_kv(keys, payload, descending=descending)
+        k = np.asarray(keys)
+        if descending:
+            ref = 65 - 1 - np.flip(np.argsort(np.flip(k, -1), -1,
+                                              kind="stable"), -1)
+        else:
+            ref = np.argsort(k, -1, kind="stable")
+        np.testing.assert_array_equal(np.asarray(perm), ref,
+                                      err_msg=f"{name}/desc={descending}")
+
+
+@pytest.mark.parametrize("name", sorted(sortspec.backend_names()))
+def test_capabilities_kv_and_topk_claims_are_truthful(name):
+    backend = sortspec.get_backend(name)
+    caps = backend.capabilities
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2, 40)).astype(np.float32)) \
+        if "float32" in _claimed_dtypes(backend) \
+        else _keys(_claimed_dtypes(backend)[0], (2, 40), rng)
+    if caps.supports_kv:
+        payload = jnp.broadcast_to(jnp.arange(40, dtype=jnp.int32), x.shape)
+        sk, sv = backend.sort_kv(x, payload, descending=False)
+        np.testing.assert_array_equal(np.sort(np.asarray(x), -1),
+                                      np.asarray(sk), err_msg=name)
+        np.testing.assert_array_equal(
+            np.take_along_axis(np.asarray(x), np.asarray(sv), -1),
+            np.asarray(sk), err_msg=name)
+    else:
+        with pytest.raises(NotImplementedError):
+            backend.sort_kv(x, x)
+    if caps.supports_topk:
+        vr, _ = jax.lax.top_k(x, 7)
+        v, i = backend.topk(x, 7)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(vr),
+                                      err_msg=name)
+        np.testing.assert_array_equal(
+            np.take_along_axis(np.asarray(x), np.asarray(i), -1),
+            np.asarray(vr), err_msg=name)
+
+
+def test_argsort_tie_convention_every_backend():
+    """Ties keep ascending index order in both directions — including the
+    imc composite path (narrow keys, paper-scale n)."""
+    rng = np.random.default_rng(11)
+    for name in sortspec.backend_names():
+        backend = sortspec.get_backend(name)
+        n = _n_for(backend)
+        x = _keys("int8", (2, n), rng)
+        for descending in (False, True):
+            try:
+                order = np.asarray(backend.argsort(x, descending=descending))
+            except NotImplementedError:
+                continue
+            k = np.asarray(x)
+            if descending:
+                ref = n - 1 - np.flip(np.argsort(np.flip(k, -1), -1,
+                                                 kind="stable"), -1)
+            else:
+                ref = np.argsort(k, -1, kind="stable")
+            np.testing.assert_array_equal(
+                order, ref, err_msg=f"{name}/desc={descending}")
+
+
+# ---------------------------------------------------------------------------
+# spec validation — every front-door error raised in one place
+# ---------------------------------------------------------------------------
+
+def test_topk_k_out_of_range_raises_everywhere():
+    """Regression: k < 1 / k > n used to slice silently or die deep inside
+    a kernel; now it is one clear ValueError at the spec layer for every
+    backend (and the legacy shim)."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 16)),
+                    jnp.float32)
+    for method in sortspec.backend_names() + ("auto",):
+        for bad_k in (0, -3, 17):
+            with pytest.raises(ValueError, match="1 <= k <= n"):
+                rsort.topk(x, bad_k, method=method)
+    with pytest.raises(ValueError, match="1 <= k <= n"):
+        sort_api.topk(x, 999)
+    # the boundary values are fine
+    v, _ = rsort.topk(x, 16, method="xla")
+    assert v.shape == (2, 16)
+    v, _ = rsort.topk(x, 1, method="xla")
+    assert v.shape == (2, 1)
+
+
+def test_spec_validation_errors():
+    x = jnp.zeros((2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="axis"):
+        rsort.sort(x, axis=2)
+    with pytest.raises(ValueError, match="method must be one of"):
+        rsort.sort(x, method="nope")
+    with pytest.raises(ValueError, match="not both"):
+        sortspec.SortSpec(values=x, indices=True).canonical(x)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        sortspec.SortSpec(segment_ids=jnp.zeros(8, jnp.int32),
+                          valid_lengths=jnp.ones(2)).canonical(x)
+    with pytest.raises(ValueError, match="shape"):
+        sortspec.SortSpec(values=jnp.zeros((2, 9))).canonical(x)
+    with pytest.raises(ValueError, match="segment_ids or row_splits"):
+        rsort.segment_sort(jnp.zeros(8))
+
+
+def test_sort_kv_payload_survives_sentinel_keys():
+    """Regression: bitonic/pallas kv paths padded with (sentinel key, n)
+    pairs, so a genuine dtype-max key let the pad marker displace a real
+    payload.  The kv front door now argsorts a (key, index) composite and
+    gathers, so arbitrary payloads survive on every backend."""
+    keys = jnp.asarray([[0, np.iinfo(np.int32).max, 1]], jnp.int32)
+    payload = jnp.asarray([[10, 99, 20]], jnp.int32)
+    for name in sorted(sortspec.backend_names()):
+        be = sortspec.get_backend(name)
+        if not be.capabilities.supports_kv:
+            continue
+        sk, sv = be.sort_kv(keys, payload)
+        np.testing.assert_array_equal(np.asarray(sk),
+                                      [[0, 1, np.iinfo(np.int32).max]],
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(sv), [[10, 20, 99]],
+                                      err_msg=name)
+    # float +inf keys through the front door
+    fk = jnp.asarray([[0.0, np.inf, 1.0]], jnp.float32)
+    for method in ("bitonic", "pallas", "xla", "radix"):
+        _, sv = rsort.sort_kv(fk, payload, method=method)
+        np.testing.assert_array_equal(np.asarray(sv), [[10, 20, 99]],
+                                      err_msg=method)
+
+
+def test_topk_spec_rejects_payload_and_stable():
+    """k returns (values, indices) on its own; combining it with a payload
+    or stability flag used to silently drop those fields."""
+    x = jnp.zeros((2, 8), jnp.float32)
+    with pytest.raises(ValueError, match="do not combine with k"):
+        rsort.run(sortspec.SortSpec(k=2, values=jnp.zeros((2, 8))), x)
+    with pytest.raises(ValueError, match="do not combine with k"):
+        rsort.run(sortspec.SortSpec(k=2, stable=True), x)
+    with pytest.raises(ValueError, match="do not combine with k"):
+        rsort.run(sortspec.SortSpec(k=2, indices=True), x)
+    # and a spec-built top-k is canonically descending
+    assert sortspec.SortSpec(k=2).canonical(x).descending is True
+
+
+def test_unsupported_ops_fail_at_the_spec_layer():
+    """Capability gaps surface as one clear ValueError up front, not a
+    NotImplementedError deep inside a backend."""
+    xi = jnp.asarray(np.arange(8, dtype=np.int8))
+    with pytest.raises(ValueError, match="does not support top-k"):
+        rsort.topk(xi, 2, method="imc")
+    with pytest.raises(ValueError, match="key-value payloads"):
+        rsort.sort_kv(xi, jnp.arange(8, dtype=jnp.int32), method="imc")
+    with pytest.raises(ValueError, match="segmented"):
+        rsort.segment_sort(xi, segment_ids=jnp.zeros(8, jnp.int32),
+                           method="imc")
+
+
+def test_sort_defaults_context():
+    x = jnp.zeros((2, 8), jnp.float32)
+    assert sortspec.SortSpec().canonical(x).method == "auto"
+    with rsort.sort_defaults(method="bitonic", run_len=4096):
+        spec = sortspec.SortSpec().canonical(x)
+        assert spec.method == "bitonic" and spec.run_len == 4096
+        with rsort.sort_defaults(method="xla"):       # nesting shadows
+            assert sortspec.SortSpec().canonical(x).method == "xla"
+        assert sortspec.SortSpec().canonical(x).method == "bitonic"
+    assert sortspec.SortSpec().canonical(x).method == "auto"
+    with pytest.raises(ValueError, match="sort_defaults accepts"):
+        with rsort.sort_defaults(bogus=1):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# registry plumbing
+# ---------------------------------------------------------------------------
+
+def test_third_party_backend_is_a_drop_in():
+    """The api_redesign acceptance: a new engine registers and is planned,
+    priced, and callable with zero planner / front-door edits."""
+
+    class SnailSortBackend(sortspec.SortBackend):
+        name = "snail"
+        capabilities = sortspec.Capabilities(stable=True, max_n=1 << 10)
+
+        def sort(self, rows, *, descending=False, plan=None, interpret=None):
+            out = jnp.sort(rows, axis=-1)
+            return jnp.flip(out, -1) if descending else out
+
+        def sort_kv(self, keys, values, *, descending=False, plan=None,
+                    interpret=None):
+            order = jnp.argsort(keys, axis=-1, stable=True,
+                                descending=descending)
+            return (jnp.take_along_axis(keys, order, -1),
+                    jnp.take_along_axis(values, order, -1))
+
+    sortspec.register_backend(SnailSortBackend)
+    try:
+        assert "snail" in sortspec.backend_names()
+        # generic eligibility from the declared capabilities
+        assert planner._eligible("snail", 512, jnp.dtype(jnp.float32), 128)
+        assert not planner._eligible("snail", 4096, jnp.dtype(jnp.float32),
+                                     128)
+        # priced by the planner (default cost: +inf, never beats built-ins)
+        plan = planner.choose(512, 1)
+        assert plan.costs["snail"] == float("inf")
+        assert plan.method != "snail"
+        # but explicitly requestable through every front door
+        x = jnp.asarray(np.random.default_rng(1).standard_normal((2, 100)),
+                        jnp.float32)
+        out = np.asarray(rsort.sort(x, method="snail"))
+        np.testing.assert_array_equal(out, np.sort(np.asarray(x), -1))
+        order = np.asarray(rsort.argsort(x, method="snail", descending=True))
+        np.testing.assert_array_equal(
+            np.take_along_axis(np.asarray(x), order, -1),
+            np.flip(np.sort(np.asarray(x), -1), -1))
+    finally:
+        sortspec.unregister_backend("snail")
+    with pytest.raises(ValueError, match="method must be one of"):
+        rsort.sort(jnp.zeros((1, 4)), method="snail")
+
+
+def test_plan_cache_hits_and_invalidation():
+    planner.clear_plan_cache()
+    p1 = planner.choose_cached(100000, 1, jnp.float32)
+    assert planner.choose_cached(100000, 1, jnp.float32) is p1   # cache hit
+    assert planner.choose_cached(100000, 2, jnp.float32) is not p1
+    # registering a backend re-plans (the new engine may now win)
+    class NopBackend(sortspec.SortBackend):
+        name = "nop-test"
+    sortspec.register_backend(NopBackend)
+    try:
+        p2 = planner.choose_cached(100000, 1, jnp.float32)
+        assert p2 is not p1 and "nop-test" in p2.costs
+    finally:
+        sortspec.unregister_backend("nop-test")
+    planner.clear_plan_cache()
+    assert planner.choose_cached(100000, 1, jnp.float32) is not p1
+
+
+def test_spec_static_key_is_hashable_and_value_free():
+    spec = sortspec.SortSpec(values=jnp.zeros((2, 8)), descending=True)
+    k1 = spec.static_key((2, 8), jnp.float32)
+    k2 = sortspec.SortSpec(values=jnp.ones((2, 8)),
+                           descending=True).static_key((2, 8), jnp.float32)
+    assert k1 == k2 and hash(k1) == hash(k2)    # payload values don't plan
+    assert k1 != spec.static_key((2, 16), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# legacy surface
+# ---------------------------------------------------------------------------
+
+def test_sort_api_shims_forward_and_warn():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((2, 50)),
+                    jnp.float32)
+    sort_api._warned.clear()
+    with pytest.deprecated_call():
+        out = sort_api.sort(x, method="bitonic", descending=True)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(rsort.sort(x, method="bitonic",
+                                               descending=True)))
+    np.testing.assert_array_equal(
+        np.asarray(sort_api.argsort(x, method="radix")),
+        np.asarray(rsort.argsort(x, method="radix")))
+    v1, i1 = sort_api.topk(x, 5, method="pallas")
+    v2, i2 = rsort.topk(x, 5, method="pallas")
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_top_p_mask_axis_and_method_passthrough():
+    x = jnp.asarray(np.random.default_rng(7).standard_normal((4, 50)) * 3,
+                    jnp.float32)
+    base = sort_api.top_p_mask(x, 0.9)                       # auto default
+    for method in ("xla", "bitonic", "radix"):
+        np.testing.assert_array_equal(
+            np.asarray(sort_api.top_p_mask(x, 0.9, method=method)),
+            np.asarray(base), err_msg=method)
+    swapped = sort_api.top_p_mask(x.T, 0.9, axis=0)
+    np.testing.assert_array_equal(np.asarray(swapped).T, np.asarray(base))

@@ -1,7 +1,6 @@
 """End-to-end system behaviour: training runs converge, checkpoints resume
 bit-exactly, serving schedules and decodes, distributed sort works on a
 multi-device mesh (subprocess: needs its own device count)."""
-import json
 import os
 import subprocess
 import sys
