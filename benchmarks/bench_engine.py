@@ -22,14 +22,19 @@ Emits ``name,us_per_call,derived`` rows like the other suites (``cold`` rows
 carry ms in the value column, labelled in the name).  The summary rows
 compare merge vs pallas-bitonic at the largest n on both metrics.
 
+With ``--devices D`` (or an externally set
+``XLA_FLAGS=--xla_force_host_platform_device_count=D``) a distributed leg
+also runs: single-round sample-sort vs D-round odd-even transposition over
+the simulated mesh, plus the strategy ``planner.choose_distributed``
+auto-selects per n — the measured crossover for the README table.
+
   PYTHONPATH=src python -m benchmarks.bench_engine [--full] [--sizes 4096,...]
+      [--devices 8]
 """
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_SIZES = (4096, 65536, 1 << 20)
@@ -42,6 +47,7 @@ RADIX_INTERPRET_CAP = 65536
 
 def _time_cold_warm(make_fn, x, reps: int):
     """(cold first-call seconds, warm mean seconds) for a fresh jit."""
+    import jax
     f = jax.jit(make_fn)
     t0 = time.perf_counter()
     f(x).block_until_ready()
@@ -52,7 +58,61 @@ def _time_cold_warm(make_fn, x, reps: int):
     return cold, (time.perf_counter() - t0) / reps
 
 
+def _time_cold_warm_eager(fn, x, reps: int):
+    """Like ``_time_cold_warm`` but without an outer jit: the distributed
+    entry point runs cached jitted phases around one host sync (the
+    measured bucket capacity), so it is timed as called in practice."""
+    import jax
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(x))
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(x))
+    return cold, (time.perf_counter() - t0) / reps
+
+
+def run_distributed(sizes=DEFAULT_SIZES):
+    """sample vs oddeven over every local device; empty on 1-device hosts."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import distributed_sort as ds
+    from repro.engine import planner
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return []
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    rows, summary = [], {}
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        n -= n % n_dev                     # oddeven needs divisibility
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        reps = 3 if n <= 65536 else 1
+        for strat in ("oddeven", "sample"):
+            cold, warm = _time_cold_warm_eager(
+                lambda v, s=strat: ds.distributed_sort(v, mesh, strategy=s),
+                x, reps)
+            rows.append((f"engine.dist_{strat}.cold_ms.n{n}",
+                         round(cold * 1e3, 1), f"D={n_dev}"))
+            rows.append((f"engine.dist_{strat}.warm_us.n{n}",
+                         round(warm * 1e6, 1), f"D={n_dev}"))
+            summary[(strat, n)] = (cold, warm)
+        auto = planner.choose_distributed(n, n_dev).strategy
+        rows.append((f"engine.dist_auto.n{n}", 0.0, f"{n}:{auto}"))
+    n_max = max(n - n % n_dev for n in sizes)
+    oc, ow = summary[("oddeven", n_max)]
+    sc, sw = summary[("sample", n_max)]
+    rows.append((f"engine.dist_sample_vs_oddeven_warm_speedup.n{n_max}",
+                 0.0, round(ow / sw, 2)))
+    rows.append((f"engine.dist_sample_vs_oddeven_cold_speedup.n{n_max}",
+                 0.0, round(oc / sc, 2)))
+    return rows
+
+
 def run(sizes=DEFAULT_SIZES):
+    import jax
+    import jax.numpy as jnp
     from repro import engine
     from repro.core import sort_api
 
@@ -97,17 +157,28 @@ def run(sizes=DEFAULT_SIZES):
                      0.0, round(summary[("xla", rn)][1] / rw, 2)))
         rows.append((f"engine.radix_vs_merge_warm_speedup.n{rn}",
                      0.0, round(summary[("merge", rn)][1] / rw, 2)))
+    rows.extend(run_distributed(sizes))
     return rows
 
 
 def main() -> None:
     import argparse
+    import os
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="sweep up to 4M elements")
     ap.add_argument("--sizes", default="",
                     help="comma-separated n values (overrides presets)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N host-platform devices for the "
+                         "distributed rows (must be set before jax loads)")
     args = ap.parse_args()
+    if args.devices > 1:
+        # only effective if jax has not initialised yet — that is why every
+        # jax import in this module lives inside the run functions
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        os.environ["XLA_FLAGS"] = \
+            f"{os.environ.get('XLA_FLAGS', '')} {flag}".strip()
     if args.sizes:
         sizes = tuple(int(s) for s in args.sizes.split(","))
     else:

@@ -1,6 +1,9 @@
 """The paper's memory partitioning at cluster scale: every device sorts its
-shard in-VMEM, then odd-even bitonic merge rounds exchange shards over the
-mesh (ppermute = the temp-row operand exchange of Eq. 3-4).
+shard in-VMEM, then the shards combine over the mesh — either D odd-even
+bitonic merge rounds (each a temp-row operand exchange, Eq. 3-4) or the
+single-round sample-sort (splitters + ONE bucket all-to-all, §II-B's
+exchange-once structure).  `strategy="auto"` lets the planner's collective
+cost model pick per (n, D).
 
 Run: PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python examples/distributed_sort_demo.py
@@ -15,17 +18,37 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import distributed_sort as ds
+from repro.engine import planner, samplesort
 
 mesh = jax.make_mesh((len(jax.devices()),), ("data",))
 n_dev = mesh.shape["data"]
 local = 4096
-x = np.random.default_rng(0).standard_normal(n_dev * local).astype(np.float32)
+n = n_dev * local
+x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
 xs = jax.device_put(x, NamedSharding(mesh, P("data")))
-out = ds.distributed_sort(xs, mesh)
+
+plan = planner.choose_distributed(n, n_dev, xs.dtype)
+out = ds.distributed_sort(xs, mesh)                  # strategy="auto"
 assert np.allclose(np.array(out), np.sort(x))
-vol = ds.collective_bytes_per_device(n_dev, local, 4)
-print(f"globally sorted {n_dev * local} elements over {n_dev} devices")
-print(f"merge-phase ICI volume: {vol/1e3:.1f} kB/device "
-      f"({n_dev} rounds x {local*4/1e3:.1f} kB)")
+print(f"globally sorted {n} elements over {n_dev} devices "
+      f"(auto -> {plan.strategy}; modeled ns: "
+      + ", ".join(f"{k}={v:.3g}" for k, v in sorted(plan.costs.items()))
+      + ")")
+
+oe = ds.collective_bytes_per_device(n_dev, local, 4)
+ss = samplesort.alltoall_bytes_per_device(n_dev, local, 4)
+print(f"ICI volume/device: odd-even {oe/1e3:.1f} kB ({n_dev} rounds x "
+      f"{local*4/1e3:.1f} kB) vs sample {ss/1e3:.1f} kB "
+      f"(1 bucket all-to-all + 1 rebalance)")
+
+# the sample path also covers what odd-even cannot express: uneven length,
+# descending, and a payload riding the buckets
+k = np.random.default_rng(1).integers(0, 100, n - 3).astype(np.int32)
+sk, sv = ds.distributed_sort(jax.numpy.asarray(k), mesh, strategy="sample",
+                             descending=True,
+                             values=jax.numpy.arange(n - 3))
+assert (np.array(sk) == np.flip(np.sort(k))).all()
+assert (k[np.array(sv)] == np.array(sk)).all()
+print(f"sample-sort kv/descending/uneven: {n - 3} elements OK")
 print("device order is globally ascending:",
       bool(np.all(np.diff(np.array(out)) >= 0)))

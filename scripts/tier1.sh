@@ -11,5 +11,14 @@ if command -v ruff >/dev/null 2>&1; then
 else
   echo "[tier1] ruff not installed; skipping lint (CI still runs it)" >&2
 fi
+# TIER1_MULTIDEV=<D> runs the distributed-sort suites on D simulated
+# host-platform devices instead of the full single-device suite — the CI
+# multi-device job sets TIER1_MULTIDEV=8 so every push exercises the
+# sample-sort / odd-even paths at real D>1, not just the degenerate D=1.
+if [[ -n "${TIER1_MULTIDEV:-}" ]]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=${TIER1_MULTIDEV} ${XLA_FLAGS:-}"
+  exec python -m pytest -x -q --durations=10 \
+    tests/test_distributed_sort.py tests/test_samplesort.py "$@"
+fi
 # --durations=10 surfaces the suite's hot spots (it runs ~9 min on CPU CI)
 exec python -m pytest -x -q --durations=10 "$@"

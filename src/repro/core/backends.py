@@ -1,4 +1,4 @@
-"""The six built-in SortBackend implementations.
+"""The built-in SortBackend implementations.
 
 Each backend is a thin adapter from the registry's rows-form contract
 (``(rows, n)``, last axis) onto an existing engine: the jnp/XLA reference,
@@ -160,27 +160,16 @@ class ImcBackend(SortBackend):
         return jnp.flip(out, axis=-1) if descending else out
 
     def argsort(self, rows, *, descending=False, plan=None, interpret=None):
-        """Argsort on the bit-serial sorter via an encoded (key, index)
-        composite: the codec key in the high bits, the position in the low
-        bits.  Composites are unique, so the (unstable) network still yields
-        the engine's tie convention — ties keep ascending index order — in
-        both directions (``descending`` complements only the key bits).
-        """
+        """Argsort on the bit-serial sorter via the shared
+        ``keycodec.argsort_composite`` packing: unique composites give the
+        (unstable) network the engine's tie convention — ties keep
+        ascending index order in both directions."""
         from repro.core import keycodec, sorter
         self.check_dtype(rows.dtype)
-        n = rows.shape[-1]
-        idx_bits = max(1, (n - 1).bit_length())
-        if keycodec.key_bits(rows.dtype) + idx_bits > 32:
-            raise ValueError(
-                f"imc argsort packs (key, index) into one word: "
-                f"key_bits({jnp.dtype(rows.dtype).name})="
-                f"{keycodec.key_bits(rows.dtype)} + index bits({n})="
-                f"{idx_bits} exceeds the 32-bit array word; use a narrower "
-                f"key dtype or a smaller n")
+        comp, idx_bits = keycodec.argsort_composite(rows,
+                                                    descending=descending)
         # the CAS gate program is built for power-of-two word widths
         width = next_pow2(keycodec.key_bits(rows.dtype) + idx_bits)
-        enc = keycodec.encode(rows, descending=descending).astype(jnp.uint32)
-        comp = (enc << idx_bits) | jnp.arange(n, dtype=jnp.uint32)[None, :]
         res = sorter.sort_in_memory(comp, width=width)
         return (res.values & ((1 << idx_bits) - 1)).astype(jnp.int32)
 
@@ -253,3 +242,79 @@ class RadixBackend(SortBackend):
         enc = keycodec.encode(keys, descending=descending)
         sk, sv = _rs.sort_kv_blocks(enc, values, interpret=interpret)
         return keycodec.decode(sk, keys.dtype, descending=descending), sv
+
+
+# ---------------------------------------------------------------------------
+# distributed — mesh-global sorting (sample-sort + odd-even fallback)
+# ---------------------------------------------------------------------------
+
+@register_backend
+class DistributedBackend(SortBackend):
+    """Mesh-global sorting behind the registry: the single-round
+    sample-sort (engine/samplesort.py) with odd-even transposition as the
+    small-(n, D) fallback, strategy priced by
+    ``planner.choose_distributed``.
+
+    The natural entry is a spec carrying mesh fields —
+    ``SortSpec(mesh=..., axis_name=...)`` through ``repro.sort`` — which
+    lands on :meth:`sort_mesh`.  The rows-form methods keep the backend an
+    honest registry citizen (capability sweeps, single-host use): each row
+    is sorted globally over whatever device mesh this host offers, which
+    on one device degenerates to the local registered-backend sort.
+    Never auto-dispatched by the single-device planner; the mesh path has
+    its own cost model.
+    """
+    name = "distributed"
+    capabilities = Capabilities(dtypes=frozenset(_keycodec.SUPPORTED),
+                                stable=False, supports_topk=False,
+                                supports_segments=False, auto_dispatch=False,
+                                substrate="mesh")
+
+    @staticmethod
+    def _host_mesh():
+        return jax.make_mesh((len(jax.devices()),), ("data",))
+
+    # -- mesh execution (what SortSpec.mesh routes to) ----------------------
+    def sort_mesh(self, x, mesh, axis_name, *, values=None, descending=False,
+                  local_method=None, interpret=None):
+        from repro.core import distributed_sort as _ds
+        return _ds.distributed_sort(x, mesh, axis_name,
+                                    local_method=local_method,
+                                    strategy="auto", descending=descending,
+                                    values=values, interpret=interpret)
+
+    # -- rows form ----------------------------------------------------------
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.engine import samplesort
+        self.check_dtype(rows.dtype)
+        mesh = self._host_mesh()
+        return jnp.stack([
+            samplesort.sample_sort(r, mesh, "data", descending=descending,
+                                   interpret=interpret) for r in rows])
+
+    def sort_kv(self, keys, values, *, descending=False, plan=None,
+                interpret=None):
+        from repro.engine import samplesort
+        self.check_dtype(keys.dtype)
+        mesh = self._host_mesh()
+        outs = [samplesort.sample_sort(k, mesh, "data", values=v,
+                                       descending=descending,
+                                       interpret=interpret)
+                for k, v in zip(keys, values)]
+        return (jnp.stack([k for k, _ in outs]),
+                jnp.stack([v for _, v in outs]))
+
+    def argsort(self, rows, *, descending=False, plan=None, interpret=None):
+        """Engine tie convention (ties keep ascending index order) on an
+        unstable distributed sort, via the shared
+        ``keycodec.argsort_composite`` packing (same width limit as the
+        imc composite path)."""
+        from repro.engine import samplesort
+        self.check_dtype(rows.dtype)
+        comp, idx_bits = _keycodec.argsort_composite(rows,
+                                                     descending=descending)
+        mesh = self._host_mesh()
+        out = jnp.stack([samplesort.sample_sort(c, mesh, "data",
+                                                interpret=interpret)
+                         for c in comp])
+        return (out & ((1 << idx_bits) - 1)).astype(jnp.int32)

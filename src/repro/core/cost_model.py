@@ -129,6 +129,10 @@ class DeviceSortConstants:
     merge_level: float = 12.0    # one merge-path level: c * n
     radix: float = 12.0          # LSD digit pass: c * n * ceil(b/8) passes
     pallas_interpret_penalty: float = 300.0   # CPU interpret-mode multiplier
+    # mesh collectives (distributed dispatch): one collective round costs
+    # alpha (launch/latency) + bytes-moved-per-device / bandwidth
+    collective_alpha: float = 2_000.0         # ns per collective launch
+    collective_per_byte: float = 0.02         # ns/byte (~50 GB/s ICI link)
 
 
 def _log2(v: float) -> float:
@@ -171,6 +175,55 @@ def device_sort_cost_ns(method: str, n: int, batch: int = 1, *,
         levels = _log2(tiles) if tiles > 1 else 0.0
         return gen + c.merge_level * batch * padded * levels
     raise ValueError(f"no device cost model for method {method!r}")
+
+
+def collective_cost_ns(n_dev: int, m: int, itemsize: int,
+                       consts: DeviceSortConstants = None) -> float:
+    """Estimated ns for ONE collective round in which every device
+    exchanges ``n_dev`` shards of ``m`` elements.
+
+    ``n_dev=1`` prices a neighbour ppermute (odd-even transposition pays D
+    of these); ``n_dev=D`` prices a capacity-padded all-to-all (sample-sort
+    pays two: the bucket exchange and the rank rebalance).  This is the
+    cluster-scale Eq. 3-4 term: temp-row operand movement priced per
+    exchange, with the strategy choice reducing to *how many exchanges*.
+    """
+    c = consts or DeviceSortConstants()
+    return c.collective_alpha + c.collective_per_byte * n_dev * m * itemsize
+
+
+def distributed_sort_cost_ns(strategy: str, n: int, n_dev: int,
+                             itemsize: int = 4, *,
+                             consts: DeviceSortConstants = None) -> float:
+    """Estimated ns to globally sort ``n`` elements over ``n_dev`` devices.
+
+    Both strategies pay the same local shard sort; they differ in movement
+    and merge structure:
+
+      oddeven   D rounds x (one shard ppermute + a 2m bitonic merge box)
+      sample    2 all-to-alls + one merge-path tree over the received runs
+
+    so odd-even wins at small (n, D) on collective launch count and sample
+    wins once the per-round merge work dominates — the planner picks the
+    winner per workload (``planner.choose_distributed``).
+    """
+    c = consts or DeviceSortConstants()
+    m = -(-n // n_dev)
+    local = c.xla * m * _log2(m)
+    if strategy == "oddeven":
+        round_merge = c.bitonic * (2 * m) * _log2(2 * m)
+        return local + n_dev * (collective_cost_ns(1, m, itemsize, c)
+                                + round_merge)
+    if strategy == "sample":
+        # r*m·log r aggregates the capacity-padded exchange staging and
+        # merge tree over received runs; + m covers the rank-rebalance
+        # shard materialisation — fitted so the modeled crossover matches
+        # the measured one (README §Distributed sort)
+        r = 1 << max(0, (n_dev - 1).bit_length())
+        merge = c.merge_level * ((r * m) * (_log2(r) if r > 1 else 0.0) + m)
+        return local + 2 * collective_cost_ns(n_dev, m, itemsize, c) + merge
+    raise ValueError(
+        f"no distributed cost model for strategy {strategy!r}")
 
 
 # ---- report helpers ----------------------------------------------------------

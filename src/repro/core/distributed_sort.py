@@ -6,20 +6,33 @@ scale the same structure maps 1:1 onto a device mesh:
 
     memory partition        ->  TPU chip (sorts its shard in-VMEM)
     intra-stage parallelism ->  SPMD over the mesh axis
-    temp-row exchange       ->  jax.lax.ppermute shard exchange (ICI)
+    temp-row exchange       ->  shard exchange over ICI
 
-Algorithm: odd-even transposition merge over D devices.  Each device first
-sorts its local shard (any registered backend), then D rounds of
-neighbour-exchange + bitonic-merge-split.  After D rounds the concatenation
-of shards in device order is globally sorted — the standard block-sorting
-correctness result.
+One entry point, two strategies behind it (``strategy="auto"`` prices them
+with ``planner.choose_distributed``):
 
-The collective cost is exactly one shard (m elements) over ICI per round per
-device pair: ``collective_bytes(D, m) = D * m * itemsize`` per device — the
-Eq. 3-4 analogue that shows up in the §Roofline collective term.
+  ``oddeven``  odd-even transposition merge: D rounds of neighbour
+               ppermute + bitonic merge-split.  Minimal per-round state,
+               but every shard moves D times — the repeated
+               cross-partition traffic in-memory designs exist to avoid.
+               Kept as the small-(n, D) fallback (fewer collective
+               launches than an all-to-all when shards are tiny);
+               ascending, evenly divisible, value-only.
+  ``sample``   single-round splitter-based sample-sort
+               (``engine/samplesort.py``): local sort, one bucket
+               all-to-all, merge-path merge, rank rebalance.  Handles
+               uneven lengths, descending, and key-value payloads (the
+               keycodec reduces them all to one ascending unsigned sort),
+               so any request odd-even cannot express routes here
+               regardless of the cost model.
+
+The odd-even collective cost is one shard (m elements) over ICI per round
+per device pair: ``collective_bytes(D, m) = D * m * itemsize`` per device —
+the Eq. 3-4 analogue priced by ``cost_model.collective_cost_ns``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -35,17 +48,24 @@ except AttributeError:
 def bitonic_merge_halves(lo_sorted: jnp.ndarray, hi_sorted: jnp.ndarray):
     """Merge two ascending arrays (each length m) and return the ascending
     (low half, high half).  Uses the bitonic merge box: concat(a, reverse(b))
-    is bitonic, so only the merge substages of the network are needed."""
+    is bitonic, so only the merge substages of the network are needed.
+
+    Substages use the reshape-addressed form (a (n/(2j), 2, j) view pairs
+    index i with i^j) rather than per-substage gathers: chained 1-D gathers
+    send XLA's CPU pipeline into pathological compile times once shards
+    reach engine scale (the same failure mode PR 1 fixed in
+    ``sort_api.bitonic_sort``), while the reshape view compiles flat.
+    """
     m = lo_sorted.shape[-1]
     z = jnp.concatenate([lo_sorted, jnp.flip(hi_sorted, -1)], axis=-1)
     n = 2 * m
-    ix = jnp.arange(n)
+    lead = z.shape[:-1]
     j = n // 2
     while j >= 1:
-        partner = ix ^ j
-        pz = jnp.take(z, partner, axis=-1)
-        keep_min = ix < partner
-        z = jnp.where(keep_min, jnp.minimum(z, pz), jnp.maximum(z, pz))
+        v = z.reshape(*lead, n // (2 * j), 2, j)
+        lo, hi = v[..., 0, :], v[..., 1, :]
+        z = jnp.stack([jnp.minimum(lo, hi), jnp.maximum(lo, hi)],
+                      axis=-2).reshape(*lead, n)
         j //= 2
     return z[..., :m], z[..., m:]
 
@@ -73,11 +93,21 @@ def _round_permutation(n_dev: int, even_round: bool):
 
 
 def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
-                     local_method: Optional[str] = "xla") -> jnp.ndarray:
+                     local_method: Optional[str] = "xla", *,
+                     strategy: str = "auto", descending: bool = False,
+                     values: Optional[jnp.ndarray] = None,
+                     interpret: Optional[bool] = None):
     """Globally sort a 1-D array sharded over ``axis_name`` of ``mesh``.
 
-    Length must divide evenly by the axis size.  Returns the globally-sorted
-    array with the same sharding.
+    Returns the globally-sorted array with the same sharding (or
+    ``(keys, values)`` when a payload rides along).
+
+    ``strategy`` is ``"auto"`` (cost-model pick via
+    ``planner.choose_distributed``), ``"sample"`` (single-round
+    sample-sort) or ``"oddeven"`` (D-round transposition merge).  Requests
+    odd-even cannot express — uneven lengths, ``descending``, payloads —
+    always route to sample-sort; forcing ``strategy="oddeven"`` for one of
+    those raises.
 
     ``local_method`` accepts every registered backend name including
     ``"merge"`` and ``"auto"`` (or ``None`` for the ambient ``sort_defaults``
@@ -86,13 +116,40 @@ def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
     vocab-scale shard gets tiled run generation + merge tree while a small
     one stays on a single-tile backend.
     """
-    from repro import sort as _front
+    from repro.engine import planner, samplesort
     n_dev = mesh.shape[axis_name]
-    if x.shape[-1] % n_dev:
-        raise ValueError(f"array length {x.shape[-1]} must divide {n_dev}")
+    n = x.shape[-1]
+    needs_sample = bool(descending or values is not None or n % n_dev)
+    if strategy == "auto":
+        strategy = "sample" if needs_sample \
+            else planner.choose_distributed_cached(n, n_dev, x.dtype).strategy
+    if strategy not in ("sample", "oddeven"):
+        raise ValueError(
+            f"strategy must be 'auto', 'sample' or 'oddeven', "
+            f"got {strategy!r}")
+    if strategy == "sample":
+        return samplesort.sample_sort(x, mesh, axis_name, values=values,
+                                      descending=descending,
+                                      local_method=local_method,
+                                      interpret=interpret)
+    if needs_sample:
+        raise ValueError(
+            "oddeven strategy needs an evenly divisible, ascending, "
+            "value-only sort (length % n_dev == 0, descending=False, "
+            "values=None); use strategy='sample' or 'auto'")
+    return _oddeven_fn(mesh, axis_name, local_method, interpret)(x)
+
+
+@functools.lru_cache(maxsize=64)
+def _oddeven_fn(mesh: Mesh, axis_name: str, local_method: Optional[str],
+                interpret: Optional[bool] = None):
+    """Cached jitted odd-even program — eagerly re-tracing the D-round
+    loop per call costs orders of magnitude more than running it."""
+    n_dev = mesh.shape[axis_name]
 
     def local(xs):
-        xs = _front.sort(xs, method=local_method)
+        from repro import sort as _front
+        xs = _front.sort(xs, method=local_method, interpret=interpret)
         my = jax.lax.axis_index(axis_name)
         for r in range(n_dev):
             pairs = _round_permutation(n_dev, r % 2 == 0)
@@ -108,7 +165,7 @@ def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
 
     spec = P(axis_name)
     fn = _shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=spec)
-    return fn(x)
+    return jax.jit(fn)
 
 
 def collective_bytes_per_device(n_dev: int, local_elems: int,

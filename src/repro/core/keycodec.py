@@ -100,6 +100,41 @@ def encode(x: jnp.ndarray, *, descending: bool = False) -> jnp.ndarray:
     return u
 
 
+def composite_index_bits(n: int) -> int:
+    """Index bits an argsort composite needs for row length ``n``."""
+    return max(1, (n - 1).bit_length())
+
+
+def composite_fits(dtype, n: int) -> bool:
+    """Can an (encoded key, index) composite for ``dtype`` rows of length
+    ``n`` pack into one 32-bit word?"""
+    return key_bits(dtype) + composite_index_bits(n) <= 32
+
+
+def argsort_composite(x: jnp.ndarray, *, descending: bool = False):
+    """Pack ``x`` into unique uint32 (encoded key << idx_bits) | index
+    composites -> ``(composite, idx_bits)``.
+
+    Sorting the composites ascending yields the engine's argsort tie
+    convention on any *unstable* value sorter — ties keep ascending index
+    order in both directions, because ``descending`` complements only the
+    key bits while the index bits always ascend.  Shared by the imc
+    bit-serial path and the distributed backend (both sort values, not
+    permutations); the sorted composite's low bits are the permutation.
+    """
+    n = x.shape[-1]
+    idx_bits = composite_index_bits(n)
+    if not composite_fits(x.dtype, n):
+        raise ValueError(
+            f"argsort (key, index) composite packs into one 32-bit word: "
+            f"key_bits({jnp.dtype(x.dtype).name})={key_bits(x.dtype)} + "
+            f"index bits({n})={idx_bits} exceeds 32; use a narrower key "
+            f"dtype or a smaller n")
+    enc = encode(x, descending=descending).astype(jnp.uint32)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    return (enc << idx_bits) | jnp.broadcast_to(idx, enc.shape), idx_bits
+
+
 def decode(keys: jnp.ndarray, dtype, *, descending: bool = False
            ) -> jnp.ndarray:
     """Inverse of :func:`encode`: unsigned keys back to ``dtype``, bit-exact."""

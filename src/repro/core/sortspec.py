@@ -272,6 +272,9 @@ class SortSpec:
       segment_ids / row_splits     ragged: sort within each segment
       valid_lengths                padded rows: sort each row's valid prefix
       fill_value                   what overwrites the padded tail
+      mesh / axis_name             distributed: sort globally over a mesh
+                                   axis (single-round sample-sort / odd-even
+                                   fallback, planner-priced)
       method / run_len / interpret execution knobs (None -> ambient default)
 
     ``eq=False`` keeps the dataclass hashable-by-identity even though it may
@@ -288,6 +291,8 @@ class SortSpec:
     row_splits: Optional[jnp.ndarray] = None
     valid_lengths: Optional[jnp.ndarray] = None
     fill_value: Any = 0
+    mesh: Any = None               # jax.sharding.Mesh for distributed sorts
+    axis_name: Optional[str] = None
     method: Optional[str] = None
     run_len: Optional[int] = None
     interpret: Optional[bool] = None
@@ -309,6 +314,34 @@ class SortSpec:
         if method not in names:
             raise ValueError(
                 f"method must be one of {names}, got {method!r}")
+        axis_name = self.axis_name
+        if axis_name is not None and self.mesh is None:
+            raise ValueError("axis_name requires a mesh")
+        if self.mesh is not None:
+            if axis_name is None:
+                axis_name = self.mesh.axis_names[0]
+            elif axis_name not in self.mesh.axis_names:
+                raise ValueError(
+                    f"axis_name {axis_name!r} not in mesh axes "
+                    f"{self.mesh.axis_names}")
+            if ndim != 1:
+                raise ValueError(
+                    "mesh-distributed specs sort flat 1-D arrays; "
+                    f"got a {ndim}-d input")
+            if (self.k is not None or self.indices or self.stable
+                    or self.segment_ids is not None
+                    or self.row_splits is not None
+                    or self.valid_lengths is not None):
+                raise ValueError(
+                    "mesh-distributed specs support plain and key-value "
+                    "sorts only (no k/indices/stable/segments/"
+                    "valid_lengths)")
+            if method not in ("auto", "distributed"):
+                raise ValueError(
+                    f"mesh-distributed specs run the 'distributed' "
+                    f"backend; method must be 'auto' or 'distributed', "
+                    f"got {method!r}")
+            method = "distributed"
         k = self.k
         n = x.shape[axis]
         if k is not None:
@@ -363,7 +396,7 @@ class SortSpec:
         descending = True if k is not None else self.descending
         return dataclasses.replace(self, axis=axis, method=method, k=k,
                                    descending=descending, run_len=run_len,
-                                   interpret=interpret)
+                                   axis_name=axis_name, interpret=interpret)
 
     def static_key(self, shape, dtype) -> tuple:
         """Hashable reduction of the spec to its statics + the operand's
@@ -372,9 +405,15 @@ class SortSpec:
         cache (``planner.choose_cached``) keys on the statics it derives
         from the spec; this method is the equivalent key for external
         caching layers (e.g. a serving tier memoizing compiled steps)."""
+        # axis layout AND device identity: two same-shape submeshes over
+        # disjoint devices must not share an externally cached executable
+        mesh_key = None if self.mesh is None else (
+            tuple(zip(self.mesh.axis_names, self.mesh.devices.shape)),
+            tuple(d.id for d in self.mesh.devices.flat))
         return (self.axis, self.descending, self.stable, self.k,
                 self.values is not None, self.indices,
                 self.segment_ids is not None, self.row_splits is not None,
                 self.valid_lengths is not None, self.fill_value, self.method,
+                mesh_key, self.axis_name,
                 self.run_len, self.interpret, tuple(shape),
                 jnp.dtype(dtype).name)

@@ -26,7 +26,9 @@ from repro.engine import merge as merge  # noqa: F401  (re-export)
 from repro.engine import planner, runs
 from repro.engine.merge import kway_merge, merge_pairs, merge_runs  # noqa: F401
 from repro.engine.planner import (  # noqa: F401
-    Plan, calibrate, choose, choose_cached, choose_method, clear_plan_cache)
+    DistPlan, Plan, calibrate, choose, choose_cached, choose_distributed,
+    choose_distributed_cached, choose_method, clear_plan_cache)
+from repro.engine.samplesort import sample_sort  # noqa: F401
 from repro.engine.segmented import (  # noqa: F401
     group_tokens_by_expert, segment_ids_from_row_splits, segmented_argsort,
     segmented_sort, sort_padded_rows)

@@ -6,16 +6,24 @@ Each level is O(n) ranking work, so the whole tree is O(n log(n/run_len)) on
 top of the O(n log run_len) run generation — the O(n log n) total that the
 whole-array bitonic network (O(n log^2 n) CAS count) cannot reach.
 
-Two interchangeable merge backends:
+Three interchangeable merge backends:
 
   ``xla``     rank merge in pure jnp: each element's output position is its
               own index plus a binary-searched cross-rank in the partner run
               (searchsorted), materialised with a batched scatter.
   ``pallas``  the diagonal-partitioned VMEM kernel (kernels/merge_path.py).
+  ``bitonic`` the word-parallel bitonic merge box (reshape-addressed
+              min/max network).  O(n log n) compare-swaps versus the other
+              backends' O(n) ranking work, but every op is a branchless
+              SIMD min/max — off-TPU that beats the gather-bound rank
+              merge by a wide margin, so the distributed sample-sort uses
+              it as its interpret-mode merge.  Needs power-of-two run
+              lengths and is NOT stable (ties follow a consistent
+              left-wins predicate, payloads stay attached to their keys).
 
-Both are ascending-stable (left run wins ties); descending merges flip in,
-merge ascending, flip out.  Key-value variants carry an int payload for
-argsort / top-k.
+``xla``/``pallas`` are ascending-stable (left run wins ties); descending
+merges flip in, merge ascending, flip out.  Key-value variants carry an
+int payload for argsort / top-k.
 """
 from __future__ import annotations
 
@@ -26,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.engine import runs as _runs
 
-MERGE_BACKENDS = ("xla", "pallas")
+MERGE_BACKENDS = ("xla", "pallas", "bitonic")
 
 
 def _vsearch(sorted_rows: jnp.ndarray, queries: jnp.ndarray, side: str):
@@ -61,6 +69,39 @@ def _rank_merge(a, b, va, vb):
     return out, vout
 
 
+def _bitonic_box_merge(a, b, va, vb):
+    """Merge box over concat(a, reverse(b)) — a bitonic sequence, so only
+    the log2(2L) merge substages are needed, each a (pairs, 2, j) reshape
+    view + min/max (the same reshape-addressed form as
+    ``distributed_sort.bitonic_merge_halves``; gather chains would stall
+    XLA's CPU compiler).  With a payload the comparator is an explicit
+    a<=b predicate so payloads follow their keys through every swap."""
+    rows, l = a.shape
+    if l & (l - 1):
+        raise ValueError(
+            f"bitonic merge backend needs power-of-two run lengths, got {l}")
+    n = 2 * l
+    z = jnp.concatenate([a, jnp.flip(b, -1)], -1)
+    w = None if va is None else jnp.concatenate([va, jnp.flip(vb, -1)], -1)
+    j = n // 2
+    while j >= 1:
+        zv = z.reshape(rows, n // (2 * j), 2, j)
+        ka, kb = zv[:, :, 0, :], zv[:, :, 1, :]
+        if w is None:
+            z = jnp.stack([jnp.minimum(ka, kb), jnp.maximum(ka, kb)],
+                          axis=2).reshape(rows, n)
+        else:
+            wv = w.reshape(rows, n // (2 * j), 2, j)
+            pa, pb = wv[:, :, 0, :], wv[:, :, 1, :]
+            pred = ka <= kb
+            z = jnp.stack([jnp.where(pred, ka, kb), jnp.where(pred, kb, ka)],
+                          axis=2).reshape(rows, n)
+            w = jnp.stack([jnp.where(pred, pa, pb), jnp.where(pred, pb, pa)],
+                          axis=2).reshape(rows, n)
+        j //= 2
+    return z, w
+
+
 def merge_pairs(a: jnp.ndarray, b: jnp.ndarray, *, descending: bool = False,
                 backend: str = "xla", values: Tuple = (None, None),
                 interpret: Optional[bool] = None):
@@ -84,6 +125,8 @@ def merge_pairs(a: jnp.ndarray, b: jnp.ndarray, *, descending: bool = False,
         else:
             out, vout = _mp.merge_pairs_kv_blocks(a, b, va, vb,
                                                   interpret=interpret)
+    elif backend == "bitonic":
+        out, vout = _bitonic_box_merge(a, b, va, vb)
     else:
         out, vout = _rank_merge(a, b, va, vb)
     if descending:

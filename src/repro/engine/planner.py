@@ -99,6 +99,55 @@ def choose_method(n: int, batch: int = 1, dtype=jnp.float32) -> str:
 
 
 # ---------------------------------------------------------------------------
+# distributed dispatch — sample-sort vs odd-even transposition
+# ---------------------------------------------------------------------------
+
+DIST_STRATEGIES = ("sample", "oddeven")
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Dispatch decision for a mesh-global sort of n over n_dev devices."""
+    strategy: str                # "sample" | "oddeven"
+    n_dev: int
+    costs: Dict[str, float]      # estimated ns per strategy
+
+
+def choose_distributed(n: int, n_dev: int, dtype=jnp.float32) -> DistPlan:
+    """Price both distributed strategies with the collective cost term
+    (``cost_model.collective_cost_ns``) and return the cheaper one.
+
+    Odd-even transposition pays D collective launches but only a bitonic
+    merge box per round; sample-sort pays two capacity-padded all-to-alls
+    plus one merge-path tree.  Small (n, D) therefore stays on odd-even
+    and large workloads cross over to the single-round exchange — the
+    mesh-level mirror of the engine's run-length crossover.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    consts = constants()
+    costs = {
+        s: cost_model.distributed_sort_cost_ns(s, n, n_dev, itemsize,
+                                               consts=consts)
+        for s in DIST_STRATEGIES
+    }
+    return DistPlan(strategy=min(costs, key=costs.__getitem__),
+                    n_dev=n_dev, costs=costs)
+
+
+def choose_distributed_cached(n: int, n_dev: int,
+                              dtype=jnp.float32) -> DistPlan:
+    """``choose_distributed`` memoized alongside the single-device plans —
+    same invalidation rules (calibration state, registry generation)."""
+    key = ("dist", n, n_dev, jnp.dtype(dtype).name, id(_measured),
+           sortspec.registry_generation(), jax.default_backend())
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = choose_distributed(n, n_dev, dtype)
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
 # plan cache
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,448 @@
+"""Single-round distributed sample-sort — splitters instead of D rounds.
+
+``core/distributed_sort.py``'s odd-even transposition moves every shard D
+times over ICI: D neighbour-exchange rounds, each paying one shard of
+traffic plus a 2m-wide bitonic merge box.  That is exactly the repeated
+cross-partition movement the paper eliminates inside one SRAM macro (§II-B
+partitions sort concurrently and pay only the Eq. 3-4 temp-row cycles to
+exchange operands once per stage).  This module is the cluster-scale
+analogue of that single-exchange structure:
+
+  1. **local sort** — each device sorts its shard through the registered
+     backend stack (``repro.sort``, planner-dispatched), the §II-B
+     "partitions sort concurrently" step;
+  2. **splitters** — every shard contributes s regular samples; one tiny
+     all-gather + sort yields D-1 global splitters;
+  3. **partition** — each sorted shard is cut against the splitters into D
+     buckets (bucket d holds the keys destined for device d).  The bucket
+     histogram can run on the same per-tile one-hot digit-histogram kernel
+     the LSD radix sort uses (``kernels/radix_sort.py``) — the splitter
+     interval index plays the digit;
+  4. **exchange** — ONE all-to-all moves every bucket to its owner (the
+     temp-row operand exchange, paid once instead of D times);
+  5. **merge** — each device merges its received runs with the merge-path
+     tree (``engine/merge.py``), then a rank-directed rebalance restores
+     equal m-element shards so the concatenation over the mesh axis is the
+     globally sorted array.
+
+The all-to-all needs one static per-(source, destination) bucket capacity.
+``m`` is always safe (a source bucket can never exceed its shard) but
+inflates the exchange and merge D-fold, so the sort runs **two phases**:
+phase 1 (local sort + splitters + bucket bounds) comes back to the host,
+the *measured* maximum bucket count sets the capacity, and phase 2
+(exchange + merge + rebalance) runs with buffers sized to what the data
+actually needs — with regular sampling that is ~m/D per pair, not m.  The
+only cost is one tiny host sync of the (D, D) bound table between two
+cached jitted programs.
+
+Everything runs on **encoded keys** (``core/keycodec.py``): signed ints,
+floats and ``descending`` all reduce to one ascending unsigned sort, and
+key-value payloads ride the same buckets.  Uneven global lengths are padded
+to D*m with the maximal encoded key and tracked with explicit validity
+counts end to end — pads can tie genuine extreme keys, so no step ever
+infers validity from a sentinel comparison.
+
+Keys must be NaN-free floats / any keycodec dtype (same contract as the
+radix backend).  The sort is not stable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import keycodec
+from repro.engine.merge import merge_runs
+
+try:  # jax >= 0.5 exports shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+__all__ = ["sample_sort", "select_splitters", "bucket_bounds",
+           "default_samples_per_shard", "alltoall_bytes_per_device"]
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def default_samples_per_shard(local_n: int, n_dev: int) -> int:
+    """Regular-sampling oversampling: enough samples that splitters land
+    within a small factor of the ideal quantiles, capped by the shard."""
+    return max(1, min(local_n, max(8, 2 * n_dev)))
+
+
+def select_splitters(samples: jnp.ndarray, n_dev: int) -> jnp.ndarray:
+    """(D*s,) pooled samples -> (D-1,) global splitters (encoded keys)."""
+    pooled = jnp.sort(samples.reshape(-1))
+    total = pooled.shape[0]
+    pos = (jnp.arange(1, n_dev) * total) // n_dev
+    return pooled[pos]
+
+
+def bucket_bounds(ks: jnp.ndarray, splitters: jnp.ndarray, *,
+                  use_histogram: bool = False,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(D+1,) bucket boundaries of a *sorted* shard against the splitters.
+
+    Bucket d is ``ks[bounds[d]:bounds[d+1]]`` — the keys destined for
+    device d (keys equal to a splitter go to the lower bucket).  Two
+    equivalent routes:
+
+      * ``use_histogram=False`` — binary search: the shard is sorted, so
+        the boundaries are just ``searchsorted(ks, splitters, 'right')``.
+      * ``use_histogram=True`` — the radix kernel's per-tile one-hot
+        digit histogram (kernels/radix_sort.py) with the splitter interval
+        index as the digit; boundaries are the histogram's exclusive
+        prefix sum.  Same numbers, but the counting runs on the VMEM
+        kernel the radix backend already ships (the TPU path).
+    """
+    m = ks.shape[0]
+    n_dev = splitters.shape[0] + 1
+    if n_dev == 1:
+        return jnp.asarray([0, m], jnp.int32)
+    if use_histogram:
+        from repro.kernels import radix_sort as _rs
+        ids = jnp.searchsorted(splitters, ks, side="left").astype(jnp.int32)
+        interp = (jax.default_backend() != "tpu") if interpret is None \
+            else interpret
+        # tile the shard exactly like the radix passes do — one full-shard
+        # row would materialise an un-tiled (1, m, D) one-hot in VMEM.
+        # Pad slots carry an extra bucket id (n_dev) counted into a
+        # throwaway histogram column
+        tile = min(max(8, _rs.DEFAULT_TILE), m)
+        mt = -(-m // tile) * tile
+        if mt != m:
+            ids = jnp.pad(ids, (0, mt - m), constant_values=n_dev)
+        hist, _ = _rs._digit_stats(ids.reshape(mt // tile, tile),
+                                   n_dev + 1, interp)
+        counts = jnp.sum(hist, axis=0)[:n_dev]
+    else:
+        starts = jnp.searchsorted(ks, splitters, side="right")
+        counts = jnp.diff(jnp.concatenate(
+            [jnp.zeros(1, starts.dtype), starts,
+             jnp.full((1,), m, starts.dtype)]))
+    return jnp.concatenate([jnp.zeros(1, jnp.int32),
+                            jnp.cumsum(counts).astype(jnp.int32)])
+
+
+def _all_to_all(v: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """(D, ...) -> (D, ...): row j of the result is what device j held in
+    row ``my`` — the single bucket-exchange collective."""
+    return jax.lax.all_to_all(v, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+def _smap(f, mesh, in_specs, out_specs):
+    # replication checking has no rule for pallas_call (the histogram
+    # kernel and any Pallas local sort), so it is disabled; every output
+    # is explicitly sharded over the axis anyway
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:  # jax >= 0.6 renamed the flag
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# phase 1: local sort + splitters + bucket bounds
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=128)
+def _phase1(mesh: Mesh, axis_name: str, n: int, kv: bool, padded: bool,
+            local_method: Optional[str], s: int, use_histogram: bool,
+            interpret: Optional[bool]):
+    """Jitted program: encoded shard -> (sorted shard[, payload], bounds).
+
+    Cached on its statics so repeated serving-shape calls hit the compiled
+    executable; the mesh participates in the key (jax meshes hash).
+    """
+    n_dev = mesh.shape[axis_name]
+    m = -(-n // n_dev)
+
+    def local(*args):
+        xs = args[0]
+        vs = args[1] if kv else None
+        my = jax.lax.axis_index(axis_name)
+        # valid = not an end-of-array pad; pads all live on the tail shards
+        n_valid = jnp.clip(n - my * m, 0, m).astype(jnp.int32)
+
+        # local sort (planner-dispatched registered backend).  Pads carry
+        # the maximal encoded key; with a payload they must also stay
+        # *behind* genuine max-key ties, so the kv+padded case runs the
+        # stable argsort pipeline — validity stays a prefix of the shard
+        from repro import sort as _front
+        if kv and padded:
+            order = _front.argsort(xs, stable=True, method=local_method,
+                                   interpret=interpret)
+            ks = jnp.take_along_axis(xs, order, -1)
+            vs = jnp.take_along_axis(vs, order, -1)
+        elif kv:
+            ks, vs = _front.sort_kv(xs, vs, method=local_method,
+                                    interpret=interpret)
+        else:
+            ks = _front.sort(xs, method=local_method, interpret=interpret)
+
+        # regular samples -> pooled splitters (one tiny all-gather)
+        sample_pos = ((jnp.arange(s) + 1) * m) // (s + 1)
+        samples = jax.lax.all_gather(ks[sample_pos], axis_name)
+        splitters = select_splitters(samples, n_dev)
+
+        bounds = bucket_bounds(ks, splitters, use_histogram=use_histogram,
+                               interpret=interpret)
+        # per-bucket count of *genuine* keys: the valid elements are a
+        # prefix of the sorted shard, hence a prefix of every bucket
+        vcnt = jnp.clip(jnp.minimum(bounds[1:], n_valid) - bounds[:-1],
+                        0, m).astype(jnp.int32)
+        starts = bounds[:-1]
+        if kv:
+            return ks, vs, starts, vcnt
+        return ks, starts, vcnt
+
+    spec = P(axis_name)
+    n_out = 4 if kv else 3
+    fn = _smap(local, mesh, (spec, spec) if kv else (spec,),
+               (spec,) * n_out)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# phase 2: bucket exchange + merge-path merge + rank rebalance
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=128)
+def _phase2(mesh: Mesh, axis_name: str, n: int, kv: bool, capacity: int,
+            key_dtype_name: str, val_dtype_name: Optional[str],
+            merge_backend: str, interpret: Optional[bool]):
+    """Jitted program: (sorted shard[, payload], starts, vcnt) -> output
+    shard(s).  ``capacity`` is the static per-(source, destination) bucket
+    size — phase 1's measured maximum, or m for the always-safe bound."""
+    n_dev = mesh.shape[axis_name]
+    m = -(-n // n_dev)
+    n_pad = n_dev * m
+    c = capacity
+    r_runs = next_pow2(n_dev)
+    maxkey = jnp.array(jnp.iinfo(jnp.dtype(key_dtype_name)).max,
+                       jnp.dtype(key_dtype_name))
+
+    def local(*args):
+        if kv:
+            ks, vs, starts, vcnt = args
+        else:
+            ks, starts, vcnt = args
+        my = jax.lax.axis_index(axis_name)
+
+        # fixed-capacity send buffers + ONE all-to-all.  Capacity fill is
+        # the max key so runs stay sorted; it is never *interpreted* —
+        # validity travels as explicit counts.
+        idx = starts[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        within = jnp.arange(c, dtype=jnp.int32)[None, :] < vcnt[:, None]
+        src = jnp.clip(idx, 0, m - 1)
+        sendk = jnp.where(within, ks[src], maxkey)
+        recvk = _all_to_all(sendk, axis_name)                   # (D, c)
+        recv_cnt = _all_to_all(vcnt[:, None], axis_name)[:, 0]  # (D,)
+        if kv:
+            recvv = _all_to_all(jnp.where(within, vs[src],
+                                          jnp.zeros((), vs.dtype)),
+                                axis_name)
+
+        # merge the received runs with the merge-path tree.  One int32
+        # position payload rides the merge; validity flags (and the user
+        # payload) are recovered by gathering through it, so ties between
+        # capacity fill and genuine max keys cannot corrupt anything.
+        runs = recvk
+        if r_runs != n_dev:
+            runs = jnp.concatenate(
+                [runs, jnp.full((r_runs - n_dev, c), maxkey, runs.dtype)])
+        pos = jnp.arange(r_runs * c, dtype=jnp.int32).reshape(1, r_runs, c)
+        mk, mpos = merge_runs(runs[None], pos, descending=False,
+                              backend=merge_backend, interpret=interpret)
+        mk, mpos = mk[0], mpos[0]                              # (R*c,)
+        run_valid = (jnp.arange(c, dtype=jnp.int32)[None, :]
+                     < recv_cnt[:, None])                       # (D, c)
+        if r_runs != n_dev:
+            run_valid = jnp.concatenate(
+                [run_valid, jnp.zeros((r_runs - n_dev, c), bool)])
+        mvalid = run_valid.reshape(-1)[mpos]
+        if kv:
+            vflat = recvv.reshape(-1)
+            if r_runs != n_dev:
+                vflat = jnp.concatenate(
+                    [vflat, jnp.zeros(((r_runs - n_dev) * c,), vflat.dtype)])
+            mv = vflat[mpos]
+
+        # rank-directed rebalance back to equal m-element shards: global
+        # rank = my bucket's offset + local rank; rank r lives at slot r%m
+        # of device r//m.  Exactly one device owns each slot, so the
+        # receive reduction is a plain sum over sources (dtype pinned —
+        # accumulating zeros is exact, but sum would promote narrow ints).
+        c_my = jnp.sum(recv_cnt).astype(jnp.int32)
+        counts_all = jax.lax.all_gather(c_my, axis_name)        # (D,)
+        offset = jnp.sum(jnp.where(jnp.arange(n_dev) < my, counts_all, 0))
+        lrank = jnp.cumsum(mvalid.astype(jnp.int32)) - 1
+        grank = offset + lrank
+        flat = jnp.where(mvalid, grank, n_pad)                  # OOB -> drop
+        outk = jnp.zeros((n_pad,), ks.dtype).at[flat].set(
+            mk, mode="drop").reshape(n_dev, m)
+        shard_k = jnp.sum(_all_to_all(outk, axis_name), axis=0,
+                          dtype=ks.dtype)
+        if kv:
+            outv = jnp.zeros((n_pad,), vs.dtype).at[flat].set(
+                mv, mode="drop").reshape(n_dev, m)
+            shard_v = jnp.sum(_all_to_all(outv, axis_name), axis=0,
+                              dtype=vs.dtype)
+            return shard_k, shard_v
+        return shard_k
+
+    spec = P(axis_name)
+    n_in = 4 if kv else 3
+    fn = _smap(local, mesh, (spec,) * n_in,
+               (spec, spec) if kv else spec)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# front door
+# ---------------------------------------------------------------------------
+
+def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
+                values: Optional[jnp.ndarray] = None,
+                descending: bool = False,
+                local_method: Optional[str] = None,
+                samples_per_shard: Optional[int] = None,
+                capacity: Optional[int] = None,
+                use_histogram: Optional[bool] = None,
+                merge_backend: Optional[str] = None,
+                interpret: Optional[bool] = None):
+    """Globally sort a 1-D array over ``axis_name`` with ONE bucket
+    exchange.  Returns the sorted array (or ``(keys, values)`` with a
+    payload), same length and sharding layout as the input.
+
+    Unlike the odd-even path the length need not divide the axis size
+    (pads are tracked with explicit validity counts), ``descending`` and
+    key-value payloads are first-class, and the collective bill is one
+    all-to-all of buckets plus one rank-directed rebalance instead of D
+    neighbour rounds.
+
+    ``capacity`` overrides the measured per-(source, destination) bucket
+    capacity; it is validated against the realized bucket bounds and
+    raises rather than silently dropping elements when too small (``m``,
+    the shard length, is always sufficient).  Under an outer ``jax.jit``
+    the measured mode is unavailable (it syncs counts to the host) and
+    the realized bounds cannot be checked, so only ``capacity >= m`` is
+    accepted there.
+    """
+    x = jnp.asarray(x)
+    if x.ndim != 1:
+        raise ValueError(f"sample_sort sorts flat 1-D arrays, got {x.shape}")
+    if not keycodec.supports(x.dtype):
+        raise ValueError(
+            f"sample_sort needs a keycodec dtype {keycodec.SUPPORTED}, "
+            f"got {jnp.dtype(x.dtype).name!r}")
+    n = x.shape[0]
+    n_dev = mesh.shape[axis_name]
+    m = -(-n // n_dev)                      # shard length (output = input)
+    n_pad = n_dev * m
+    kv = values is not None
+    if kv:
+        values = jnp.asarray(values)
+        if values.shape != x.shape:
+            raise ValueError(f"values shape {values.shape} must match "
+                             f"keys shape {x.shape}")
+    if use_histogram is None:
+        use_histogram = jax.default_backend() == "tpu"
+    s = samples_per_shard or default_samples_per_shard(m, n_dev)
+
+    enc = keycodec.encode(x, descending=descending)
+    padded = n_pad != n
+    if padded:
+        maxkey = jnp.array(jnp.iinfo(enc.dtype).max, enc.dtype)
+        enc = jnp.pad(enc, (0, n_pad - n), constant_values=maxkey)
+        if kv:
+            values = jnp.pad(values, (0, n_pad - n))
+
+    p1 = _phase1(mesh, axis_name, n, kv, padded, local_method, s,
+                 use_histogram, interpret)
+    if kv:
+        ks, vs, starts, vcnt = p1(enc, values)
+    else:
+        ks, starts, vcnt = p1(enc)
+
+    # the one host sync: the realized bucket maximum sets the static
+    # exchange capacity, so buffers and merge work scale with what the
+    # data needs (~m/D with regular sampling) instead of the worst case m
+    try:
+        max_bucket = int(np.max(np.asarray(vcnt)))
+    except jax.errors.TracerArrayConversionError:
+        max_bucket = None                   # called under an outer jit
+    if capacity is None:
+        if max_bucket is None:
+            raise ValueError(
+                "sample_sort's measured-capacity mode reads the bucket "
+                "counts on the host and cannot run under an outer jit; "
+                f"pass capacity= (the shard length {m} is always safe)")
+        cap = _round_capacity(max_bucket, m)
+    else:
+        cap = _round_capacity(capacity, m)
+        if max_bucket is None and cap < m:
+            # under a trace there is no way to raise later, and a
+            # too-small capacity would silently drop elements — only the
+            # provably-safe shard-length capacity is allowed
+            raise ValueError(
+                f"under an outer jit, capacity must be >= the shard "
+                f"length {m} (the realized bucket maximum cannot be "
+                f"checked at trace time); got {capacity}")
+        if max_bucket is not None and cap < max_bucket:
+            raise ValueError(
+                f"capacity {capacity} is smaller than the realized maximum "
+                f"bucket ({max_bucket}); the shard length {m} is always "
+                f"safe")
+    if merge_backend is None:
+        from repro.kernels.merge_path import DEFAULT_CHUNK
+        if jax.default_backend() == "tpu" and (2 * cap) % DEFAULT_CHUNK == 0:
+            merge_backend = "pallas"        # the merge-path VMEM kernel
+        elif cap & (cap - 1) == 0:
+            # off-TPU the gather-bound rank merge loses badly to the
+            # word-parallel min/max box (capacity is pow2-rounded, so this
+            # is the interpret-mode default)
+            merge_backend = "bitonic"
+        else:
+            merge_backend = "xla"
+
+    p2 = _phase2(mesh, axis_name, n, kv,
+                 cap, jnp.dtype(enc.dtype).name,
+                 jnp.dtype(values.dtype).name if kv else None,
+                 merge_backend, interpret)
+    if kv:
+        out_k, out_v = p2(ks, vs, starts, vcnt)
+        keys = keycodec.decode(out_k[:n], x.dtype, descending=descending)
+        return keys, out_v[:n]
+    out = p2(ks, starts, vcnt)
+    return keycodec.decode(out[:n], x.dtype, descending=descending)
+
+
+def _round_capacity(cap: int, m: int) -> int:
+    """Static capacity: at least one slot, padded up a little so nearby
+    workloads share a compiled phase-2 program, never beyond the shard."""
+    cap = max(1, cap)
+    if cap >= m:
+        return m
+    return min(m, next_pow2(cap))
+
+
+def alltoall_bytes_per_device(n_dev: int, local_elems: int,
+                              itemsize: int, capacity: Optional[int] = None
+                              ) -> int:
+    """Analytic ICI volume of the sample-sort exchange (per device): the
+    capacity-padded bucket all-to-all plus the rank rebalance round —
+    versus ``n_dev`` full-shard moves for odd-even transposition
+    (``distributed_sort.collective_bytes_per_device``)."""
+    cap = capacity if capacity is not None else \
+        min(local_elems, 2 * local_elems // max(1, n_dev) + 1)
+    return (n_dev * cap + n_dev * local_elems) * itemsize

@@ -43,22 +43,51 @@ class LengthSortedScheduler:
     ``method`` takes any registered backend name; the default ``"auto"`` lets
     the engine's cost-model planner pick per queue size, so the scheduler
     scales from a handful of requests to engine-sized backlogs unchanged.
+
+    With a ``mesh`` (any multi-device host or pod slice) the backlog sort
+    itself goes distributed: a (length, position) composite key is sorted
+    globally over the mesh axis by the single-round sample-sort, so a
+    fleet-scale queue never funnels through one device.  Single-device
+    meshes and backlogs under ``distributed_min`` keep the local argsort
+    path — per-queue-length shard_map programs only pay off once the
+    backlog reaches engine scale.
     """
 
-    def __init__(self, batch_size: int, method: str = "auto"):
+    def __init__(self, batch_size: int, method: str = "auto", *,
+                 mesh=None, axis_name: str = "data",
+                 distributed_min: int = 4096):
         self.batch_size = batch_size
         self.method = method
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.distributed_min = distributed_min
         self.queue: List[Request] = []
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def _order(self, lens: jnp.ndarray) -> np.ndarray:
+        n = lens.shape[0]
+        idx_bits = max(1, (n - 1).bit_length())
+        distributed = (self.mesh is not None
+                       and self.mesh.shape[self.axis_name] > 1
+                       and n >= self.distributed_min
+                       and int(jnp.max(lens)) < (1 << (31 - idx_bits)))
+        if not distributed:
+            return np.array(sorting.argsort(lens, method=self.method))
+        # mesh path: value-sort a packed (length, position) composite —
+        # the distributed path has no argsort, but the composite is one
+        comp = (lens.astype(jnp.int32) << idx_bits) \
+            | jnp.arange(n, dtype=jnp.int32)
+        out = sorting.sort(comp, mesh=self.mesh, axis_name=self.axis_name)
+        return np.array(out) & ((1 << idx_bits) - 1)
 
     def next_batch(self) -> List[Request]:
         if not self.queue:
             return []
         lens = jnp.asarray([len(r.prompt) for r in self.queue],
                            dtype=jnp.int32)
-        order = np.array(sorting.argsort(lens, method=self.method))
+        order = self._order(lens)
         batch = [self.queue[i] for i in order[:self.batch_size]]
         picked = set(order[:self.batch_size].tolist())
         self.queue = [r for i, r in enumerate(self.queue)
@@ -74,9 +103,14 @@ class LengthSortedScheduler:
 
 def serve(arch: str, smoke: bool = True, n_requests: int = 16,
           batch_size: int = 8, decode_steps: int = 32, topk: int = 50,
-          seed: int = 0, max_len: int = 256):
+          seed: int = 0, max_len: int = 256,
+          distributed_queue: Optional[bool] = None):
+    """``distributed_queue`` routes the scheduler's backlog sort over the
+    host mesh (defaults to on whenever the host offers >1 device)."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     mesh = make_host_mesh()
+    if distributed_queue is None:
+        distributed_queue = mesh.shape["data"] > 1
     policy = ShardingPolicy(mesh=mesh, dp_axes=dp_axes_of(mesh))
     model = build(cfg, policy=policy)
     key = jax.random.PRNGKey(seed)
@@ -88,7 +122,9 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 16,
                                                    sample_topk=topk))
 
     rng = np.random.default_rng(seed)
-    sched = LengthSortedScheduler(batch_size, method=cfg.sort_method)
+    sched = LengthSortedScheduler(
+        batch_size, method=cfg.sort_method,
+        mesh=mesh if distributed_queue else None)
     for rid in range(n_requests):
         plen = int(rng.integers(4, max_len // 4))
         sched.submit(Request(rid=rid, prompt=rng.integers(
@@ -142,10 +178,15 @@ def main():
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--decode-steps", type=int, default=32)
     ap.add_argument("--topk", type=int, default=50)
+    ap.add_argument("--distributed-queue", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="sort the request backlog over the host mesh "
+                         "(--no-distributed-queue forces the local path; "
+                         "default: on when the host has >1 device)")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, n_requests=args.requests,
           batch_size=args.batch_size, decode_steps=args.decode_steps,
-          topk=args.topk)
+          topk=args.topk, distributed_queue=args.distributed_queue)
 
 
 if __name__ == "__main__":

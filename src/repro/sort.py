@@ -63,6 +63,14 @@ def run(spec: SortSpec, x: _Arr) -> Union[_Arr, Tuple[_Arr, _Arr]]:
     x = jnp.asarray(x)
     spec = spec.canonical(x)
 
+    if spec.mesh is not None:
+        # mesh-global path: the distributed backend dispatches sample-sort
+        # vs odd-even transposition through planner.choose_distributed
+        from repro.core.sortspec import get_backend as _get
+        return _get("distributed").sort_mesh(
+            x, spec.mesh, spec.axis_name, values=spec.values,
+            descending=spec.descending, interpret=spec.interpret)
+
     if spec.valid_lengths is not None:
         if spec.indices or spec.values is not None:
             raise ValueError("valid_lengths supports value sorts only")
@@ -126,12 +134,16 @@ def run(spec: SortSpec, x: _Arr) -> Union[_Arr, Tuple[_Arr, _Arr]]:
 def sort(x: _Arr, *, axis: int = -1, descending: bool = False,
          method: Optional[str] = None, run_len: Optional[int] = None,
          interpret: Optional[bool] = None,
-         valid_lengths: Optional[_Arr] = None, fill_value=0) -> _Arr:
+         valid_lengths: Optional[_Arr] = None, fill_value=0,
+         mesh=None, axis_name: Optional[str] = None) -> _Arr:
     """Sort along ``axis``; with ``valid_lengths``, sort each row's valid
-    prefix of a padded batch (the scheduler's fixed-shape buckets)."""
+    prefix of a padded batch (the scheduler's fixed-shape buckets); with
+    ``mesh``/``axis_name``, sort a flat array globally over the mesh axis
+    (single-round sample-sort, odd-even fallback)."""
     return run(SortSpec(axis=axis, descending=descending, method=method,
                         run_len=run_len, interpret=interpret,
-                        valid_lengths=valid_lengths, fill_value=fill_value), x)
+                        valid_lengths=valid_lengths, fill_value=fill_value,
+                        mesh=mesh, axis_name=axis_name), x)
 
 
 def argsort(x: _Arr, *, axis: int = -1, descending: bool = False,
@@ -157,11 +169,15 @@ def topk(x: _Arr, k: int, *, axis: int = -1, method: Optional[str] = None,
 def sort_kv(keys: _Arr, values: _Arr, *, axis: int = -1,
             descending: bool = False, stable: bool = False,
             method: Optional[str] = None, run_len: Optional[int] = None,
-            interpret: Optional[bool] = None) -> Tuple[_Arr, _Arr]:
-    """Sort ``keys`` carrying ``values`` -> (sorted keys, permuted values)."""
+            interpret: Optional[bool] = None,
+            mesh=None, axis_name: Optional[str] = None) -> Tuple[_Arr, _Arr]:
+    """Sort ``keys`` carrying ``values`` -> (sorted keys, permuted values).
+    With ``mesh``/``axis_name`` the pair is sorted globally over the mesh
+    axis (payload buckets ride the sample-sort exchange)."""
     return run(SortSpec(axis=axis, descending=descending, stable=stable,
                         values=jnp.asarray(values), method=method,
-                        run_len=run_len, interpret=interpret), keys)
+                        run_len=run_len, interpret=interpret,
+                        mesh=mesh, axis_name=axis_name), keys)
 
 
 def segment_sort(values: _Arr, *, segment_ids: Optional[_Arr] = None,

@@ -9,7 +9,9 @@ Installed by ``conftest.py`` only when ``import hypothesis`` fails; when the
 real package is present it is used untouched.
 
 Supported surface (what the tests import):
-  given, settings, strategies.{integers, booleans, sampled_from, lists}
+  given, settings,
+  strategies.{integers, booleans, sampled_from, lists, floats, tuples,
+              composite}
 """
 from __future__ import annotations
 
@@ -58,6 +60,33 @@ def lists(elements: _Strategy, min_size: int = 0, max_size: int = None
     return _Strategy(draw)
 
 
+def floats(min_value: float = 0.0, max_value: float = 1.0, *,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64) -> _Strategy:
+    """Uniform floats on [min_value, max_value]; the nan/infinity/width
+    knobs exist for signature compatibility (finite draws only)."""
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def composite(fn):
+    """``@composite def case(draw, *args): ...`` — calling ``case(*args)``
+    yields a strategy that runs ``fn`` with a ``draw`` callable resolving
+    sub-strategies against the replay RNG (the real-hypothesis contract)."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def draw_fn(rng: random.Random):
+            return fn(lambda strategy: strategy.draw(rng), *args, **kwargs)
+
+        return _Strategy(draw_fn)
+
+    return builder
+
+
 def settings(**kwargs):
     """Record the settings on the (possibly already-wrapped) test function."""
 
@@ -95,7 +124,8 @@ def install() -> None:
     mod.given = given
     mod.settings = settings
     strat = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "booleans", "sampled_from", "lists"):
+    for name in ("integers", "booleans", "sampled_from", "lists", "floats",
+                 "tuples", "composite"):
         setattr(strat, name, globals()[name])
     mod.strategies = strat
     mod.__stub__ = True

@@ -1,0 +1,102 @@
+"""The hypothesis replay shim itself, under test.
+
+The fuzz-conformance suite leans on ``tests/_hypothesis_stub.py`` whenever
+the real hypothesis package is absent (most CI images), so the shim's
+strategy surface — including the ``floats`` / ``tuples`` / ``composite``
+additions — needs its own coverage: a silently broken draw would hollow
+out every property test downstream.  These tests target the stub module
+directly, so they run identically whether or not real hypothesis is
+installed.
+"""
+import random
+
+import _hypothesis_stub as stub
+
+
+def _draws(strategy, n=200, seed=7):
+    rng = random.Random(seed)
+    return [strategy.draw(rng) for _ in range(n)]
+
+
+def test_integers_bounds_and_determinism():
+    vals = _draws(stub.integers(-3, 5))
+    assert all(-3 <= v <= 5 for v in vals)
+    assert set(vals) == set(range(-3, 6))           # full support reached
+    assert vals == _draws(stub.integers(-3, 5))     # seeded replay
+
+
+def test_floats_bounds():
+    vals = _draws(stub.floats(-1.5, 2.5))
+    assert all(isinstance(v, float) and -1.5 <= v <= 2.5 for v in vals)
+    assert len(set(vals)) > 100                     # actually varies
+    # compatibility knobs accepted (finite draws regardless)
+    assert all(v <= 1.0 for v in
+               _draws(stub.floats(0.0, 1.0, allow_nan=True, width=32)))
+
+
+def test_sampled_from_and_booleans():
+    vals = _draws(stub.sampled_from("abc"))
+    assert set(vals) == {"a", "b", "c"}
+    assert set(_draws(stub.booleans())) == {True, False}
+
+
+def test_lists_sizes():
+    vals = _draws(stub.lists(stub.integers(0, 9), min_size=2, max_size=4))
+    assert all(2 <= len(v) <= 4 for v in vals)
+    assert all(0 <= x <= 9 for v in vals for x in v)
+
+
+def test_tuples_composes_strategies():
+    vals = _draws(stub.tuples(stub.integers(0, 1), stub.sampled_from("xy")))
+    assert all(isinstance(v, tuple) and len(v) == 2 for v in vals)
+    assert {v[0] for v in vals} == {0, 1}
+    assert {v[1] for v in vals} == {"x", "y"}
+
+
+def test_composite_passes_draw_and_args():
+    @stub.composite
+    def pair(draw, hi):
+        a = draw(stub.integers(0, hi))
+        return (a, draw(stub.integers(a, hi)))      # dependent second draw
+
+    vals = _draws(pair(9))
+    assert all(0 <= a <= b <= 9 for a, b in vals)
+
+
+def test_given_replays_and_settings_cap_examples():
+    calls = []
+
+    @stub.settings(max_examples=7)
+    @stub.given(stub.integers(0, 100), stub.booleans())
+    def prop(n, flag):
+        calls.append((n, flag))
+
+    prop()
+    assert len(calls) == 7
+    replay = list(calls)
+    calls.clear()
+    prop()                                          # same seeded sequence
+    assert calls == replay
+
+
+def test_given_hides_strategy_params_from_pytest():
+    @stub.given(stub.integers(0, 1))
+    def prop(n):
+        pass
+
+    import inspect
+    assert inspect.signature(prop).parameters == {}
+
+
+def test_install_registers_module(monkeypatch):
+    import sys
+    monkeypatch.delitem(sys.modules, "hypothesis", raising=False)
+    monkeypatch.delitem(sys.modules, "hypothesis.strategies", raising=False)
+    stub.install()
+    import hypothesis
+    import hypothesis.strategies as st
+    assert getattr(hypothesis, "__stub__", False)
+    for name in ("integers", "booleans", "sampled_from", "lists", "floats",
+                 "tuples", "composite"):
+        assert callable(getattr(st, name))
+    # monkeypatch restores whatever was installed before

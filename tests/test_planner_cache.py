@@ -1,0 +1,100 @@
+"""Plan-cache lifecycle: stale plans must die on every mutation channel.
+
+``planner.choose_cached`` memoizes resolved plans per workload statics; a
+serving process then mutates the world in three ways — registering a new
+backend, unregistering one, and re-calibrating the measured constants —
+and each must transparently invalidate cached plans, or ``method="auto"``
+keeps dispatching to yesterday's winner (or worse, to an engine that no
+longer exists).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.sort as rsort
+from repro.core import sortspec
+from repro.engine import planner
+
+
+class _CheapBackend(sortspec.SortBackend):
+    """Claims (falsely) to cost nothing, so auto must pick it once it is
+    registered — making stale-plan reuse observable."""
+    name = "cheapo-test"
+    capabilities = sortspec.Capabilities()
+
+    def cost_ns(self, n, batch, dtype, *, run_len, consts=None,
+                interpreted=False):
+        return 0.0
+
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        out = jnp.sort(rows, axis=-1)
+        return jnp.flip(out, -1) if descending else out
+
+
+@pytest.fixture(autouse=True)
+def _clean_cache():
+    planner.clear_plan_cache()
+    yield
+    sortspec.unregister_backend("cheapo-test")
+    planner.clear_plan_cache()
+
+
+def test_register_invalidates_and_auto_repicks():
+    """Stale-plan regression: a cached method='auto' plan must not survive
+    a registry mutation — the fresh backend has to win the re-plan."""
+    before = planner.choose_cached(4096, 2, jnp.float32)
+    assert before.method != "cheapo-test"
+    # warm the cache through the public front door too
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 100)),
+                    jnp.float32)
+    rsort.sort(x)                                    # method="auto" default
+    sortspec.register_backend(_CheapBackend)
+    after = planner.choose_cached(4096, 2, jnp.float32)
+    assert after is not before
+    assert after.method == "cheapo-test"             # zero-cost claim wins
+    # and the front door's auto path actually dispatches to it
+    out = rsort.sort(x)                              # still correct output
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.sort(np.asarray(x), -1))
+
+
+def test_unregister_invalidates():
+    sortspec.register_backend(_CheapBackend)
+    won = planner.choose_cached(4096, 2, jnp.float32)
+    assert won.method == "cheapo-test"
+    sortspec.unregister_backend("cheapo-test")
+    replanned = planner.choose_cached(4096, 2, jnp.float32)
+    assert replanned is not won
+    assert replanned.method != "cheapo-test"
+    assert "cheapo-test" not in replanned.costs
+
+
+def test_unregister_is_idempotent_but_still_invalidates():
+    gen = sortspec.registry_generation()
+    sortspec.unregister_backend("never-existed")
+    assert sortspec.registry_generation() == gen + 1   # generation bumps
+    p1 = planner.choose_cached(1000, 1, jnp.float32)
+    sortspec.unregister_backend("never-existed")
+    assert planner.choose_cached(1000, 1, jnp.float32) is not p1
+
+
+def test_calibrate_invalidates_mid_session():
+    """calibrate() measures new constants; plans priced with the old ones
+    must be dropped even though the registry never changed."""
+    stale = planner.choose_cached(100000, 1, jnp.float32)
+    try:
+        planner.calibrate(tile_n=256, batch=4, reps=1)
+        fresh = planner.choose_cached(100000, 1, jnp.float32)
+        assert fresh is not stale
+        # measured constants actually flowed into the new pricing
+        assert fresh.costs != stale.costs
+    finally:
+        planner.reset_calibration()
+    assert planner.choose_cached(100000, 1, jnp.float32) is not fresh
+
+
+def test_distributed_plans_share_invalidation():
+    d1 = planner.choose_distributed_cached(1 << 20, 8)
+    assert planner.choose_distributed_cached(1 << 20, 8) is d1   # hit
+    sortspec.register_backend(_CheapBackend)
+    assert planner.choose_distributed_cached(1 << 20, 8) is not d1

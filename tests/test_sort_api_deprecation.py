@@ -1,0 +1,101 @@
+"""The legacy sort_api surface: warn once, forward bit-exactly.
+
+Migration contract for the v1 call forms: every shim (a) emits exactly one
+``DeprecationWarning`` per process — first call warns, repeats stay silent
+so a hot serving loop is not spammed — and (b) forwards each kwarg
+combination unchanged to the ``repro.sort`` front door, producing
+bit-identical arrays.  ``top_p_mask`` and the shared implementation pieces
+(``bitonic_sort``, ``_xla_sort``) are deliberately un-deprecated.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import tree_util
+
+import repro.sort as rsort
+from repro.core import sort_api
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    """Each test sees a process that has never warned yet."""
+    sort_api._warned.clear()
+    yield
+    sort_api._warned.clear()
+
+
+def _caught(fn):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn()
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    return out, dep
+
+
+X = jnp.asarray(np.random.default_rng(0).standard_normal((3, 41)),
+                jnp.float32)
+
+
+@pytest.mark.parametrize("name,call,equiv", [
+    ("sort",
+     lambda: sort_api.sort(X, axis=0, method="bitonic", descending=True),
+     lambda: rsort.sort(X, axis=0, method="bitonic", descending=True)),
+    ("argsort",
+     lambda: sort_api.argsort(X, axis=-1, method="radix", descending=True),
+     lambda: rsort.argsort(X, axis=-1, method="radix", descending=True)),
+    ("topk",
+     lambda: sort_api.topk(X, 7, method="pallas"),
+     lambda: rsort.topk(X, 7, method="pallas")),
+])
+def test_shim_warns_once_and_forwards_kwargs_bit_exactly(name, call, equiv):
+    out1, dep1 = _caught(call)
+    assert len(dep1) == 1, f"{name}: first call must warn exactly once"
+    assert f"sort_api.{name} is deprecated" in str(dep1[0].message)
+    assert f"repro.sort.{name}" in str(dep1[0].message)
+    out2, dep2 = _caught(call)
+    assert dep2 == [], f"{name}: repeat calls must stay silent"
+    ref = equiv()
+    for a, b, c in zip(tree_util.tree_leaves(out1),
+                       tree_util.tree_leaves(out2),
+                       tree_util.tree_leaves(ref)):
+        ra, rb, rc = np.asarray(a), np.asarray(b), np.asarray(c)
+        np.testing.assert_array_equal(ra, rc, err_msg=name)
+        np.testing.assert_array_equal(rb, rc, err_msg=name)
+        assert ra.dtype == rc.dtype
+
+
+def test_each_shim_warns_independently():
+    """The once-latch is per call form, not global: using sort must not
+    swallow argsort's warning."""
+    _, dep = _caught(lambda: sort_api.sort(X))
+    assert len(dep) == 1
+    _, dep = _caught(lambda: sort_api.argsort(X))
+    assert len(dep) == 1
+    _, dep = _caught(lambda: sort_api.topk(X, 3))
+    assert len(dep) == 1
+
+
+def test_shim_defaults_match_v1_not_v2():
+    """v1 defaulted to method='xla'; the shims must preserve that even
+    though the v2 front door defaults to 'auto'."""
+    out, _ = _caught(lambda: sort_api.sort(X))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(rsort.sort(X, method="xla")))
+
+
+def test_shim_propagates_spec_validation():
+    """Forwarding is exact for errors too: bad k dies at the spec layer
+    with the same message the front door raises."""
+    with pytest.raises(ValueError, match="1 <= k <= n"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            sort_api.topk(X, 0)
+
+
+def test_unwarned_helpers_stay_silent():
+    _, dep = _caught(lambda: sort_api.bitonic_sort(X))
+    assert dep == []
+    _, dep = _caught(lambda: sort_api.top_p_mask(X, 0.9))
+    assert dep == []
