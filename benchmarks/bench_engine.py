@@ -22,11 +22,17 @@ Emits ``name,us_per_call,derived`` rows like the other suites (``cold`` rows
 carry ms in the value column, labelled in the name).  The summary rows
 compare merge vs pallas-bitonic at the largest n on both metrics.
 
+A top-k leg (``topk_{sort,select,xla,auto}`` rows at k=64) compares the
+sort-prefix path against the MSD radix-select backend and records the
+measured select/sort crossover — the README "Selection" table and the
+planner's sanity anchor.
+
 With ``--devices D`` (or an externally set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=D``) a distributed leg
 also runs: single-round sample-sort vs D-round odd-even transposition over
 the simulated mesh, plus the strategy ``planner.choose_distributed``
-auto-selects per n — the measured crossover for the README table.
+auto-selects per n — the measured crossover for the README table — and a
+``topk_dist`` leg timing the mesh-global candidate-all-gather top-k.
 
   PYTHONPATH=src python -m benchmarks.bench_engine [--full] [--sizes 4096,...]
       [--devices 8]
@@ -46,15 +52,16 @@ RADIX_INTERPRET_CAP = 65536
 
 
 def _time_cold_warm(make_fn, x, reps: int):
-    """(cold first-call seconds, warm mean seconds) for a fresh jit."""
+    """(cold first-call seconds, warm mean seconds) for a fresh jit —
+    tuple-valued fns (top-k) time their whole output tree."""
     import jax
     f = jax.jit(make_fn)
     t0 = time.perf_counter()
-    f(x).block_until_ready()
+    jax.block_until_ready(f(x))
     cold = time.perf_counter() - t0
     t0 = time.perf_counter()
     for _ in range(reps):
-        f(x).block_until_ready()
+        jax.block_until_ready(f(x))
     return cold, (time.perf_counter() - t0) / reps
 
 
@@ -70,6 +77,103 @@ def _time_cold_warm_eager(fn, x, reps: int):
     for _ in range(reps):
         jax.block_until_ready(fn(x))
     return cold, (time.perf_counter() - t0) / reps
+
+
+TOPK_K = 64
+
+
+def run_topk(sizes=DEFAULT_SIZES, k=TOPK_K):
+    """Selection vs sort-prefix: the ``k ≪ n`` workload class.
+
+    Rows per n:
+
+      * ``topk_sort``    the sort-prefix path: full descending stable
+                         argsort + gather of the k prefix — what every
+                         top-k consumer paid before the selection
+                         subsystem existed.
+      * ``topk_select``  the MSD radix-select backend (O(n·passes)).
+      * ``topk_xla``     jax.lax.top_k, for context.
+      * ``topk_auto``    the k-aware planner's pick (tagged with the
+                         resolved backend).
+
+    The summary row is the acceptance metric: select vs sort-prefix warm
+    speedup at the largest n.
+    """
+    import jax.numpy as jnp
+    from repro import engine, sort as rsort
+
+    rows, summary = [], {}
+    rng = np.random.default_rng(0)
+
+    def sort_prefix(v):
+        import jax.numpy as jnp
+        order = jnp.argsort(v, axis=-1, stable=True, descending=True)
+        return jnp.take_along_axis(v, order, -1)[..., :k], order[..., :k]
+
+    legs = [
+        ("topk_sort", sort_prefix),
+        ("topk_select", lambda v: rsort.topk(v, k, method="select")),
+        ("topk_xla", lambda v: rsort.topk(v, k, method="xla")),
+        ("topk_auto", lambda v: rsort.topk(v, k)),
+    ]
+    for n in sizes:
+        if n < k:
+            continue
+        x = jnp.asarray(rng.standard_normal((1, n)), jnp.float32)
+        reps = 3 if n <= 65536 else 1
+        for name, fn in legs:
+            cold, warm = _time_cold_warm(fn, x, reps)
+            tag = n
+            if name == "topk_auto":
+                plan = engine.choose_cached(n, 1, jnp.float32, k=k)
+                tag = f"{n}:{plan.method}"
+            rows.append((f"engine.{name}.cold_ms.n{n}.k{k}",
+                         round(cold * 1e3, 1), tag))
+            rows.append((f"engine.{name}.warm_us.n{n}.k{k}",
+                         round(warm * 1e6, 1), tag))
+            summary[(name, n)] = (cold, warm)
+    if not summary:                    # every size below k: no topk leg
+        return rows
+    n_max = max(n for n in sizes if n >= k)
+    sc, sw = summary[("topk_select", n_max)]
+    fc, fw = summary[("topk_sort", n_max)]
+    rows.append((f"engine.topk_select_vs_sort_warm_speedup.n{n_max}.k{k}",
+                 0.0, round(fw / sw, 2)))
+    rows.append((f"engine.topk_select_vs_sort_cold_speedup.n{n_max}.k{k}",
+                 0.0, round(fc / sc, 2)))
+    # measured crossover: largest n where sort-prefix still wins warm
+    cross = [n for n in sizes if n >= k
+             and summary[("topk_sort", n)][1] < summary[("topk_select", n)][1]]
+    rows.append((f"engine.topk_crossover.k{k}", 0.0,
+                 f"sort_wins_to_n={max(cross) if cross else 0}"))
+    return rows
+
+
+def run_topk_distributed(sizes=DEFAULT_SIZES, k=TOPK_K):
+    """Mesh top-k: candidate all-gather vs the local select on the
+    gathered array; empty on 1-device hosts."""
+    import jax
+    import jax.numpy as jnp
+    from repro.engine import samplesort
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return []
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        if n < k:
+            continue
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        reps = 3 if n <= 65536 else 1
+        cold, warm = _time_cold_warm_eager(
+            lambda v: samplesort.sample_topk(v, k, mesh, "data"), x, reps)
+        rows.append((f"engine.topk_dist.cold_ms.n{n}.k{k}",
+                     round(cold * 1e3, 1), f"D={n_dev}"))
+        rows.append((f"engine.topk_dist.warm_us.n{n}.k{k}",
+                     round(warm * 1e6, 1), f"D={n_dev}"))
+    return rows
 
 
 def run_distributed(sizes=DEFAULT_SIZES):
@@ -157,7 +261,9 @@ def run(sizes=DEFAULT_SIZES):
                      0.0, round(summary[("xla", rn)][1] / rw, 2)))
         rows.append((f"engine.radix_vs_merge_warm_speedup.n{rn}",
                      0.0, round(summary[("merge", rn)][1] / rw, 2)))
+    rows.extend(run_topk(sizes))
     rows.extend(run_distributed(sizes))
+    rows.extend(run_topk_distributed(sizes))
     return rows
 
 

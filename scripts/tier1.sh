@@ -18,7 +18,8 @@ fi
 if [[ -n "${TIER1_MULTIDEV:-}" ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=${TIER1_MULTIDEV} ${XLA_FLAGS:-}"
   exec python -m pytest -x -q --durations=10 \
-    tests/test_distributed_sort.py tests/test_samplesort.py "$@"
+    tests/test_distributed_sort.py tests/test_samplesort.py \
+    tests/test_distributed_topk.py "$@"
 fi
 # --durations=10 surfaces the suite's hot spots (it runs ~9 min on CPU CI)
 exec python -m pytest -x -q --durations=10 "$@"

@@ -26,7 +26,9 @@ class MoEConfig:
     d_ff_expert: int
     n_shared_experts: int = 0
     capacity_factor: float = 1.25
-    router_method: str = "bitonic"      # registered sort backend for expert top-k
+    # "auto": the k-aware planner weighs radix-select vs sort-prefix per
+    # (n_experts, top_k); any registered backend name forces one engine
+    router_method: str = "auto"
     first_dense_layers: int = 0         # leading layers use a dense MLP
 
 
@@ -77,7 +79,9 @@ class ModelConfig:
     dtype: str = "bfloat16"
     # which mixer each layer uses; derived for hybrid families
     max_seq: int = 8192                  # positional guardrail only (no abs emb)
-    sort_method: str = "bitonic"         # backend for sampling/routing sorts
+    # backend for sampling/routing sorts and top-k; "auto" = planner pick
+    # (selection for k << n sampling, a sort engine for full orders)
+    sort_method: str = "auto"
     flash_prefill: bool = False          # in-VMEM flash kernel for prefill
 
     @property

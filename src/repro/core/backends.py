@@ -245,6 +245,31 @@ class RadixBackend(SortBackend):
 
 
 # ---------------------------------------------------------------------------
+# select — MSD radix-select, the O(n) partial-sort mode
+# ---------------------------------------------------------------------------
+
+@register_backend
+class SelectBackend(SortBackend):
+    """MSD radix-select (kernels/radix_select.py): top-k via keycodec
+    digit histograms + threshold refinement — O(n·b/8) counting passes,
+    never a sort.  Selection-only (``supports_sort=False``): plain sort
+    specs are rejected at the spec layer; the planner prices its top-k
+    specs with ``cost_model.selection_cost_ns`` and auto-dispatches it
+    once ``k ≪ n`` makes selection cheaper than sort-prefix.  Exact-k
+    with ``jax.lax.top_k``'s tie rule (ties keep ascending index)."""
+    name = "select"
+    capabilities = Capabilities(dtypes=frozenset(_keycodec.SUPPORTED),
+                                stable=False, supports_kv=False,
+                                supports_segments=False, supports_sort=False,
+                                selection=True, substrate="vmem")
+
+    def topk(self, rows, k, *, plan=None, interpret=None):
+        from repro.kernels import radix_select as _sel
+        self.check_dtype(rows.dtype)
+        return _sel.select_topk(rows, k, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # distributed — mesh-global sorting (sample-sort + odd-even fallback)
 # ---------------------------------------------------------------------------
 
@@ -266,8 +291,8 @@ class DistributedBackend(SortBackend):
     """
     name = "distributed"
     capabilities = Capabilities(dtypes=frozenset(_keycodec.SUPPORTED),
-                                stable=False, supports_topk=False,
-                                supports_segments=False, auto_dispatch=False,
+                                stable=False, supports_segments=False,
+                                selection=True, auto_dispatch=False,
                                 substrate="mesh")
 
     @staticmethod
@@ -282,6 +307,14 @@ class DistributedBackend(SortBackend):
                                     local_method=local_method,
                                     strategy="auto", descending=descending,
                                     values=values, interpret=interpret)
+
+    def topk_mesh(self, x, k, mesh, axis_name, *, interpret=None):
+        """Mesh-global top-k: local radix-select per shard, ONE candidate
+        all-gather of D·min(k, m) (key, index) pairs, tiny lexicographic
+        merge — no full-array sort ever runs."""
+        from repro.core import distributed_sort as _ds
+        return _ds.distributed_topk(x, k, mesh, axis_name,
+                                    interpret=interpret)
 
     # -- rows form ----------------------------------------------------------
     def sort(self, rows, *, descending=False, plan=None, interpret=None):
@@ -303,6 +336,18 @@ class DistributedBackend(SortBackend):
                 for k, v in zip(keys, values)]
         return (jnp.stack([k for k, _ in outs]),
                 jnp.stack([v for _, v in outs]))
+
+    def topk(self, rows, k, *, plan=None, interpret=None):
+        """Rows form of the mesh top-k: each row runs the candidate path
+        over whatever device mesh this host offers (on one device it
+        degenerates to the local radix-select)."""
+        from repro.engine import samplesort
+        self.check_dtype(rows.dtype)
+        mesh = self._host_mesh()
+        outs = [samplesort.sample_topk(r, k, mesh, "data",
+                                       interpret=interpret) for r in rows]
+        return (jnp.stack([v for v, _ in outs]),
+                jnp.stack([i for _, i in outs]))
 
     def argsort(self, rows, *, descending=False, plan=None, interpret=None):
         """Engine tie convention (ties keep ascending index order) on an

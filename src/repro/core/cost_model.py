@@ -128,6 +128,11 @@ class DeviceSortConstants:
     merge_run: float = 6.0       # run generation: c * n log2 run_len
     merge_level: float = 12.0    # one merge-path level: c * n
     radix: float = 12.0          # LSD digit pass: c * n * ceil(b/8) passes
+    # MSD select, c * n * ceil(b/8) pass units.  The constant is seeded
+    # from the measured CPU bit-serial path (which runs DIGIT_BITS 1-bit
+    # refinements per pass unit), putting the modeled select/sort-prefix
+    # crossover at n ~ 1-2k for f32/k=64 — where the bench measures it
+    select: float = 15.0
     pallas_interpret_penalty: float = 300.0   # CPU interpret-mode multiplier
     # mesh collectives (distributed dispatch): one collective round costs
     # alpha (launch/latency) + bytes-moved-per-device / bandwidth
@@ -175,6 +180,26 @@ def device_sort_cost_ns(method: str, n: int, batch: int = 1, *,
         levels = _log2(tiles) if tiles > 1 else 0.0
         return gen + c.merge_level * batch * padded * levels
     raise ValueError(f"no device cost model for method {method!r}")
+
+
+def selection_cost_ns(n: int, k: int, key_bits: int = 32, batch: int = 1, *,
+                      consts: DeviceSortConstants = None) -> float:
+    """Estimated ns for an exact top-k *selection* of ``(batch, n)`` rows —
+    the partial-sort operating mode the hardware-sorting survey treats as
+    first-class, priced so the planner can weigh it against sort-prefix:
+
+      ceil(b/DIGIT_BITS) MSD digit-refinement passes, each one O(n)
+      counting work over the (tile-padded) row, plus the O(k log k)
+      two-key ordering of the k survivors.
+
+    No interpret penalty: off-TPU the select runs its jnp scatter-add
+    histogram (kernels/radix_select.py), not an interpreted Pallas kernel
+    — selection is exactly the radix path that stays fast on hosts.
+    """
+    c = consts or DeviceSortConstants()
+    passes = -(-key_bits // RADIX_DIGIT_BITS)
+    tiled = -(-n // RADIX_TILE) * RADIX_TILE
+    return c.select * batch * tiled * passes + c.xla * batch * k * _log2(k)
 
 
 def collective_cost_ns(n_dev: int, m: int, itemsize: int,

@@ -168,6 +168,26 @@ def _oddeven_fn(mesh: Mesh, axis_name: str, local_method: Optional[str],
     return jax.jit(fn)
 
 
+def distributed_topk(x: jnp.ndarray, k: int, mesh: Mesh,
+                     axis_name: str = "data", *,
+                     interpret: Optional[bool] = None):
+    """Mesh-global top-k -> ``(values, indices)``, bit-exact with
+    ``jax.lax.top_k`` (values descending, ties keep the lowest global
+    index).
+
+    There is only one strategy here on purpose: selection makes the
+    strategy question moot.  Both full-sort strategies move O(m) per
+    device (odd-even D times over); the candidate path
+    (``engine/samplesort.sample_topk``) moves O(D·k) in ONE all-gather —
+    local radix-select per shard, tiny lexicographic candidate merge, no
+    full-array sort.  That is the paper's partial-movement argument
+    (§II-B: only candidates cross partitions) at mesh scale.
+    """
+    from repro.engine import samplesort
+    return samplesort.sample_topk(x, k, mesh, axis_name,
+                                  interpret=interpret)
+
+
 def collective_bytes_per_device(n_dev: int, local_elems: int,
                                 itemsize: int) -> int:
     """Analytic ICI volume of the merge phase (per device)."""

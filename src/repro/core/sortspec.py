@@ -59,6 +59,13 @@ class Capabilities:
     requests are still honoured beyond it (benchmarks do exactly that).
     ``auto_dispatch=False`` removes the backend from auto dispatch entirely
     (e.g. the cycle-accurate bit-serial simulator).
+
+    ``selection=True`` declares an O(n·passes) top-k *selection* engine
+    (partial sort — the survey's min/max-search operating mode): the
+    planner prices its top-k specs with ``cost_model.selection_cost_ns``
+    instead of the full-sort model.  ``supports_sort=False`` marks a
+    selection-only engine: plain sort/argsort specs are rejected at the
+    spec layer and the planner never hands it a sort workload.
     """
     dtypes: Optional[FrozenSet[str]] = None
     stable: bool = False
@@ -66,6 +73,8 @@ class Capabilities:
     supports_kv: bool = True
     supports_topk: bool = True
     supports_segments: bool = True
+    supports_sort: bool = True
+    selection: bool = False
     auto_dispatch: bool = True
     substrate: str = "host"        # "host" | "vmem" | "sram" | "hierarchy"
 
@@ -274,7 +283,9 @@ class SortSpec:
       fill_value                   what overwrites the padded tail
       mesh / axis_name             distributed: sort globally over a mesh
                                    axis (single-round sample-sort / odd-even
-                                   fallback, planner-priced)
+                                   fallback, planner-priced); with ``k`` the
+                                   spec is a mesh-global top-k (local select
+                                   + one candidate all-gather)
       method / run_len / interpret execution knobs (None -> ambient default)
 
     ``eq=False`` keeps the dataclass hashable-by-identity even though it may
@@ -328,14 +339,14 @@ class SortSpec:
                 raise ValueError(
                     "mesh-distributed specs sort flat 1-D arrays; "
                     f"got a {ndim}-d input")
-            if (self.k is not None or self.indices or self.stable
+            if (self.indices or self.stable
                     or self.segment_ids is not None
                     or self.row_splits is not None
                     or self.valid_lengths is not None):
                 raise ValueError(
                     "mesh-distributed specs support plain and key-value "
-                    "sorts only (no k/indices/stable/segments/"
-                    "valid_lengths)")
+                    "sorts plus top-k selection (no indices/stable/"
+                    "segments/valid_lengths)")
             if method not in ("auto", "distributed"):
                 raise ValueError(
                     f"mesh-distributed specs run the 'distributed' "
@@ -380,6 +391,11 @@ class SortSpec:
                 raise ValueError(
                     f"{method} backend does not support top-k "
                     f"(capabilities.supports_topk=False)")
+            if k is None and not caps.supports_sort:
+                raise ValueError(
+                    f"{method} backend is selection-only "
+                    f"(capabilities.supports_sort=False); it runs top-k "
+                    f"specs (k=...), not full sorts")
             if self.values is not None and not caps.supports_kv:
                 raise ValueError(
                     f"{method} backend does not support key-value payloads "

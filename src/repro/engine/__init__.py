@@ -152,7 +152,10 @@ def topk(x: jnp.ndarray, k: int, *, method: str = "auto",
          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k along the last axis -> (values, indices), descending.
 
-    Engine path: per-run top-k candidates (the paper's partition-then-merge,
+    The plan is k-aware: ``method="auto"`` weighs O(n·passes) radix
+    selection (the "select" backend) against sort-prefix on every sort
+    backend, so ``k ≪ n`` workloads never pay for a full sort.  Engine
+    path: per-run top-k candidates (the paper's partition-then-merge,
     §II-B) followed by a key-value merge tree over the k-prefixes.
     """
     x2, lead, _ = _to_rows(x, -1)
@@ -161,7 +164,7 @@ def topk(x: jnp.ndarray, k: int, *, method: str = "auto",
         raise ValueError(
             f"topk k must satisfy 1 <= k <= n (n={n}); got k={k}")
     plan = planner.choose_cached(n, batch, x.dtype, requested=method,
-                                 run_len=run_len)
+                                 run_len=run_len, k=k)
     if plan.method != "merge":
         v, i = sortspec.get_backend(plan.method).topk(
             x2, k, plan=plan, interpret=interpret)

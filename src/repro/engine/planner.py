@@ -69,20 +69,46 @@ def _auto_candidates() -> Dict[str, sortspec.SortBackend]:
 
 def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
            requested: str = "auto",
-           run_len: Optional[int] = None) -> Plan:
-    """Resolve ``requested`` ("auto" or a concrete method) into a Plan."""
+           run_len: Optional[int] = None,
+           k: Optional[int] = None) -> Plan:
+    """Resolve ``requested`` ("auto" or a concrete method) into a Plan.
+
+    With ``k`` set the workload is a top-k: selection-capable backends
+    (``capabilities.selection``) are priced with the O(n·passes)
+    ``cost_model.selection_cost_ns`` while sort backends keep their full
+    sort cost (the sort-prefix model) — so auto lands on radix-select
+    once ``k ≪ n`` and falls back to a sort when k approaches n or the
+    row is tiny.
+
+    Deliberate modeling choice: the xla backend's top-k is priced at the
+    sort-prefix contract even though ``jax.lax.top_k`` lowers to a tuned
+    native selection on XLA:CPU (where it beats everything — see the
+    ``topk_xla`` context rows in results_engine_cpu.csv).  On the TPU
+    substrate this repo targets, lax.top_k is sort-based and the
+    sort-prefix price is the honest one; CPU callers who want the native
+    path pin ``method="xla"`` (every consumer config exposes the knob).
+    """
+    from repro.core import keycodec
     rl = run_len or (_runs.DEFAULT_RUN_LEN if on_tpu() else CPU_RUN_LEN)
     consts = constants()
     interp = not on_tpu()
     candidates = _auto_candidates()
+    kb = keycodec.key_bits(dtype) if keycodec.supports(dtype) else 32
     costs = {
-        name: be.cost_ns(n, batch, dtype, run_len=rl, consts=consts,
-                         interpreted=interp)
+        name: (cost_model.selection_cost_ns(n, k, kb, batch, consts=consts)
+               if k is not None and be.capabilities.selection
+               else be.cost_ns(n, batch, dtype, run_len=rl, consts=consts,
+                               interpreted=interp))
         for name, be in candidates.items()
     }
     if requested == "auto":
-        valid = [m for m in costs
-                 if candidates[m].eligible(n, dtype, rl)]
+        def _valid(name: str) -> bool:
+            caps = candidates[name].capabilities
+            if not candidates[name].eligible(n, dtype, rl):
+                return False
+            # sort plans need a sorter; top-k plans need a topk path
+            return caps.supports_topk if k is not None else caps.supports_sort
+        valid = [m for m in costs if _valid(m)]
         method = min(valid, key=costs.__getitem__)
     else:
         method = requested
@@ -156,20 +182,23 @@ _PLAN_CACHE: Dict[tuple, Plan] = {}
 
 def choose_cached(n: int, batch: int = 1, dtype=jnp.float32, *,
                   requested: str = "auto",
-                  run_len: Optional[int] = None) -> Plan:
-    """``choose`` memoized on the workload statics.
+                  run_len: Optional[int] = None,
+                  k: Optional[int] = None) -> Plan:
+    """``choose`` memoized on the workload statics (``k`` included — a
+    top-k plan and a sort plan for the same row shape differ).
 
     Serving paths hit the same (shape, dtype, spec) combination every step;
     this skips re-pricing entirely.  The cache key folds in the calibration
     state and the registry generation, so ``calibrate()`` or registering a
     new backend transparently re-plans.
     """
-    key = (n, batch, jnp.dtype(dtype).name, requested, run_len,
+    key = (n, batch, jnp.dtype(dtype).name, requested, run_len, k,
            id(_measured), sortspec.registry_generation(),
            jax.default_backend())
     plan = _PLAN_CACHE.get(key)
     if plan is None:
-        plan = choose(n, batch, dtype, requested=requested, run_len=run_len)
+        plan = choose(n, batch, dtype, requested=requested, run_len=run_len,
+                      k=k)
         _PLAN_CACHE[key] = plan
     return plan
 
@@ -228,6 +257,22 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
     bit_ns = _time_ns(lambda: bit_f(x).block_until_ready(), reps)
     mrg_ns = _time_ns(lambda: mrg_f(x).block_until_ready(), reps)
 
+    # selection probe: runs everywhere (off-TPU the select uses its jnp
+    # histogram path, so the timing is honest without a real TPU)
+    from repro.core import keycodec as _kc
+    sel_k = min(64, tile_n)
+    sel_f = jax.jit(lambda v: be("select").topk(v, sel_k)[0])
+    sel_ns = _time_ns(lambda: sel_f(x).block_until_ready(), reps)
+    sel_passes = -(-_kc.key_bits(x.dtype) // cost_model.RADIX_DIGIT_BITS)
+    # strip the modeled O(k log k) ordering term with the constant this
+    # same calibration will price it at (the measured xla one, not the
+    # default — selection_cost_ns re-adds the term using the measured
+    # constants); floor at 10% of the measurement so a noisy probe can
+    # never produce a free selection
+    sel_kterm = (xla_ns / (elems * lg)) * batch \
+        * sel_k * cost_model._log2(sel_k)
+    sel_c = max(sel_ns - sel_kterm, 0.1 * sel_ns) / (elems * sel_passes)
+
     defaults = cost_model.DeviceSortConstants()
     pal_c, rad_c = defaults.pallas, defaults.radix
     if include_pallas:
@@ -248,6 +293,7 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
         bitonic=bit_ns / (elems * lg * lg),
         pallas=pal_c,
         radix=rad_c,
+        select=sel_c,
         merge_run=xla_ns / (elems * lg),
         merge_level=mrg_ns / elems,
     )

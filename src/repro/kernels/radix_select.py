@@ -1,0 +1,272 @@
+"""MSD radix select — O(n·b/DIGIT_BITS) top-k without sorting.
+
+The paper's architecture wins by *partial* data movement: §II-B partitions
+sort concurrently and only the candidates that can still matter cross a
+partition boundary.  For ``k ≪ n`` the same argument says a full
+O(n log n) sort is the wrong tool entirely — the hardware-sorting
+literature (MemSort's max-search mode; the "Sorting it out in Hardware"
+survey's partial-sort taxonomy) treats min/max-search and partial sort as
+first-class operating modes, and this module is their VMEM analogue:
+
+  1. **digit refinement** (most-significant digit first): each pass
+     histograms one ``DIGIT_BITS``-wide digit of the still-active
+     elements (those matching the threshold prefix fixed by earlier
+     passes) and walks the cumulative counts to pin the next digit of
+     the k-th key.  ``ceil(b/DIGIT_BITS)`` passes of O(n) counting work
+     — no element ever moves.
+  2. **exact-k mask**: with the threshold key T and the residual tie
+     budget r = k - #{enc < T}, the survivors are every element below T
+     plus the *first r* (ascending index) elements equal to T.  Exactly
+     k survive — the tie rule that makes the selection reproducible and
+     lets every consumer budget on k (grad compression wire format,
+     MoE capacity, sampling batch shapes).
+  3. **compact + order**: survivors scatter to k slots in index order,
+     then one tiny two-key ``lax.sort`` over (encoded key, index) puts
+     the k candidates in output order — O(k log k) on k elements, dwarfed
+     by the counting passes.
+
+Keys go through ``core/keycodec.py`` with ``descending=True`` so "top-k
+largest" is "k smallest encoded": ties therefore keep ascending index
+order, matching ``jax.lax.top_k``'s lower-index-first rule bit-exactly.
+
+The refinement has two interchangeable engines, mirroring
+``engine/samplesort.bucket_bounds``:
+
+  * ``use_kernel=True`` (TPU default) — DIGIT_BITS-wide passes on a
+    per-tile one-hot histogram Pallas kernel in the style of
+    ``radix_sort._digit_stats``: the grid partitions tiles exactly like
+    the paper partitions its SRAM macro, inactive/pad slots carry an
+    extra digit counted into a throwaway column.
+  * ``use_kernel=False`` (host default) — radix-2 refinement, the
+    faithful analogue of the paper's bit-serial CAS walk: one masked
+    zero-count per key bit, pure branchless compare+reduce jnp with no
+    scatter anywhere (XLA CPU scatters serialise, and an interpreted
+    Pallas kernel pays the ~300x penalty the planner prices into the
+    radix *sort* — selection dodges both).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import keycodec
+# shared shape constants: pricing (cost_model.selection_cost_ns), the LSD
+# sort kernels, and this module can't drift apart
+from repro.core.cost_model import RADIX_DIGIT_BITS as DIGIT_BITS
+from repro.core.cost_model import RADIX_TILE as DEFAULT_TILE
+
+__all__ = ["select_topk", "select_topk_kv", "select_topk_encoded",
+           "kth_key_encoded"]
+
+
+def _kernel_default() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# per-tile histogram kernel (the radix_sort._digit_stats counting half)
+# ---------------------------------------------------------------------------
+
+def _hist_kernel(d_ref, hist_ref, *, ncols: int):
+    """Per-tile digit histogram from one one-hot expansion on the VPU."""
+    slots = jax.lax.broadcasted_iota(jnp.int32, (1, 1, ncols), 2)
+    oh = (d_ref[...][:, :, None] == slots).astype(jnp.int32)
+    hist_ref[...] = jnp.sum(oh, axis=1)
+
+
+def _pick_block_rows(total_rows: int, c: int, ncols: int) -> int:
+    # the (br, C, ncols) one-hot tensor dominates VMEM: keep it ~2 MB
+    br = max(1, min(total_rows, (2 << 20) // max(1, c * ncols * 4)))
+    while total_rows % br:
+        br -= 1
+    return br
+
+
+@functools.partial(jax.jit, static_argnames=("ncols", "interpret"))
+def _tile_hist(d: jnp.ndarray, ncols: int, interpret: bool) -> jnp.ndarray:
+    """(tiles, C) int32 digits in [0, ncols) -> (tiles, ncols) counts."""
+    rows, c = d.shape
+    br = _pick_block_rows(rows, c, ncols)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, ncols=ncols),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, ncols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, ncols), jnp.int32),
+        interpret=interpret,
+    )(d)
+
+
+def _masked_hist(digits: jnp.ndarray, active: jnp.ndarray, radix: int,
+                 interpret: Optional[bool]) -> jnp.ndarray:
+    """(rows, n) digits + active mask -> (rows, radix) active-only counts
+    on the per-tile Pallas kernel: inactive slots carry digit ``radix``,
+    counted into a throwaway column (the bucket_bounds pad trick)."""
+    rows, n = digits.shape
+    d = jnp.where(active, digits, radix)
+    tile = min(DEFAULT_TILE, max(8, n))
+    m = -(-n // tile) * tile
+    if m != n:
+        d = jnp.pad(d, ((0, 0), (0, m - n)), constant_values=radix)
+    interp = _interpret_default() if interpret is None else interpret
+    hist = _tile_hist(d.reshape(rows * (m // tile), tile), radix + 1, interp)
+    return jnp.sum(hist.reshape(rows, m // tile, radix + 1), axis=1)[:, :radix]
+
+
+# ---------------------------------------------------------------------------
+# digit refinement: the k-th encoded key, no data movement
+# ---------------------------------------------------------------------------
+
+def _kth_key_digit_serial(enc: jnp.ndarray, k: int,
+                          interpret: Optional[bool]):
+    """DIGIT_BITS-wide refinement on the Pallas histogram kernel — the
+    TPU path: ceil(b/DIGIT_BITS) passes of per-tile VPU counting."""
+    rows, _ = enc.shape
+    bits = jnp.iinfo(enc.dtype).bits
+    radix = 1 << DIGIT_BITS
+    k_rem = jnp.full((rows,), k, jnp.int32)
+    thresh = jnp.zeros((rows,), enc.dtype)
+    for shift in range(bits - DIGIT_BITS, -1, -DIGIT_BITS):
+        hi = shift + DIGIT_BITS
+        if hi >= bits:
+            active = jnp.ones(enc.shape, bool)
+        else:
+            sh = jnp.array(hi, enc.dtype)
+            active = jax.lax.shift_right_logical(enc, sh) \
+                == jax.lax.shift_right_logical(thresh, sh)[:, None]
+        digits = (jax.lax.shift_right_logical(enc, jnp.array(shift, enc.dtype))
+                  .astype(jnp.int32) & (radix - 1))
+        hist = _masked_hist(digits, active, radix, interpret)
+        cum = jnp.cumsum(hist, axis=-1)
+        # smallest digit whose cumulative count reaches the residual k
+        d = jnp.argmax(cum >= k_rem[:, None], axis=-1).astype(jnp.int32)
+        less = jnp.take_along_axis(cum - hist, d[:, None], -1)[:, 0]
+        k_rem = k_rem - less
+        thresh = thresh | (d.astype(enc.dtype)
+                           << jnp.array(shift, enc.dtype))
+    return thresh, k_rem
+
+
+def _kth_key_bit_serial(enc: jnp.ndarray, k: int):
+    """1-bit refinement in pure jnp — the host path, and the faithful
+    radix-2 analogue of the paper's bit-serial CAS walk: per key bit, one
+    masked zero-count (compare + reduction, branchless and SIMD-friendly)
+    decides the threshold bit.  b passes of O(n) elementwise work and NOT
+    ONE scatter — XLA's CPU scatter serialises, which is exactly why the
+    digit histogram stays on the TPU kernel.  The pass loop is a
+    ``fori_loop`` (the body is shift-uniform), so the compiled program is
+    one pass long instead of b passes long — compile time at engine sizes
+    stays flat."""
+    rows, _ = enc.shape
+    bits = jnp.iinfo(enc.dtype).bits
+    one = jnp.array(1, enc.dtype)
+
+    def body(i, carry):
+        k_rem, thresh, active = carry
+        sh = jnp.array(bits - 1, enc.dtype) - i.astype(enc.dtype)
+        bit = (jax.lax.shift_right_logical(enc, sh) & one) != 0
+        zeros = active & ~bit
+        c0 = jnp.sum(zeros, axis=-1).astype(jnp.int32)
+        take0 = k_rem <= c0
+        active = jnp.where(take0[:, None], zeros, active & bit)
+        k_rem = jnp.where(take0, k_rem, k_rem - c0)
+        thresh = jnp.where(take0, thresh, thresh | (one << sh))
+        return k_rem, thresh, active
+
+    k_rem, thresh, _ = jax.lax.fori_loop(
+        0, bits, body, (jnp.full((rows,), k, jnp.int32),
+                        jnp.zeros((rows,), enc.dtype),
+                        jnp.ones(enc.shape, bool)))
+    return thresh, k_rem
+
+
+def kth_key_encoded(enc: jnp.ndarray, k: int, *,
+                    use_kernel: Optional[bool] = None,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per row of unsigned ``(rows, n)``: the k-th *smallest* encoded key
+    ``T`` and the residual tie budget ``r = k - #{enc < T}`` (how many
+    threshold-equal elements the exact-k rule keeps)."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    if use_kernel:
+        return _kth_key_digit_serial(enc, k, interpret)
+    return _kth_key_bit_serial(enc, k)
+
+
+# ---------------------------------------------------------------------------
+# exact-k selection over encoded keys
+# ---------------------------------------------------------------------------
+
+def select_topk_encoded(enc: jnp.ndarray, k: int, *,
+                        use_kernel: Optional[bool] = None,
+                        interpret: Optional[bool] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(rows, n) unsigned encoded keys -> the k smallest per row, in
+    ascending (encoded, index) order: ``(enc_topk, indices)``, both
+    ``(rows, k)``.  Exactly k survive; ties keep ascending index order."""
+    rows, n = enc.shape
+    if not 1 <= k <= n:
+        raise ValueError(
+            f"topk k must satisfy 1 <= k <= n (n={n}); got k={k}")
+    thresh, k_eq = kth_key_encoded(enc, k, use_kernel=use_kernel,
+                                   interpret=interpret)
+    less = enc < thresh[:, None]
+    eq = enc == thresh[:, None]
+    eq_rank = jnp.cumsum(eq.astype(jnp.int32), axis=-1) - 1
+    take = less | (eq & (eq_rank < k_eq[:, None]))
+    # compact the k survivors in index order WITHOUT a scatter: the
+    # cumulative take-count is sorted per row, so the j-th survivor's
+    # position is one binary search — O(k log n) gathers (XLA CPU scatters
+    # serialise; a length-n scatter here would dwarf the counting passes).
+    # Then one tiny two-key lexicographic sort orders the k candidates —
+    # the merge step of partition-then-merge, degenerated to O(k log k)
+    # because only candidates ever move.
+    csum = jnp.cumsum(take.astype(jnp.int32), axis=-1)
+    targets = jnp.arange(1, k + 1, dtype=jnp.int32)
+    # exactly k survive, so csum[-1] == k >= every target: the search
+    # always lands in range
+    idx_c = jax.vmap(
+        lambda c: jnp.searchsorted(c, targets, side="left"))(csum) \
+        .astype(jnp.int32)
+    enc_c = jnp.take_along_axis(enc, idx_c, axis=-1)
+    return jax.lax.sort((enc_c, idx_c), num_keys=2)
+
+
+# ---------------------------------------------------------------------------
+# front doors (source dtypes through the keycodec)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel", "interpret"))
+def select_topk(x: jnp.ndarray, k: int, *,
+                use_kernel: Optional[bool] = None,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k largest per row of ``(rows, n)`` -> (values, indices), values
+    descending, ties by ascending index — ``jax.lax.top_k``'s convention,
+    in O(n·b/DIGIT_BITS) counting work instead of a sort."""
+    enc = keycodec.encode(x, descending=True)
+    enc_s, idx_s = select_topk_encoded(enc, k, use_kernel=use_kernel,
+                                       interpret=interpret)
+    return keycodec.decode(enc_s, x.dtype, descending=True), idx_s
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel", "interpret"))
+def select_topk_kv(keys: jnp.ndarray, values: jnp.ndarray, k: int, *,
+                   use_kernel: Optional[bool] = None,
+                   interpret: Optional[bool] = None):
+    """Key-value variant: ``(topk keys, payload, indices)`` — the payload
+    rides the exact-k selection by one gather through the indices."""
+    if values.shape != keys.shape:
+        raise ValueError(f"values shape {values.shape} must match keys "
+                         f"shape {keys.shape}")
+    v, i = select_topk(keys, k, use_kernel=use_kernel, interpret=interpret)
+    return v, jnp.take_along_axis(values, i, axis=-1), i

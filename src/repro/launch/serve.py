@@ -40,6 +40,15 @@ class Request:
 class LengthSortedScheduler:
     """Batch requests by sorted prompt length (paper technique #3).
 
+    Each batch is **anchored at the oldest queued request** and filled with
+    its adjacent-length neighbours from the sorted order (the window with
+    the smallest length spread that contains the anchor).  Pure
+    shortest-k scheduling starved long prompts forever under sustained
+    load — a long request could sit at the tail of the sorted order while
+    fresh short requests kept overtaking it; anchoring bounds every
+    request's wait at its arrival backlog while keeping batches
+    length-homogeneous (the padding-waste argument survives intact).
+
     ``method`` takes any registered backend name; the default ``"auto"`` lets
     the engine's cost-model planner pick per queue size, so the scheduler
     scales from a handful of requests to engine-sized backlogs unchanged.
@@ -85,11 +94,26 @@ class LengthSortedScheduler:
     def next_batch(self) -> List[Request]:
         if not self.queue:
             return []
-        lens = jnp.asarray([len(r.prompt) for r in self.queue],
-                           dtype=jnp.int32)
-        order = self._order(lens)
-        batch = [self.queue[i] for i in order[:self.batch_size]]
-        picked = set(order[:self.batch_size].tolist())
+        lens_np = np.asarray([len(r.prompt) for r in self.queue],
+                             dtype=np.int32)
+        order = self._order(jnp.asarray(lens_np))
+        n, b = len(self.queue), min(self.batch_size, len(self.queue))
+        # anchor: the oldest queued request (the queue is submission
+        # order, so position 0 is it) — every batch serves the current
+        # oldest, which bounds any request's wait at its arrival backlog
+        order = np.asarray(order)
+        anchor = int(np.nonzero(order == 0)[0][0])
+        # lengths in schedule order are ascending, so a window's spread is
+        # just last-minus-first — O(b) over the candidate starts
+        sl = lens_np[order]
+        best_start, best_spread = None, None
+        for start in range(max(0, anchor - b + 1), min(anchor, n - b) + 1):
+            spread = int(sl[start + b - 1] - sl[start])
+            if best_spread is None or spread < best_spread:
+                best_start, best_spread = start, spread
+        window = order[best_start:best_start + b]
+        batch = [self.queue[i] for i in window]
+        picked = set(int(i) for i in window)
         self.queue = [r for i, r in enumerate(self.queue)
                       if i not in picked]
         return batch

@@ -224,8 +224,10 @@ def make_prefill_step(model: Model, shape: ShapeSpec):
 def make_serve_step(model: Model, shape: ShapeSpec, sample_topk: int = 0):
     """One decode step: token -> logits -> (sampled) next token + new state.
 
-    With sample_topk > 0 the next token comes from top-k sampling whose
-    sort runs through the paper's bitonic kernels (cfg.sort_method).
+    With sample_topk > 0 the next token comes from top-k sampling through
+    the k-aware ``repro.sort`` front door (cfg.sort_method, default
+    "auto"): vocab-sized logits with k ~ 50 are the textbook selection
+    workload, so the planner routes them to radix-select, not a sort.
     """
     method = model.cfg.sort_method
 

@@ -94,7 +94,10 @@ def apply(params, x, cfg: MoEConfig, mlp_type: str, policy=None):
         return jax.lax.with_sharding_constraint(
             v, jax.sharding.NamedSharding(policy.mesh, spec))
 
-    # 1. routing (fp32 softmax); top-k through the paper's bitonic network
+    # 1. routing (fp32 softmax); expert top-k through the k-aware front
+    # door — the planner weighs radix selection against sort-prefix per
+    # (n_experts, top_k), so routing never pays for a full sort it
+    # doesn't need (cfg.router_method pins a specific backend if set)
     rl = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
     rl = constrain(rl, P(dp, None, None))
     probs = jax.nn.softmax(rl, axis=-1)

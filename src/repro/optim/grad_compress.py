@@ -31,7 +31,9 @@ import jax.numpy as jnp
 class CompressorConfig:
     codec: str = "int8"          # int8 | topk
     topk_frac: float = 0.125
-    sort_method: str = "bitonic"
+    # "auto" lets the k-aware planner pick radix selection over
+    # sort-prefix — gradient tensors are exactly the k << n regime
+    sort_method: str = "auto"
 
 
 def _int8_roundtrip(g):
@@ -40,14 +42,27 @@ def _int8_roundtrip(g):
     return q.astype(jnp.float32) * scale
 
 
+def topk_budget(n: int, frac: float) -> int:
+    """The exact element budget the top-k codec keeps (and prices)."""
+    return max(1, int(n * frac))
+
+
 def _topk_roundtrip(g, frac: float, method: str):
+    """Keep exactly k = max(1, floor(n*frac)) largest-|g| lanes.
+
+    Exact-k scatter from the top-k *indices* — never a threshold compare.
+    The old ``|g| >= vals[-1]`` mask had two failure modes: a zero k-th
+    magnitude made the mask all-true (|g| >= 0.0 — compression silently
+    OFF for sparse gradients), and ties at the threshold kept every tied
+    lane (frac=0.25 of 8 equal values kept all 8).  Scattering through
+    the indices keeps exactly k lanes under both, matching what
+    ``wire_bytes`` bills for.
+    """
     flat = g.reshape(-1)
-    k = max(1, int(flat.shape[0] * frac))
+    k = topk_budget(flat.shape[0], frac)
     from repro import sort as sorting
-    vals, _ = sorting.topk(jnp.abs(flat), k, method=method)
-    thresh = vals[..., -1]
-    mask = jnp.abs(flat) >= thresh
-    return (flat * mask).reshape(g.shape)
+    _, idx = sorting.topk(jnp.abs(flat), k, method=method)
+    return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(g.shape)
 
 
 def make_compressor(cfg: CompressorConfig):
@@ -80,8 +95,11 @@ def make_compressor(cfg: CompressorConfig):
 
 
 def wire_bytes(n_params: int, codec: str, topk_frac: float = 0.125) -> int:
-    """Bytes on the DCN per step per pod-pair for the gradient all-reduce."""
+    """Bytes on the DCN per step per pod-pair for the gradient all-reduce.
+
+    The top-k bill uses the same ``topk_budget`` the codec enforces, so
+    the wire accounting matches the exact-k guarantee (never the old
+    threshold mask's "maybe everything" worst case)."""
     if codec == "int8":
         return n_params * 1 + 4  # values + scale
-    k = int(n_params * topk_frac)
-    return k * (4 + 4)           # value + index
+    return topk_budget(n_params, topk_frac) * (4 + 4)   # value + index

@@ -65,8 +65,14 @@ def run(spec: SortSpec, x: _Arr) -> Union[_Arr, Tuple[_Arr, _Arr]]:
 
     if spec.mesh is not None:
         # mesh-global path: the distributed backend dispatches sample-sort
-        # vs odd-even transposition through planner.choose_distributed
+        # vs odd-even transposition through planner.choose_distributed;
+        # top-k specs run the candidate path (local select + one
+        # all-gather) — never a full mesh sort
         from repro.core.sortspec import get_backend as _get
+        if spec.k is not None:
+            return _get("distributed").topk_mesh(
+                x, spec.k, spec.mesh, spec.axis_name,
+                interpret=spec.interpret)
         return _get("distributed").sort_mesh(
             x, spec.mesh, spec.axis_name, values=spec.values,
             descending=spec.descending, interpret=spec.interpret)
@@ -158,12 +164,19 @@ def argsort(x: _Arr, *, axis: int = -1, descending: bool = False,
 
 
 def topk(x: _Arr, k: int, *, axis: int = -1, method: Optional[str] = None,
-         run_len: Optional[int] = None,
-         interpret: Optional[bool] = None) -> Tuple[_Arr, _Arr]:
+         run_len: Optional[int] = None, interpret: Optional[bool] = None,
+         mesh=None, axis_name: Optional[str] = None) -> Tuple[_Arr, _Arr]:
     """Top-k along ``axis`` -> (values, indices), descending.  ``k`` is
-    validated at the spec layer: 1 <= k <= n or ValueError."""
+    validated at the spec layer: 1 <= k <= n or ValueError.
+
+    The plan is k-aware: "auto" picks O(n·passes) radix selection over
+    sort-prefix whenever the cost model says ``k ≪ n`` pays.  With
+    ``mesh``/``axis_name`` a flat array is selected globally over the mesh
+    axis — local select per shard plus ONE candidate all-gather, matching
+    ``jax.lax.top_k`` bit-exactly (indices are global positions)."""
     return run(SortSpec(axis=axis, k=k, descending=True, method=method,
-                        run_len=run_len, interpret=interpret), x)
+                        run_len=run_len, interpret=interpret,
+                        mesh=mesh, axis_name=axis_name), x)
 
 
 def sort_kv(keys: _Arr, values: _Arr, *, axis: int = -1,

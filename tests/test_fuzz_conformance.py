@@ -65,7 +65,7 @@ def sort_cases(draw):
     }
 
 
-def _backends_for(dtype_name: str, n: int):
+def _backends_for(dtype_name: str, n: int, *, sorts: bool = False):
     for name in sorted(sortspec.backend_names()):
         caps = sortspec.get_backend(name).capabilities
         if caps.dtypes is not None and dtype_name not in caps.dtypes:
@@ -73,6 +73,8 @@ def _backends_for(dtype_name: str, n: int):
         if caps.substrate == "sram" and (n > SRAM_MAX_N or n < 2
                                          or n & (n - 1)):
             continue
+        if sorts and not caps.supports_sort:
+            continue        # selection-only engines run no full sorts
         yield name, caps
 
 
@@ -102,7 +104,7 @@ def test_fuzz_sort_matches_jnp(case):
     ref = _f64(jnp.sort(x, axis=axis))
     if desc:
         ref = np.flip(ref, axis)
-    for name, _caps in _backends_for(case["dtype"], n):
+    for name, _caps in _backends_for(case["dtype"], n, sorts=True):
         out = rsort.sort(x, axis=axis, descending=desc, method=name)
         np.testing.assert_array_equal(
             _f64(out), ref,
@@ -120,7 +122,7 @@ def test_fuzz_argsort_tie_convention(case):
     axis, desc = case["axis"], case["descending"]
     n = x.shape[axis]
     ref = _ref_argsort(x, axis, desc)
-    for name, _caps in _backends_for(case["dtype"], n):
+    for name, _caps in _backends_for(case["dtype"], n, sorts=True):
         if not _composite_argsort_fits(name, case["dtype"], n):
             continue
         order = rsort.argsort(x, axis=axis, descending=desc, method=name,
@@ -146,7 +148,7 @@ def test_fuzz_sort_kv_payload_follows_keys(case):
     key_ref = _f64(jnp.sort(x, axis=axis))
     if desc:
         key_ref = np.flip(key_ref, axis)
-    for name, caps in _backends_for(case["dtype"], n):
+    for name, caps in _backends_for(case["dtype"], n, sorts=True):
         if not caps.supports_kv:
             continue
         sk, sv = rsort.sort_kv(x, payload, axis=axis, descending=desc,
@@ -184,3 +186,96 @@ def test_fuzz_topk_matches_lax(case):
         np.testing.assert_array_equal(
             _f64(np.take_along_axis(np.asarray(xl), np.asarray(i), -1)),
             _f64(vr), err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# top-k lens: exact-k everywhere (k extremes, tie floods, extreme keys, kv)
+# ---------------------------------------------------------------------------
+
+def _extreme_values(seed: int, shape, dtype_name: str) -> jnp.ndarray:
+    """Keys stacked with the dtype's own extremes: max/min (and ±inf, ±0.0
+    for floats) mixed into a duplicate-heavy body — the exact regime the
+    threshold-mask top-k bugs lived in."""
+    rng = np.random.default_rng(seed)
+    dt = np.dtype(dtype_name) if dtype_name != "bfloat16" else np.float32
+    if np.issubdtype(dt, np.integer):
+        info = np.iinfo(dt)
+        pool = np.asarray([info.max, info.min, 0, 1, info.max, info.min],
+                          dtype=np.int64)
+    else:
+        pool = np.asarray([np.inf, -np.inf, 0.0, -0.0,
+                           float(np.finfo(np.float32).max), 1.0])
+    body = rng.integers(0, 3, size=np.prod(shape))
+    x = pool[rng.integers(0, len(pool), size=np.prod(shape))]
+    use_body = rng.random(np.prod(shape)) < 0.5
+    x = np.where(use_body, body.astype(x.dtype), x)
+    return jnp.asarray(x.reshape(shape)).astype(jnp.dtype(dtype_name))
+
+
+@st.composite
+def topk_lens_cases(draw):
+    return {
+        "seed": draw(st.integers(0, 2**31 - 1)),
+        "n": draw(st.sampled_from([1, 2, 7, 33])),
+        "dtype": draw(st.sampled_from(DTYPES)),
+        "dist": draw(st.sampled_from(("dup_heavy", "all_equal", "extreme"))),
+        "k_mode": draw(st.sampled_from(("one", "half", "all"))),
+    }
+
+
+@given(topk_lens_cases())
+@settings(max_examples=6, deadline=None)
+def test_fuzz_topk_lens_exact_k(case):
+    """Every backend claiming topk (selection engines included) vs
+    ``jax.lax.top_k`` at the k extremes over adversarial keys.  Exactly k
+    come back, values element-exact; selection backends must also match
+    lax's tie rule (lowest index first) index-exactly."""
+    n = case["n"]
+    k = {"one": 1, "half": max(1, n // 2), "all": n}[case["k_mode"]]
+    if case["dist"] == "extreme":
+        x = _extreme_values(case["seed"], (2, n), case["dtype"])
+    else:
+        x = _values(case["seed"], (2, n), case["dtype"], case["dist"])
+    vr, ir = jax.lax.top_k(x, k)
+    for name, caps in _backends_for(case["dtype"], n):
+        if not caps.supports_topk:
+            continue
+        v, i = rsort.topk(x, k, method=name)
+        msg = f"{name}/{case['dtype']}/{case['dist']}/n={n}/k={k}"
+        assert v.shape == (2, k) and i.shape == (2, k), msg
+        np.testing.assert_array_equal(_f64(v), _f64(vr), err_msg=msg)
+        np.testing.assert_array_equal(
+            _f64(np.take_along_axis(np.asarray(x), np.asarray(i), -1)),
+            _f64(vr), err_msg=msg)
+        if caps.selection:
+            # exact-k tie convention: the selection subsystem reproduces
+            # lax.top_k's lowest-index-first rule bit-exactly
+            np.testing.assert_array_equal(np.asarray(i), np.asarray(ir),
+                                          err_msg=msg)
+
+
+@given(topk_lens_cases())
+@settings(max_examples=5, deadline=None)
+def test_fuzz_topk_lens_kv_payload(case):
+    """The selection kernel's kv variant: the payload rides the exact-k
+    selection — gathering the payload through the returned indices equals
+    the kv output, under tie floods and extreme keys."""
+    from repro.kernels import radix_select as _sel
+    n = case["n"]
+    k = {"one": 1, "half": max(1, n // 2), "all": n}[case["k_mode"]]
+    if case["dist"] == "extreme":
+        x = _extreme_values(case["seed"], (2, n), case["dtype"])
+    else:
+        x = _values(case["seed"], (2, n), case["dtype"], case["dist"])
+    payload = jnp.asarray(
+        np.random.default_rng(case["seed"] ^ 0xABC).integers(
+            -999, 999, (2, n)).astype(np.int32))
+    v, pv, i = _sel.select_topk_kv(x, payload, k)
+    vr, ir = jax.lax.top_k(x, k)
+    msg = f"{case['dtype']}/{case['dist']}/n={n}/k={k}"
+    np.testing.assert_array_equal(_f64(v), _f64(vr), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir), err_msg=msg)
+    np.testing.assert_array_equal(
+        np.asarray(pv),
+        np.take_along_axis(np.asarray(payload), np.asarray(ir), -1),
+        err_msg=msg)

@@ -87,3 +87,66 @@ def test_int8_roundtrip_quantization_error():
     rt = _int8_roundtrip(g)
     scale = float(jnp.max(jnp.abs(g))) / 127
     assert float(jnp.max(jnp.abs(rt - g))) <= scale * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# exact-k compression guarantee (the threshold-mask bug class)
+# ---------------------------------------------------------------------------
+
+def _kept_lanes(g, out):
+    """Lanes the codec kept: where the output reproduces the input AND the
+    selection actually happened (nonzero output, or provably selected)."""
+    return np.flatnonzero(np.asarray(out) != 0.0)
+
+
+def test_topk_roundtrip_sparse_zero_tail_regression():
+    """Repro from the bug report: when the k-th largest |g| is 0.0, the old
+    ``|g| >= thresh`` mask was all-true — compression silently OFF.  The
+    exact-k scatter keeps only the k genuine lanes."""
+    from repro.optim.grad_compress import _topk_roundtrip
+    g = jnp.asarray([2.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0], jnp.float32)
+    out = _topk_roundtrip(g, 0.25, "auto")          # k = 2
+    np.testing.assert_array_equal(
+        np.asarray(out), [2.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0])
+    # fully sparse input: k zero lanes "kept", everything still zero —
+    # but crucially nothing beyond the budget leaks through
+    out0 = _topk_roundtrip(jnp.zeros(8, jnp.float32), 0.25, "auto")
+    np.testing.assert_array_equal(np.asarray(out0), np.zeros(8))
+
+
+def test_topk_roundtrip_all_equal_tie_budget_regression():
+    """Repro from the bug report: frac=0.25 over 8 equal values kept all 8
+    under the threshold mask.  Exact-k keeps exactly 2 (lowest indices —
+    the documented tie convention)."""
+    from repro.optim.grad_compress import _topk_roundtrip
+    g = jnp.full((8,), 3.0, jnp.float32)
+    out = _topk_roundtrip(g, 0.25, "auto")
+    np.testing.assert_array_equal(
+        np.asarray(out), [3.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+
+
+def test_topk_roundtrip_exact_k_property():
+    """Property sweep over random sparsity patterns: the roundtrip output
+    always equals the reference exact-k scatter built from jax.lax.top_k
+    (so exactly k lanes survive, ties resolved lowest-index-first), and
+    wire_bytes bills for precisely that k."""
+    from repro.optim.grad_compress import (_topk_roundtrip, topk_budget,
+                                           wire_bytes)
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        n = int(rng.integers(4, 200))
+        frac = float(rng.uniform(0.05, 0.9))
+        sparsity = float(rng.uniform(0.0, 1.0))
+        g_np = rng.standard_normal(n)
+        g_np[rng.random(n) < sparsity] = 0.0
+        if rng.random() < 0.3:                     # tie floods
+            g_np = np.round(g_np)
+        g = jnp.asarray(g_np, jnp.float32)
+        k = topk_budget(n, frac)
+        out = _topk_roundtrip(g, frac, "auto")
+        _, idx = jax.lax.top_k(jnp.abs(g), k)
+        ref = jnp.zeros_like(g).at[idx].set(g[idx])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref),
+                                      err_msg=f"trial={trial} n={n} k={k}")
+        assert len(_kept_lanes(g, out)) <= k
+        assert wire_bytes(n, "topk", frac) == k * 8

@@ -98,3 +98,44 @@ def test_distributed_plans_share_invalidation():
     assert planner.choose_distributed_cached(1 << 20, 8) is d1   # hit
     sortspec.register_backend(_CheapBackend)
     assert planner.choose_distributed_cached(1 << 20, 8) is not d1
+
+
+# ---------------------------------------------------------------------------
+# k-aware plans: selection vs sort-prefix
+# ---------------------------------------------------------------------------
+
+def test_topk_plans_are_keyed_on_k():
+    """A top-k plan and a sort plan for the same row shape are different
+    cache entries, priced by different models."""
+    sort_plan = planner.choose_cached(1 << 20, 1, jnp.float32)
+    topk_plan = planner.choose_cached(1 << 20, 1, jnp.float32, k=64)
+    assert topk_plan is not sort_plan
+    assert planner.choose_cached(1 << 20, 1, jnp.float32, k=64) is topk_plan
+    assert planner.choose_cached(1 << 20, 1, jnp.float32, k=128) \
+        is not topk_plan
+
+
+def test_auto_picks_select_for_small_k_large_n():
+    """Both sides of the select/sort crossover (README "Selection" table):
+    at n=1M with k<=64 selection's O(n·passes) beats every sort's
+    O(n log n); at tiny n (or k ~ n) the fixed digit passes cost more
+    than just sorting — auto must land accordingly."""
+    big = planner.choose_cached(1 << 20, 1, jnp.float32, k=64)
+    assert big.method == "select", big.costs
+    assert big.costs["select"] < big.costs["xla"]
+    # the selection model scales with key width: int8 keys take 1 pass
+    narrow = planner.choose_cached(1 << 20, 1, jnp.int8, k=64)
+    assert narrow.costs["select"] < big.costs["select"]
+    # other side of the crossover: a tiny row is cheaper to just sort
+    small = planner.choose_cached(64, 1, jnp.float32, k=64)
+    assert small.method != "select", small.costs
+
+
+def test_sort_plans_never_pick_the_selection_backend():
+    """supports_sort=False removes selection-only engines from every sort
+    plan, while explicit top-k requests still route to them."""
+    for n in (64, 4096, 1 << 20):
+        assert planner.choose_cached(n, 1, jnp.float32).method != "select"
+    forced = planner.choose_cached(4096, 1, jnp.float32,
+                                   requested="select", k=16)
+    assert forced.method == "select"

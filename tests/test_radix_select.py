@@ -1,0 +1,144 @@
+"""MSD radix-select: exact-k guarantees, tie convention, both hist engines.
+
+The selection subsystem's contract is stricter than "same values as
+lax.top_k": exactly k survive, ties resolve lowest-index-first (so the
+indices match ``jax.lax.top_k`` bit-exactly), the kv variant carries the
+payload through the same selection, and the Pallas per-tile histogram
+kernel and the host scatter-add path agree element-exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.sort as rsort
+from repro.core import keycodec, sortspec
+from repro.kernels import radix_select as rsel
+
+DTYPES = ("float32", "int32", "uint16", "int8", "float16", "bfloat16")
+
+
+def _keys(rng, dtype_name, shape, dist="uniform"):
+    lo, hi = (0, 100) if dtype_name.startswith("uint") else (-100, 100)
+    if dist == "dup_heavy":
+        raw = rng.integers(0, 4, size=shape)
+    elif dist == "all_equal":
+        raw = np.full(shape, rng.integers(lo, hi))
+    else:
+        raw = rng.integers(lo, hi, size=shape)
+    return jnp.asarray(raw).astype(jnp.dtype(dtype_name))
+
+
+@pytest.mark.parametrize("dtype_name", DTYPES)
+def test_select_matches_lax_top_k_bit_exactly(dtype_name):
+    """(n, k) matrix kept deliberately lean: select_topk jit-specialises
+    per (dtype, n, k), and every distribution reuses the same compiled
+    program — broad randomised coverage lives in the fuzz top-k lens."""
+    rng = np.random.default_rng(hash(dtype_name) % 2**32)
+    for n in (5, 257):
+        for k in sorted({1, n // 2, n}):
+            for dist in ("uniform", "dup_heavy", "all_equal"):
+                x = _keys(rng, dtype_name, (3, n), dist)
+                v, i = rsel.select_topk(x, k)
+                vr, ir = jax.lax.top_k(x, k)
+                msg = f"{dtype_name}/{dist}/n={n}/k={k}"
+                np.testing.assert_array_equal(
+                    np.asarray(v).astype(np.float64),
+                    np.asarray(vr).astype(np.float64), err_msg=msg)
+                # indices too: exact-k tie rule == lax's lowest-index-first
+                np.testing.assert_array_equal(np.asarray(i), np.asarray(ir),
+                                              err_msg=msg)
+
+
+def test_select_extreme_keys():
+    """dtype-max / ±inf / ±0.0 keys: the keycodec's total order keeps the
+    selection exact where a float threshold compare would fold -0.0/+0.0
+    and saturate at inf."""
+    x = jnp.asarray([[np.inf, -np.inf, 0.0, -0.0, 1.0,
+                      float(np.finfo(np.float32).max), -1.0, np.inf]],
+                    jnp.float32)
+    for k in (1, 3, 8):
+        v, i = rsel.select_topk(x, k)
+        vr, ir = jax.lax.top_k(x, k)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    xi = jnp.asarray([[np.iinfo(np.int32).max, np.iinfo(np.int32).min,
+                       0, -1, np.iinfo(np.int32).max]], jnp.int32)
+    v, i = rsel.select_topk(xi, 3)
+    np.testing.assert_array_equal(np.asarray(i),
+                                  np.asarray(jax.lax.top_k(xi, 3)[1]))
+
+
+def test_select_kv_payload_rides_selection():
+    rng = np.random.default_rng(3)
+    keys = _keys(rng, "float32", (2, 67), "dup_heavy")
+    payload = jnp.asarray(rng.integers(-9, 9, (2, 67)).astype(np.int32))
+    v, pv, i = rsel.select_topk_kv(keys, payload, 13)
+    vr, ir = jax.lax.top_k(keys, 13)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(
+        np.asarray(pv),
+        np.take_along_axis(np.asarray(payload), np.asarray(ir), -1))
+    with pytest.raises(ValueError, match="must match"):
+        rsel.select_topk_kv(keys, payload[:, :5], 3)
+
+
+def test_kernel_and_host_refinements_agree():
+    """The digit-serial Pallas histogram path (interpret mode) and the
+    host bit-serial path produce identical selections.  int8 keys keep the
+    interpret-mode kernel cheap (one digit pass) while n=300 exercises
+    tile padding; int32/n=40 covers the multi-pass single-tile shape."""
+    rng = np.random.default_rng(5)
+    for dtype_name, n, ks in (("int8", 300, (1, 100)), ("int32", 40, (13,))):
+        x = _keys(rng, dtype_name, (2, n), "dup_heavy")
+        for k in ks:
+            vk, ik = rsel.select_topk(x, k, use_kernel=True, interpret=True)
+            vh, ih = rsel.select_topk(x, k, use_kernel=False)
+            np.testing.assert_array_equal(np.asarray(vk), np.asarray(vh),
+                                          err_msg=f"n={n} k={k}")
+            np.testing.assert_array_equal(np.asarray(ik), np.asarray(ih),
+                                          err_msg=f"n={n} k={k}")
+
+
+def test_kth_key_threshold_and_tie_budget():
+    """The refinement loop pins the k-th smallest encoded key and the
+    residual tie budget r = k - #{enc < T} exactly."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(0, 5, (4, 50)).astype(np.int32))
+    enc = keycodec.encode(x, descending=True)
+    for k in (1, 10, 50):
+        thresh, r = rsel.kth_key_encoded(enc, k)
+        se = np.sort(np.asarray(enc), -1)
+        np.testing.assert_array_equal(np.asarray(thresh), se[:, k - 1])
+        less = (np.asarray(enc) < np.asarray(thresh)[:, None]).sum(-1)
+        np.testing.assert_array_equal(np.asarray(r), k - less)
+
+
+def test_select_backend_front_door_and_spec_validation():
+    """method="select" through repro.sort: top-k runs, plain sorts are a
+    clear spec-layer error (selection-only backend)."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((2, 100)), jnp.float32)
+    v, i = rsort.topk(x, 7, method="select")
+    vr, ir = jax.lax.top_k(x, 7)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    with pytest.raises(ValueError, match="selection-only"):
+        rsort.sort(x, method="select")
+    with pytest.raises(ValueError, match="selection-only"):
+        rsort.argsort(x, method="select")
+    with pytest.raises(ValueError, match="1 <= k <= n"):
+        rsort.topk(x, 0, method="select")
+    caps = sortspec.get_backend("select").capabilities
+    assert caps.selection and not caps.supports_sort
+
+
+def test_select_under_jit_and_vs_sort_prefix():
+    """jit-compatible (static k) and equal to the registry's sort-prefix
+    route on a workload where both are exact."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.integers(-1000, 1000, (1, 4096)).astype(np.int32))
+    f = jax.jit(lambda v: rsel.select_topk(v, 32))
+    v, i = f(x)
+    vs, _ = rsort.topk(x, 32, method="xla")
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vs))

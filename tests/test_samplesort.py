@@ -245,7 +245,11 @@ def test_spec_mesh_validation():
 def test_scheduler_distributed_queue_orders_by_length():
     """serve.py's backlog sort over the mesh: the (length, position)
     composite value-sort must reproduce the local argsort schedule (on a
-    1-device mesh it falls back to exactly that path)."""
+    1-device mesh it falls back to exactly that path).  Batches are
+    anchored at the oldest queued request and filled with adjacent-length
+    neighbours, so the check is: nothing dropped, every batch contains
+    the then-oldest request, and each batch is a contiguous slice of the
+    length-sorted backlog."""
     from repro.launch.serve import LengthSortedScheduler, Request
     # distributed_min lowered so the mesh path runs at test-sized backlogs
     sched = LengthSortedScheduler(4, mesh=_mesh(), distributed_min=2)
@@ -254,12 +258,17 @@ def test_scheduler_distributed_queue_orders_by_length():
     for rid, ln in enumerate(lens):
         sched.submit(Request(rid=rid, prompt=np.zeros(ln, np.int32)))
     seen = []
-    while True:
+    while sched.queue:
+        oldest = sched.queue[0].rid
+        backlog = sorted(len(r.prompt) for r in sched.queue)
         batch = sched.next_batch()
-        if not batch:
-            break
+        assert any(r.rid == oldest for r in batch)       # anchor present
+        got = sorted(len(r.prompt) for r in batch)
+        # contiguous window of the sorted backlog lengths
+        assert any(backlog[s:s + len(got)] == got
+                   for s in range(len(backlog) - len(got) + 1))
         seen.extend(len(r.prompt) for r in batch)
-    assert seen == sorted(lens)          # shortest-first, nothing dropped
+    assert sorted(seen) == sorted(lens)          # nothing dropped
 
 
 # ---------------------------------------------------------------------------

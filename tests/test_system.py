@@ -38,6 +38,38 @@ def test_serve_end_to_end():
     assert stats["batches"] == 2
 
 
+def test_scheduler_never_starves_long_prompts():
+    """Aging regression: under sustained load of short prompts, a long
+    prompt used to sit at the tail of the length-sorted queue forever
+    (next_batch always took the k shortest).  Anchoring each batch at the
+    oldest queued request bounds the wait: the long prompt must be served
+    in the FIRST batch after it becomes the oldest, even though shorter
+    fresh arrivals keep overtaking it in length order."""
+    from repro.launch.serve import LengthSortedScheduler, Request
+    sched = LengthSortedScheduler(batch_size=4)
+    sched.submit(Request(rid=0, prompt=np.zeros(500, np.int32)))   # long
+    rng = np.random.default_rng(7)
+    rid = 1
+    for _ in range(4):                          # sustained short traffic
+        sched.submit(Request(rid=rid, prompt=np.zeros(
+            int(rng.integers(4, 16)), np.int32)))
+        rid += 1
+    # the long prompt is the oldest -> it anchors the very FIRST batch
+    batch = sched.next_batch()
+    assert any(r.rid == 0 for r in batch), \
+        "long prompt starved: oldest request missing from its batch"
+    # the fill is its adjacent-length neighbours (the longest shorts),
+    # keeping the batch as length-homogeneous as the anchor allows
+    batch_lens = sorted(len(r.prompt) for r in batch if r.rid != 0)
+    left_lens = sorted(len(r.prompt) for r in sched.queue)
+    assert all(b >= l for b in batch_lens for l in left_lens)
+    # steady state: every subsequent batch also serves its then-oldest
+    while sched.queue:
+        oldest = sched.queue[0].rid
+        nxt = sched.next_batch()
+        assert any(r.rid == oldest for r in nxt)
+
+
 def test_microbatched_step_matches_single_batch():
     """Gradient accumulation must not change the training trajectory."""
     import jax
