@@ -267,6 +267,26 @@ def run(sizes=DEFAULT_SIZES):
     return rows
 
 
+CSV_HEADER = "name,us_per_call,derived"
+
+
+def write_csv(rows, path) -> None:
+    """Append rows to ``path``, writing the header line exactly once.
+
+    Successive runs append to one trajectory file, so the header is only
+    emitted when the file is new/empty — and any header lines that earlier
+    tooling did append mid-file are dropped on the way through.
+    """
+    import pathlib
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    existing = p.read_text() if p.exists() else ""
+    lines = [ln for ln in existing.splitlines() if ln and ln != CSV_HEADER]
+    out = [CSV_HEADER] + lines + \
+        [",".join(str(x) for x in row) for row in rows]
+    p.write_text("\n".join(out) + "\n")
+
+
 def main() -> None:
     import argparse
     import os
@@ -278,6 +298,11 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="simulate N host-platform devices for the "
                          "distributed rows (must be set before jax loads)")
+    ap.add_argument("--out", default="",
+                    help="also append rows to this CSV (header deduped)")
+    ap.add_argument("--json-out", default="",
+                    help="also emit the canonical BENCH_sort.json artifact "
+                         "(benchmarks/emit_bench.py) at the same sizes")
     args = ap.parse_args()
     if args.devices > 1:
         # only effective if jax has not initialised yet — that is why every
@@ -289,9 +314,16 @@ def main() -> None:
         sizes = tuple(int(s) for s in args.sizes.split(","))
     else:
         sizes = FULL_SIZES if args.full else DEFAULT_SIZES
-    print("name,us_per_call,derived")
-    for row in run(sizes):
+    rows = run(sizes)
+    print(CSV_HEADER)
+    for row in rows:
         print(",".join(str(x) for x in row))
+    if args.out:
+        write_csv(rows, args.out)
+    if args.json_out:
+        from benchmarks import emit_bench
+        path = emit_bench.write(emit_bench.collect(sizes), args.json_out)
+        print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

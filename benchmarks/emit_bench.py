@@ -1,0 +1,170 @@
+"""Emit BENCH_sort.json — the canonical perf-trajectory artifact.
+
+One JSON document per run, schema ``repro.bench.sort/v1``: a probe grid of
+(op, n) bench points, and for each point every candidate backend's measured
+warm ns next to its analytic ``cost_model.bytes_moved`` accounting (the
+software analogue of the paper's Table I/II temp-row cycle counts), plus
+the ``auto`` plan the cost-model planner actually picked — its backend,
+predicted ns, measured ns, and the predicted-vs-measured
+``cost_model_error`` ratio.
+
+The point of the artifact is the *trajectory*: successive runs (CI uploads
+one per commit) show whether ``auto`` keeps tracking the best measured
+backend as the planner, kernels, and calibration evolve.
+``scripts/bench_gate.py`` enforces the invariant at every point:
+``auto.ns <= factor * best.ns``.
+
+  PYTHONPATH=src python -m benchmarks.emit_bench --out benchmarks/BENCH_sort.json
+  PYTHONPATH=src python -m benchmarks.emit_bench --quick   # CI probe grid
+
+Schema (one point)::
+
+  {"name": "sort.n65536", "op": "sort", "n": 65536, "k": null,
+   "dtype": "float32",
+   "backends": {"xla": {"ns": ..., "bytes_moved": ...}, ...},
+   "auto":     {"backend": "xla", "ns": ..., "predicted_ns": ...,
+                "cost_model_error": ..., "plan": {...}},
+   "best":     {"backend": "xla", "ns": ...}}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+SCHEMA = "repro.bench.sort/v1"
+
+QUICK_SIZES = (1024, 4096)
+DEFAULT_SIZES = (4096, 65536)
+TOPK_K = 64
+
+
+def _finite(v):
+    """inf/nan -> None so the document stays strict JSON."""
+    if v is None or isinstance(v, str):
+        return v
+    v = float(v)
+    return v if v == v and abs(v) != float("inf") else None
+
+
+def _time_warm_ns(fn, x, reps: int) -> float:
+    """Mean warm ns/call of ``jit(fn)`` (first call compiles, untimed)."""
+    import jax
+    f = jax.jit(fn)
+    jax.block_until_ready(f(x))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(x))
+    return (time.perf_counter() - t0) / reps * 1e9
+
+
+def _sort_candidates():
+    import jax
+    names = ["xla", "merge"]
+    if jax.default_backend() == "tpu":
+        names += ["pallas", "radix"]   # interpret mode is ~300x off-TPU
+    return names
+
+
+def _plan_dict(plan):
+    return {"method": plan.method, "run_len": plan.run_len,
+            "run_method": plan.run_method,
+            "merge_backend": plan.merge_backend,
+            "costs": {m: _finite(c) for m, c in sorted(plan.costs.items())}}
+
+
+def _point(name, op, n, k, measured, auto_ns, plan):
+    best = min(measured, key=lambda m: measured[m]["ns"])
+    predicted = _finite(plan.costs.get(plan.method))
+    return {
+        "name": name, "op": op, "n": n, "k": k, "dtype": "float32",
+        "backends": measured,
+        "auto": {"backend": plan.method, "ns": auto_ns,
+                 "predicted_ns": predicted,
+                 "cost_model_error": (auto_ns / predicted
+                                      if predicted else None),
+                 "plan": _plan_dict(plan)},
+        "best": {"backend": best, "ns": measured[best]["ns"]},
+    }
+
+
+def collect(sizes=DEFAULT_SIZES, k: int = TOPK_K, reps: int = 3):
+    """Measure the probe grid -> list of bench points."""
+    import jax.numpy as jnp
+    from repro import sort as rsort
+    from repro.core import cost_model
+    from repro.engine import planner
+
+    rng = np.random.default_rng(0)
+    points = []
+    for n in sizes:
+        x = jnp.asarray(rng.standard_normal((1, n)), jnp.float32)
+
+        measured = {}
+        for name in _sort_candidates():
+            ns = _time_warm_ns(lambda v, m=name: rsort.sort(v, method=m),
+                               x, reps)
+            measured[name] = {"ns": ns,
+                              "bytes_moved": cost_model.bytes_moved(name, n)}
+        auto_ns = _time_warm_ns(lambda v: rsort.sort(v), x, reps)
+        plan = planner.choose_cached(n, 1, jnp.float32)
+        points.append(_point(f"sort.n{n}", "sort", n, None,
+                             measured, auto_ns, plan))
+
+        if n < k:
+            continue
+        measured = {}
+        for name in ("xla", "select"):
+            ns = _time_warm_ns(
+                lambda v, m=name: rsort.topk(v, k, method=m), x, reps)
+            measured[name] = {
+                "ns": ns, "bytes_moved": cost_model.bytes_moved(name, n, k=k)}
+        auto_ns = _time_warm_ns(lambda v: rsort.topk(v, k), x, reps)
+        plan = planner.choose_cached(n, 1, jnp.float32, k=k)
+        points.append(_point(f"topk.n{n}.k{k}", "topk", n, k,
+                             measured, auto_ns, plan))
+    return points
+
+
+def document(points) -> dict:
+    import jax
+    return {"schema": SCHEMA,
+            "backend": jax.default_backend(),
+            "points": points}
+
+
+def write(points, path) -> pathlib.Path:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(document(points), indent=2, allow_nan=False)
+                    + "\n")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/BENCH_sort.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="small CI probe grid (n <= 4096)")
+    ap.add_argument("--sizes", default="",
+                    help="comma-separated n values (overrides presets)")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    if args.sizes:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+    else:
+        sizes = QUICK_SIZES if args.quick else DEFAULT_SIZES
+    path = write(collect(sizes, reps=args.reps), args.out)
+    doc = json.loads(path.read_text())
+    for p in doc["points"]:
+        print(f"[emit_bench] {p['name']}: auto={p['auto']['backend']} "
+              f"{p['auto']['ns']/1e3:.1f}us  best={p['best']['backend']} "
+              f"{p['best']['ns']/1e3:.1f}us")
+    print(f"[emit_bench] wrote {path} ({len(doc['points'])} points)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Gate on BENCH_sort.json: ``auto`` must track the best measured backend.
+
+The invariant this enforces is the whole point of the cost-model planner:
+at every bench point, the latency of ``method="auto"`` stays within
+``--factor`` of the best measured candidate backend.  A regression here is
+a planner mispricing (the class of bug that had ``topk auto`` 90x off the
+native XLA path) — the gate turns the next one into a red build instead of
+a CSV archaeology project.
+
+  PYTHONPATH=src python scripts/bench_gate.py benchmarks/BENCH_sort.json
+  ... --factor 2.0       # override (env BENCH_GATE_FACTOR also works)
+  ... --warn-only        # report but always exit 0 (noisy CPU CI)
+
+Exit status: 0 when every point passes (or --warn-only), 1 on any
+violation, 2 on a malformed/missing artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+DEFAULT_FACTOR = 2.0
+SCHEMA = "repro.bench.sort/v1"
+
+
+def check(doc: dict, factor: float):
+    """-> (violations, checked) where each violation is a dict."""
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"unknown schema {doc.get('schema')!r} "
+                         f"(expected {SCHEMA!r})")
+    violations, checked = [], 0
+    for p in doc.get("points", []):
+        auto, best = p.get("auto", {}), p.get("best", {})
+        if not auto.get("ns") or not best.get("ns"):
+            continue
+        checked += 1
+        ratio = auto["ns"] / best["ns"]
+        if ratio > factor:
+            violations.append({
+                "name": p.get("name"), "ratio": ratio, "factor": factor,
+                "auto_backend": auto.get("backend"), "auto_ns": auto["ns"],
+                "best_backend": best.get("backend"), "best_ns": best["ns"]})
+    return violations, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", nargs="?",
+                    default="benchmarks/BENCH_sort.json")
+    ap.add_argument("--factor", type=float,
+                    default=float(os.environ.get("BENCH_GATE_FACTOR",
+                                                 DEFAULT_FACTOR)),
+                    help="max allowed auto.ns / best.ns ratio")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report violations but exit 0")
+    args = ap.parse_args(argv)
+
+    path = pathlib.Path(args.artifact)
+    try:
+        doc = json.loads(path.read_text())
+        violations, checked = check(doc, args.factor)
+    except (OSError, ValueError) as e:
+        print(f"[bench_gate] cannot check {path}: {e}", file=sys.stderr)
+        return 2
+
+    for v in violations:
+        print(f"[bench_gate] FAIL {v['name']}: auto({v['auto_backend']}) "
+              f"{v['auto_ns']/1e3:.1f}us is {v['ratio']:.2f}x best"
+              f"({v['best_backend']}) {v['best_ns']/1e3:.1f}us "
+              f"(allowed {v['factor']:.2f}x)")
+    print(f"[bench_gate] {checked - len(violations)}/{checked} points "
+          f"within {args.factor:.2f}x of best"
+          + (" [warn-only]" if args.warn_only and violations else ""))
+    if violations and not args.warn_only:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

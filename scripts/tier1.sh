@@ -21,5 +21,18 @@ if [[ -n "${TIER1_MULTIDEV:-}" ]]; then
     tests/test_distributed_sort.py tests/test_samplesort.py \
     tests/test_distributed_topk.py "$@"
 fi
+# TIER1_BENCH=1 appends the perf-trajectory leg after the suite: emit the
+# canonical BENCH_sort.json on the quick probe grid, then enforce the
+# auto-within-factor-of-best invariant (scripts/bench_gate.py).  Pass
+# TIER1_BENCH_ARGS for extra gate flags (e.g. "--warn-only" on noisy CI).
+if [[ -n "${TIER1_BENCH:-}" ]]; then
+  python -m pytest -x -q --durations=10 "$@"
+  echo "[tier1] bench leg: emitting benchmarks/BENCH_sort.json"
+  python -m benchmarks.emit_bench --quick --out benchmarks/BENCH_sort.json
+  # shellcheck disable=SC2086
+  python scripts/bench_gate.py benchmarks/BENCH_sort.json \
+    ${TIER1_BENCH_ARGS:-}
+  exit 0
+fi
 # --durations=10 surfaces the suite's hot spots (it runs ~9 min on CPU CI)
 exec python -m pytest -x -q --durations=10 "$@"

@@ -76,6 +76,20 @@ class XlaBackend(SortBackend):
     def topk(self, rows, k, *, plan=None, interpret=None):
         return jax.lax.top_k(rows, k)
 
+    def topk_cost_ns(self, n, k, batch, dtype, *, run_len, consts=None,
+                     interpreted=False):
+        """Off-TPU ``lax.top_k`` lowers to XLA:CPU's tuned O(n) native
+        selection — price it as one (the ROADMAP-flagged ~90x inversion
+        was exactly this candidate priced at the sort-prefix contract).
+        On TPU the lowering is sort-based, so the sort-prefix default
+        stays the honest price there."""
+        from repro.core import cost_model
+        if jax.default_backend() == "tpu":
+            return super().topk_cost_ns(n, k, batch, dtype, run_len=run_len,
+                                        consts=consts,
+                                        interpreted=interpreted)
+        return cost_model.xla_topk_cost_ns(n, k, batch, consts=consts)
+
 
 # ---------------------------------------------------------------------------
 # bitonic — the paper's network, word-parallel in pure jnp
@@ -229,19 +243,33 @@ class RadixBackend(SortBackend):
     def sort(self, rows, *, descending=False, plan=None, interpret=None):
         from repro.core import keycodec
         from repro.kernels import radix_sort as _rs
+        from repro.obs import trace as _obs
         self.check_dtype(rows.dtype)
-        enc = keycodec.encode(rows, descending=descending)
-        out = _rs.sort_blocks(enc, interpret=interpret)
-        return keycodec.decode(out, rows.dtype, descending=descending)
+        n = rows.shape[-1]
+        passes, tiles = _rs.pass_tile_counts(n, rows.dtype)
+        sp = _obs.trace("radix.sort", n=n, passes=passes, tiles=tiles)
+        with sp:
+            enc = keycodec.encode(rows, descending=descending)
+            out = _rs.sort_blocks(enc, interpret=interpret)
+            out = keycodec.decode(out, rows.dtype, descending=descending)
+            sp.fence(out)
+        return out
 
     def sort_kv(self, keys, values, *, descending=False, plan=None,
                 interpret=None):
         from repro.core import keycodec
         from repro.kernels import radix_sort as _rs
+        from repro.obs import trace as _obs
         self.check_dtype(keys.dtype)
-        enc = keycodec.encode(keys, descending=descending)
-        sk, sv = _rs.sort_kv_blocks(enc, values, interpret=interpret)
-        return keycodec.decode(sk, keys.dtype, descending=descending), sv
+        n = keys.shape[-1]
+        passes, tiles = _rs.pass_tile_counts(n, keys.dtype)
+        sp = _obs.trace("radix.sort_kv", n=n, passes=passes, tiles=tiles)
+        with sp:
+            enc = keycodec.encode(keys, descending=descending)
+            sk, sv = _rs.sort_kv_blocks(enc, values, interpret=interpret)
+            sk = keycodec.decode(sk, keys.dtype, descending=descending)
+            sp.fence((sk, sv))
+        return sk, sv
 
 
 # ---------------------------------------------------------------------------
@@ -265,8 +293,15 @@ class SelectBackend(SortBackend):
 
     def topk(self, rows, k, *, plan=None, interpret=None):
         from repro.kernels import radix_select as _sel
+        from repro.obs import trace as _obs
         self.check_dtype(rows.dtype)
-        return _sel.select_topk(rows, k, interpret=interpret)
+        n = rows.shape[-1]
+        passes, tiles = _sel.pass_tile_counts(n, rows.dtype)
+        sp = _obs.trace("select.topk", n=n, k=k, passes=passes, tiles=tiles)
+        with sp:
+            out = _sel.select_topk(rows, k, interpret=interpret)
+            sp.fence(out)
+        return out
 
 
 # ---------------------------------------------------------------------------

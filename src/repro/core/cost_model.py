@@ -133,6 +133,11 @@ class DeviceSortConstants:
     # refinements per pass unit), putting the modeled select/sort-prefix
     # crossover at n ~ 1-2k for f32/k=64 — where the bench measures it
     select: float = 15.0
+    # native lax.top_k on substrates where it lowers to a tuned O(n)
+    # selection (XLA:CPU): c * n.  Seeded from the measured 3.4ms at n=1M
+    # (results_engine_cpu.csv topk_xla rows); on TPU lax.top_k is
+    # sort-based and the xla backend keeps the sort-prefix price instead
+    xla_topk: float = 3.5
     pallas_interpret_penalty: float = 300.0   # CPU interpret-mode multiplier
     # mesh collectives (distributed dispatch): one collective round costs
     # alpha (launch/latency) + bytes-moved-per-device / bandwidth
@@ -200,6 +205,62 @@ def selection_cost_ns(n: int, k: int, key_bits: int = 32, batch: int = 1, *,
     passes = -(-key_bits // RADIX_DIGIT_BITS)
     tiled = -(-n // RADIX_TILE) * RADIX_TILE
     return c.select * batch * tiled * passes + c.xla * batch * k * _log2(k)
+
+
+def xla_topk_cost_ns(n: int, k: int, batch: int = 1, *,
+                     consts: DeviceSortConstants = None) -> float:
+    """Estimated ns for the native ``jax.lax.top_k`` lowering on substrates
+    where it is a tuned O(n) selection (XLA:CPU): one linear scan plus the
+    O(k log k) ordering of the survivors.
+
+    This is the price whose *absence* caused the ROADMAP-flagged ~90x
+    auto-dispatch inversion: with the xla candidate priced at the full
+    sort-prefix contract, ``auto`` preferred radix-select at n=1M/k=64
+    (313ms measured) over the native path (3.4ms).  The k-aware planner
+    now asks each backend for its top-k price
+    (``SortBackend.topk_cost_ns``) and the xla backend answers with this
+    model off-TPU.
+    """
+    c = consts or DeviceSortConstants()
+    return c.xla_topk * batch * n + c.xla * batch * k * _log2(k)
+
+
+def bytes_moved(method: str, n: int, itemsize: int = 4, *,
+                key_bits: int = 32, k: int = None,
+                run_len: int = 2048) -> int:
+    """Analytic off-chip bytes one backend moves sorting ``n`` elements —
+    the paper's data-movement accounting (Tables I/II count temp-row COPY
+    cycles; this counts the software analogue: element reads+writes that
+    leave the compute unit's resident tile).
+
+    Comparison sorts move every element once per level; the radix path
+    once per digit pass; the VMEM-resident network loads and stores the
+    tile exactly once (the in-memory argument); selection's counting
+    passes are read-only.  Used by ``benchmarks/emit_bench.py`` to put a
+    ``bytes_moved`` column next to every measured ns in BENCH_sort.json.
+    """
+    if k is not None:
+        passes = -(-key_bits // RADIX_DIGIT_BITS)
+        if method == "select":
+            return n * itemsize * passes + 2 * k * itemsize
+        if method == "xla":            # native scan: one read, k writes
+            return n * itemsize + 2 * k * itemsize
+        # sort-prefix on any sort backend: full sort + one k-slice read
+        return bytes_moved(method, n, itemsize, key_bits=key_bits,
+                           run_len=run_len) + k * itemsize
+    lvl = _log2(n)
+    if method in ("xla", "merge"):
+        # merge family: each level reads and writes every element; the
+        # engine pays log2(tiles) levels + run generation, ~log2(n) total
+        return int(2 * n * itemsize * lvl)
+    if method == "bitonic":
+        return int(2 * n * itemsize * lvl * lvl)
+    if method == "pallas":
+        return 2 * n * itemsize        # VMEM-resident: in once, out once
+    if method == "radix":
+        passes = -(-key_bits // RADIX_DIGIT_BITS)
+        return 2 * n * itemsize * passes
+    raise ValueError(f"no bytes-moved model for method {method!r}")
 
 
 def collective_cost_ns(n_dev: int, m: int, itemsize: int,

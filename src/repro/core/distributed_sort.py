@@ -137,7 +137,18 @@ def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
             "oddeven strategy needs an evenly divisible, ascending, "
             "value-only sort (length % n_dev == 0, descending=False, "
             "values=None); use strategy='sample' or 'auto'")
-    return _oddeven_fn(mesh, axis_name, local_method, interpret)(x)
+    from repro.obs import metrics as _metrics, trace as _obs
+    coll_bytes = 0
+    if _obs.enabled():
+        coll_bytes = n_dev * collective_bytes_per_device(
+            n_dev, -(-n // n_dev), jnp.dtype(x.dtype).itemsize)
+        _metrics.counter("distsort.oddeven_bytes").inc(coll_bytes)
+        _metrics.counter("distsort.oddeven_sorts").inc()
+    sp = _obs.trace("distsort.oddeven", n=n, n_dev=n_dev, bytes=coll_bytes)
+    with sp:
+        out = _oddeven_fn(mesh, axis_name, local_method, interpret)(x)
+        sp.fence(out)
+    return out
 
 
 @functools.lru_cache(maxsize=64)

@@ -128,6 +128,23 @@ class SortBackend:
         except ValueError:
             return float("inf")
 
+    def topk_cost_ns(self, n: int, k: int, batch: int, dtype, *, run_len: int,
+                     consts=None, interpreted: bool = False) -> float:
+        """Estimated ns for a top-k of (batch, n).  Default contracts:
+        selection engines (``capabilities.selection``) price the
+        O(n·passes) partial-sort model; sort engines price the sort-prefix
+        path (full sort, then slice k).  Backends with a genuinely
+        different top-k lowering override this — the xla backend prices
+        native ``lax.top_k`` off-TPU, which is how the planner's k-aware
+        ``auto`` can never again lose to an unpriced native path."""
+        from repro.core import cost_model, keycodec
+        if self.capabilities.selection:
+            kb = keycodec.key_bits(dtype) if keycodec.supports(dtype) else 32
+            return cost_model.selection_cost_ns(n, k, kb, batch,
+                                                consts=consts)
+        return self.cost_ns(n, batch, dtype, run_len=run_len, consts=consts,
+                            interpreted=interpreted)
+
     # -- execution (rows form: (rows, n), last axis) ------------------------
     def sort(self, rows: jnp.ndarray, *, descending: bool = False,
              plan=None, interpret: Optional[bool] = None) -> jnp.ndarray:

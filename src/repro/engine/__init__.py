@@ -36,6 +36,33 @@ from repro.engine.segmented import (  # noqa: F401
 
 # the same axis-flattening helpers the kernel entry points use
 from repro.kernels.ops import _from_rows, _to_rows
+from repro.obs import trace as _obs
+
+
+def _obs_finish(sp, op: str, plan: planner.Plan, n: int, batch: int,
+                k: Optional[int] = None) -> None:
+    """Pair a fenced span with its plan: record the predicted-vs-measured
+    ``cost_observation`` event and the ``cost_model_error`` ratio metric.
+
+    The 313ms-vs-3.4ms top-k inversion class of bug surfaces here as a
+    two-orders-of-magnitude error ratio instead of hiding in a CSV.  No-op
+    when observability is off (``sp`` is the no-op span) or when the call
+    ran under an outer jit (no fence -> no honest device time).  The first
+    call at a new shape includes compile time — cold and warm observations
+    both land in the histogram, like the bench's cold/warm split.
+    """
+    if sp.device_ms is None:
+        return
+    predicted = plan.costs.get(plan.method)
+    if not predicted or predicted != predicted or predicted == float("inf"):
+        return
+    measured_ns = sp.device_ms * 1e6
+    error = measured_ns / predicted
+    _obs.record_event("cost_observation", op=op, n=n, batch=batch, k=k,
+                      method=plan.method, predicted_ns=predicted,
+                      measured_ns=measured_ns, error=error)
+    from repro.obs import metrics as _metrics
+    _metrics.histogram("planner.cost_model_error").observe(error)
 
 
 # ---------------------------------------------------------------------------
@@ -84,12 +111,16 @@ def sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
     batch, n = x2.shape
     plan = planner.choose_cached(n, batch, x.dtype, requested=method,
                                  run_len=run_len)
-    if plan.method == "merge":
-        out = merge_sort_rows(x2, descending=descending, plan=plan,
-                              interpret=interpret)
-    else:
-        out = sortspec.get_backend(plan.method).sort(
-            x2, descending=descending, plan=plan, interpret=interpret)
+    sp = _obs.trace("engine.sort", n=n, batch=batch, method=plan.method)
+    with sp:
+        if plan.method == "merge":
+            out = merge_sort_rows(x2, descending=descending, plan=plan,
+                                  interpret=interpret)
+        else:
+            out = sortspec.get_backend(plan.method).sort(
+                x2, descending=descending, plan=plan, interpret=interpret)
+        sp.fence(out)
+    _obs_finish(sp, "sort", plan, n, batch)
     return _from_rows(out, lead, ax)
 
 
@@ -109,14 +140,20 @@ def sort_kv(keys: jnp.ndarray, values: jnp.ndarray, *, axis: int = -1,
     batch, n = k2.shape
     plan = planner.choose_cached(n, batch, keys.dtype, requested=method,
                                  run_len=run_len)
-    if plan.method != "merge":
-        be = sortspec.get_backend(plan.method)
-        if not stable or be.capabilities.stable:
-            sk, sv = be.sort_kv(k2, v2, descending=descending, plan=plan,
-                                interpret=interpret)
-            return _from_rows(sk, lead, ax), _from_rows(sv, lead, ax)
-    sk, sv = merge_sort_rows_kv(k2, v2, descending=descending, plan=plan,
-                                stable=stable, interpret=interpret)
+    sp = _obs.trace("engine.sort_kv", n=n, batch=batch, method=plan.method)
+    with sp:
+        sk = sv = None
+        if plan.method != "merge":
+            be = sortspec.get_backend(plan.method)
+            if not stable or be.capabilities.stable:
+                sk, sv = be.sort_kv(k2, v2, descending=descending, plan=plan,
+                                    interpret=interpret)
+        if sk is None:
+            sk, sv = merge_sort_rows_kv(k2, v2, descending=descending,
+                                        plan=plan, stable=stable,
+                                        interpret=interpret)
+        sp.fence((sk, sv))
+    _obs_finish(sp, "sort_kv", plan, n, batch)
     return _from_rows(sk, lead, ax), _from_rows(sv, lead, ax)
 
 
@@ -134,15 +171,22 @@ def argsort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
     batch, n = x2.shape
     plan = planner.choose_cached(n, batch, x.dtype, requested=method,
                                  run_len=run_len)
-    if plan.method != "merge":
-        be = sortspec.get_backend(plan.method)
-        if not stable or be.capabilities.stable:
-            order = be.argsort(x2, descending=descending, plan=plan,
-                               interpret=interpret)
-            return _from_rows(order, lead, ax)
-    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], x2.shape)
-    _, order = merge_sort_rows_kv(x2, idx, descending=descending, plan=plan,
-                                  stable=stable, interpret=interpret)
+    sp = _obs.trace("engine.argsort", n=n, batch=batch, method=plan.method)
+    with sp:
+        order = None
+        if plan.method != "merge":
+            be = sortspec.get_backend(plan.method)
+            if not stable or be.capabilities.stable:
+                order = be.argsort(x2, descending=descending, plan=plan,
+                                   interpret=interpret)
+        if order is None:
+            idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
+                                   x2.shape)
+            _, order = merge_sort_rows_kv(x2, idx, descending=descending,
+                                          plan=plan, stable=stable,
+                                          interpret=interpret)
+        sp.fence(order)
+    _obs_finish(sp, "argsort", plan, n, batch)
     return _from_rows(order, lead, ax)
 
 
@@ -165,17 +209,26 @@ def topk(x: jnp.ndarray, k: int, *, method: str = "auto",
             f"topk k must satisfy 1 <= k <= n (n={n}); got k={k}")
     plan = planner.choose_cached(n, batch, x.dtype, requested=method,
                                  run_len=run_len, k=k)
-    if plan.method != "merge":
-        v, i = sortspec.get_backend(plan.method).topk(
-            x2, k, plan=plan, interpret=interpret)
-        return v.reshape(*lead, k), i.reshape(*lead, k)
-    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], x2.shape)
-    rk, rv = runs.generate_runs_kv(x2, idx, plan.run_len,
-                                   method=plan.run_method, descending=True,
-                                   interpret=interpret)
-    # candidate prefixes: only the first k of each run can reach the top k
-    kk = runs.next_pow2(min(k, rk.shape[-1]))
-    ck, cv = rk[..., :kk], rv[..., :kk]
-    mk, mv = merge_runs(ck, cv, descending=True, backend=plan.merge_backend,
-                        interpret=interpret)
-    return mk[:, :k].reshape(*lead, k), mv[:, :k].reshape(*lead, k)
+    sp = _obs.trace("engine.topk", n=n, batch=batch, k=k, method=plan.method)
+    with sp:
+        if plan.method != "merge":
+            v, i = sortspec.get_backend(plan.method).topk(
+                x2, k, plan=plan, interpret=interpret)
+        else:
+            idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
+                                   x2.shape)
+            rk, rv = runs.generate_runs_kv(x2, idx, plan.run_len,
+                                           method=plan.run_method,
+                                           descending=True,
+                                           interpret=interpret)
+            # candidate prefixes: only the first k of each run can reach
+            # the top k
+            kk = runs.next_pow2(min(k, rk.shape[-1]))
+            ck, cv = rk[..., :kk], rv[..., :kk]
+            mk, mv = merge_runs(ck, cv, descending=True,
+                                backend=plan.merge_backend,
+                                interpret=interpret)
+            v, i = mk[:, :k], mv[:, :k]
+        sp.fence((v, i))
+    _obs_finish(sp, "topk", plan, n, batch, k)
+    return v.reshape(*lead, k), i.reshape(*lead, k)

@@ -73,30 +73,28 @@ def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
            k: Optional[int] = None) -> Plan:
     """Resolve ``requested`` ("auto" or a concrete method) into a Plan.
 
-    With ``k`` set the workload is a top-k: selection-capable backends
-    (``capabilities.selection``) are priced with the O(n·passes)
-    ``cost_model.selection_cost_ns`` while sort backends keep their full
-    sort cost (the sort-prefix model) — so auto lands on radix-select
-    once ``k ≪ n`` and falls back to a sort when k approaches n or the
-    row is tiny.
+    With ``k`` set the workload is a top-k and every candidate is priced
+    through ``SortBackend.topk_cost_ns``: selection backends answer with
+    the O(n·passes) ``cost_model.selection_cost_ns``, sort backends with
+    the sort-prefix contract (their full sort cost), and the xla backend
+    with the *native* ``lax.top_k`` price off-TPU — so auto lands on
+    radix-select once ``k ≪ n`` on TPU, on the tuned native selection on
+    hosts (where it beats everything — the ``topk_xla`` rows in
+    results_engine_cpu.csv), and on a plain sort when k approaches n.
 
-    Deliberate modeling choice: the xla backend's top-k is priced at the
-    sort-prefix contract even though ``jax.lax.top_k`` lowers to a tuned
-    native selection on XLA:CPU (where it beats everything — see the
-    ``topk_xla`` context rows in results_engine_cpu.csv).  On the TPU
-    substrate this repo targets, lax.top_k is sort-based and the
-    sort-prefix price is the honest one; CPU callers who want the native
-    path pin ``method="xla"`` (every consumer config exposes the knob).
+    Every resolved plan is recorded as a structured ``plan_decision``
+    event when observability is on (repro.obs) — candidate cost table,
+    chosen backend, predicted ns — so dispatch is auditable after the
+    fact; ``choose_cached`` hits skip both re-pricing and the event.
     """
-    from repro.core import keycodec
     rl = run_len or (_runs.DEFAULT_RUN_LEN if on_tpu() else CPU_RUN_LEN)
     consts = constants()
     interp = not on_tpu()
     candidates = _auto_candidates()
-    kb = keycodec.key_bits(dtype) if keycodec.supports(dtype) else 32
     costs = {
-        name: (cost_model.selection_cost_ns(n, k, kb, batch, consts=consts)
-               if k is not None and be.capabilities.selection
+        name: (be.topk_cost_ns(n, k, batch, dtype, run_len=rl,
+                               consts=consts, interpreted=interp)
+               if k is not None
                else be.cost_ns(n, batch, dtype, run_len=rl, consts=consts,
                                interpreted=interp))
         for name, be in candidates.items()
@@ -115,8 +113,28 @@ def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
     run_method = "pallas" if (on_tpu() and _eligible("pallas", rl, dtype, rl)) \
         else "xla"
     merge_backend = "pallas" if on_tpu() else "xla"
-    return Plan(method=method, run_len=rl, run_method=run_method,
+    plan = Plan(method=method, run_len=rl, run_method=run_method,
                 merge_backend=merge_backend, costs=costs)
+    _record_decision(plan, n=n, batch=batch, dtype=dtype, requested=requested,
+                     k=k)
+    return plan
+
+
+def _record_decision(plan: Plan, *, n: int, batch: int, dtype,
+                     requested: str, k: Optional[int]) -> None:
+    """One structured event per resolved plan (cache misses only — hits
+    never reach ``choose``).  No-op unless observability is enabled."""
+    from repro.obs import trace as _obs
+    if not _obs.enabled():
+        return
+    _obs.record_event(
+        "plan_decision", n=n, batch=batch, dtype=jnp.dtype(dtype).name,
+        requested=requested, k=k, method=plan.method,
+        predicted_ns=plan.costs.get(plan.method),
+        costs={m: c for m, c in plan.costs.items()},
+        run_len=plan.run_len, backend=jax.default_backend())
+    from repro.obs import metrics as _m
+    _m.counter("planner.decisions").inc()
 
 
 def choose_method(n: int, batch: int = 1, dtype=jnp.float32) -> str:
@@ -200,6 +218,11 @@ def choose_cached(n: int, batch: int = 1, dtype=jnp.float32, *,
         plan = choose(n, batch, dtype, requested=requested, run_len=run_len,
                       k=k)
         _PLAN_CACHE[key] = plan
+    else:
+        from repro.obs import trace as _obs
+        if _obs.enabled():
+            from repro.obs import metrics as _m
+            _m.counter("planner.plan_cache_hits").inc()
     return plan
 
 
@@ -273,6 +296,14 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
         * sel_k * cost_model._log2(sel_k)
     sel_c = max(sel_ns - sel_kterm, 0.1 * sel_ns) / (elems * sel_passes)
 
+    # native top-k probe (same shapes): off-TPU this is XLA:CPU's tuned
+    # selection and the measured constant keeps the k-aware plan honest;
+    # on TPU the xla backend prices top-k at sort-prefix, so the probe is
+    # only bookkeeping there (same 10% floor logic as the select probe)
+    xtk_f = jax.jit(lambda v: be("xla").topk(v, sel_k)[0])
+    xtk_ns = _time_ns(lambda: xtk_f(x).block_until_ready(), reps)
+    xtk_c = max(xtk_ns - sel_kterm, 0.1 * xtk_ns) / elems
+
     defaults = cost_model.DeviceSortConstants()
     pal_c, rad_c = defaults.pallas, defaults.radix
     if include_pallas:
@@ -294,6 +325,7 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
         pallas=pal_c,
         radix=rad_c,
         select=sel_c,
+        xla_topk=xtk_c,
         merge_run=xla_ns / (elems * lg),
         merge_level=mrg_ns / elems,
     )

@@ -57,6 +57,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import keycodec
 from repro.engine.merge import merge_runs
+from repro.obs import metrics, trace as _obs
 
 try:  # jax >= 0.5 exports shard_map at the top level
     _shard_map = jax.shard_map
@@ -370,10 +371,14 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
 
     p1 = _phase1(mesh, axis_name, n, kv, padded, local_method, s,
                  use_histogram, interpret)
-    if kv:
-        ks, vs, starts, vcnt = p1(enc, values)
-    else:
-        ks, starts, vcnt = p1(enc)
+    sp1 = _obs.trace("samplesort.phase1", n=n, n_dev=n_dev, kv=kv,
+                     samples_per_shard=s)
+    with sp1:
+        if kv:
+            ks, vs, starts, vcnt = p1(enc, values)
+        else:
+            ks, starts, vcnt = p1(enc)
+        sp1.fence(vcnt)
 
     # the one host sync: the realized bucket maximum sets the static
     # exchange capacity, so buffers and merge work scale with what the
@@ -416,15 +421,40 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
         else:
             merge_backend = "xla"
 
+    itemsize = jnp.dtype(enc.dtype).itemsize + \
+        (jnp.dtype(values.dtype).itemsize if kv else 0)
+    if _obs.enabled() and max_bucket is not None:
+        # bucket-skew accounting: vcnt is the full (D*D,) per-(source,
+        # destination) genuine-key count table, already synced to the host
+        # for the capacity measurement — skew 1.0 means perfectly regular
+        # splitters, capacity (and the exchange bill) scales with it
+        counts = np.asarray(vcnt, dtype=np.float64)
+        mean_fill = float(counts.mean()) if counts.size else 0.0
+        skew = float(max_bucket) / mean_fill if mean_fill else 1.0
+        metrics.gauge("samplesort.bucket_skew").set(skew)
+        metrics.histogram("samplesort.bucket_fill_max").observe(max_bucket)
+        metrics.counter("samplesort.alltoall_bytes").inc(
+            n_dev * alltoall_bytes_per_device(n_dev, m, itemsize, cap))
+        metrics.counter("samplesort.sorts").inc()
+
     p2 = _phase2(mesh, axis_name, n, kv,
                  cap, jnp.dtype(enc.dtype).name,
                  jnp.dtype(values.dtype).name if kv else None,
                  merge_backend, interpret)
+    sp2 = _obs.trace("samplesort.phase2", n=n, n_dev=n_dev, capacity=cap,
+                     merge_backend=merge_backend,
+                     bytes=n_dev * alltoall_bytes_per_device(
+                         n_dev, m, itemsize, cap) if _obs.enabled() else 0)
+    with sp2:
+        if kv:
+            out_k, out_v = p2(ks, vs, starts, vcnt)
+            sp2.fence((out_k, out_v))
+        else:
+            out = p2(ks, starts, vcnt)
+            sp2.fence(out)
     if kv:
-        out_k, out_v = p2(ks, vs, starts, vcnt)
         keys = keycodec.decode(out_k[:n], x.dtype, descending=descending)
         return keys, out_v[:n]
-    out = p2(ks, starts, vcnt)
     return keycodec.decode(out[:n], x.dtype, descending=descending)
 
 
@@ -516,7 +546,16 @@ def sample_topk(x: jnp.ndarray, k: int, mesh: Mesh,
         enc = jnp.pad(enc, (0, n_dev * m - n), constant_values=maxkey)
     prog = _topk_prog(mesh, axis_name, n, k,
                       jnp.dtype(enc.dtype).name, use_kernel, interpret)
-    ev, ei = prog(enc)
+    cand_bytes = 0
+    if _obs.enabled():
+        cand_bytes = n_dev * topk_candidate_bytes_per_device(
+            n_dev, k, m, jnp.dtype(enc.dtype).itemsize)
+        metrics.counter("samplesort.topk_candidate_bytes").inc(cand_bytes)
+    sp = _obs.trace("samplesort.topk", n=n, k=k, n_dev=n_dev,
+                    bytes=cand_bytes)
+    with sp:
+        ev, ei = prog(enc)
+        sp.fence((ev, ei))
     return keycodec.decode(ev, x.dtype, descending=True), ei
 
 

@@ -71,6 +71,22 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def pass_tile_counts(n: int, dtype, use_kernel: Optional[bool] = None
+                     ) -> Tuple[int, int]:
+    """(refinement passes, histogram tiles per pass) of the k-th-key
+    search at this shape — analytic, from static shapes only.  The
+    digit-serial kernel path runs ceil(bits/DIGIT_BITS) passes over
+    ceil(n/tile) VMEM tiles; the bit-serial host path runs ``bits``
+    masked zero-counts with no tiling (tiles = 0)."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    bits = keycodec.key_bits(dtype)
+    if not use_kernel:
+        return bits, 0
+    tile = min(DEFAULT_TILE, max(8, n))
+    return -(-bits // DIGIT_BITS), -(-n // tile)
+
+
 # ---------------------------------------------------------------------------
 # per-tile histogram kernel (the radix_sort._digit_stats counting half)
 # ---------------------------------------------------------------------------

@@ -49,6 +49,18 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def pass_tile_counts(n: int, dtype, tile: int = DEFAULT_TILE
+                     ) -> Tuple[int, int]:
+    """(digit passes, VMEM tiles per row) ``sort_blocks`` runs at this
+    shape — analytic, from static shapes only, so observability spans and
+    cost-model cross-checks can label a jitted kernel call without
+    reaching inside the trace."""
+    from repro.core import keycodec
+    bits = keycodec.key_bits(dtype)
+    tile = min(tile, max(8, n))
+    return -(-bits // DIGIT_BITS), -(-n // tile)
+
+
 # ---------------------------------------------------------------------------
 # kernel bodies
 # ---------------------------------------------------------------------------

@@ -3,30 +3,40 @@ from __future__ import annotations
 
 import json
 import pathlib
+from typing import Optional, Union
 
+# default location only — every entry point takes an explicit results dir
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
+_Path = Union[str, pathlib.Path]
 
-def rows(mesh: str = None):
+
+def rows(mesh: Optional[str] = None, results_dir: Optional[_Path] = None):
+    """Parsed result records, optionally filtered to one mesh shape.
+
+    ``mesh`` keeps only records whose ``"mesh"`` field matches, plus
+    skipped records (they carry no mesh — a skip is mesh-independent).
+    ``results_dir`` overrides the default ``results/dryrun`` location.
+    """
+    base = pathlib.Path(results_dir) if results_dir is not None else RESULTS
     out = []
-    for p in sorted(RESULTS.glob("*.json")):
+    for p in sorted(base.glob("*.json")):
         if any(p.stem.endswith(t) for t in ("_flash", "_opt", "_exp")):
             continue
         r = json.loads(p.read_text())
-        if mesh and r.get("mesh") != mesh:
+        if mesh and not r.get("skipped") and r.get("mesh") != mesh:
             continue
         out.append(r)
     return out
 
 
-def markdown(mesh: str = "16x16") -> str:
+def markdown(mesh: str = "16x16",
+             results_dir: Optional[_Path] = None) -> str:
     hdr = ("| arch | shape | status | temp GB/dev | args GB/dev | "
            "HLO flops/dev | coll bytes/dev | compile s |\n"
            "|---|---|---|---|---|---|---|---|\n")
     lines = [hdr]
-    for r in rows():
-        if r.get("mesh", mesh) != mesh and not r.get("skipped"):
-            continue
+    for r in rows(mesh, results_dir=results_dir):
         if r.get("skipped"):
             if mesh == "16x16":   # print skips once
                 lines.append(f"| {r['arch']} | {r['shape']} | SKIP "
@@ -48,9 +58,10 @@ def markdown(mesh: str = "16x16") -> str:
     return "".join(lines)
 
 
-def status_counts():
+def status_counts(mesh: Optional[str] = None,
+                  results_dir: Optional[_Path] = None):
     ok = fail = skip = 0
-    for r in rows():
+    for r in rows(mesh, results_dir=results_dir):
         if r.get("skipped"):
             skip += 1
         elif r.get("ok"):

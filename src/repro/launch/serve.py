@@ -23,6 +23,8 @@ import numpy as np
 
 from repro import sort as sorting
 from repro.configs.base import get_config, get_smoke_config
+from repro.obs import metrics as _metrics, report as _obs_report, \
+    trace as _obs
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import dp_axes_of, make_host_mesh
 from repro.models.model_zoo import build
@@ -35,6 +37,7 @@ class Request:
     prompt: np.ndarray          # (len,) int32
     max_new: int = 32
     out: Optional[np.ndarray] = None
+    submit_t: float = 0.0       # monotonic clock at submit()
 
 
 class LengthSortedScheduler:
@@ -73,6 +76,7 @@ class LengthSortedScheduler:
         self.queue: List[Request] = []
 
     def submit(self, req: Request) -> None:
+        req.submit_t = time.monotonic()
         self.queue.append(req)
 
     def _order(self, lens: jnp.ndarray) -> np.ndarray:
@@ -163,6 +167,14 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 16,
             break
         stats["batches"] += 1
         stats["padding_waste"].append(sched.padding_waste(batch))
+        if _obs.enabled():
+            now = time.monotonic()
+            for r in batch:
+                _metrics.histogram("serve.queue_wait_ms").observe(
+                    (now - r.submit_t) * 1e3)
+            _metrics.histogram("serve.padding_waste").observe(
+                stats["padding_waste"][-1])
+            _metrics.counter("serve.requests").inc(len(batch))
         plen = max(len(r.prompt) for r in batch)
         toks = np.zeros((len(batch), plen), np.int32)
         for i, r in enumerate(batch):   # left-pad to common length
@@ -184,13 +196,21 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 16,
         stats["decode_tps"].append(
             (decode_steps - 1) * len(batch) / max(dt, 1e-9))
         gen = np.concatenate([np.array(o) for o in outs], axis=1)
+        fin = time.monotonic()
         for i, r in enumerate(batch):
             r.out = gen[i]
             done.append(r)
+            if _obs.enabled():
+                _metrics.histogram("serve.e2e_ms").observe(
+                    (fin - r.submit_t) * 1e3)
+        if _obs.enabled():
+            _metrics.gauge("serve.decode_tps").set(stats["decode_tps"][-1])
     waste = float(np.mean(stats["padding_waste"]))
     print(f"[serve] {len(done)} requests in {stats['batches']} batches; "
           f"mean padding waste {waste:.3f}; "
           f"decode {np.mean(stats['decode_tps']):.1f} tok/s")
+    if _obs.enabled():
+        print(_obs_report.slo_report())
     return done, stats
 
 

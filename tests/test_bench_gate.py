@@ -1,0 +1,111 @@
+"""Perf-trajectory pipeline: emit_bench schema + bench_gate enforcement.
+
+The acceptance path for the whole bench leg: a deliberately mispriced plan
+(the 90x top-k inversion class, reconstructed) must produce a BENCH point
+whose ``auto`` exceeds the gate factor, and ``scripts/bench_gate.py`` must
+turn that into a non-zero exit.  No timing runs here — points are built
+through the emitter's own schema helpers with injected measurements, so
+the test is deterministic on any CI box.
+"""
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))  # benchmarks/ is a plain dir, not a package
+
+from benchmarks import emit_bench  # noqa: E402
+
+
+def _load_bench_gate():
+    spec = importlib.util.spec_from_file_location(
+        "bench_gate", REPO / "scripts" / "bench_gate.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bench_gate = _load_bench_gate()
+
+
+class _FakePlan:
+    """A planner Plan double carrying a cost table the gate never reads —
+    the gate judges measurements, not predictions."""
+
+    def __init__(self, method, costs):
+        self.method = method
+        self.run_len = 2048
+        self.run_method = "xla"
+        self.merge_backend = "xla"
+        self.costs = costs
+
+
+def _mispriced_point():
+    """The reconstructed inversion: the model prices select at 1/10 of
+    xla, but the measurement says auto(select) is 90x the best backend."""
+    plan = _FakePlan("select", {"select": 1_000.0, "xla": 10_000.0})
+    measured = {"xla": {"ns": 3.4e6, "bytes_moved": 1 << 22},
+                "select": {"ns": 313e6, "bytes_moved": 1 << 24}}
+    return emit_bench._point("topk.n1048576.k64", "topk", 1 << 20, 64,
+                             measured, 313e6, plan)
+
+
+def _healthy_point():
+    plan = _FakePlan("xla", {"xla": 3.0e6, "select": 60e6})
+    measured = {"xla": {"ns": 3.4e6, "bytes_moved": 1 << 22},
+                "select": {"ns": 313e6, "bytes_moved": 1 << 24}}
+    return emit_bench._point("topk.n1048576.k64", "topk", 1 << 20, 64,
+                             measured, 3.5e6, plan)
+
+
+def test_gate_fails_on_mispriced_plan(tmp_path):
+    doc = emit_bench.document([_mispriced_point()])
+    path = tmp_path / "BENCH_sort.json"
+    path.write_text(json.dumps(doc))
+    violations, checked = bench_gate.check(doc, factor=2.0)
+    assert checked == 1 and len(violations) == 1
+    v = violations[0]
+    assert v["auto_backend"] == "select" and v["best_backend"] == "xla"
+    assert v["ratio"] == pytest.approx(313e6 / 3.4e6)
+    assert bench_gate.main([str(path)]) == 1
+    # warn-only reports but never reddens the build
+    assert bench_gate.main([str(path), "--warn-only"]) == 0
+
+
+def test_gate_passes_healthy_artifact(tmp_path):
+    doc = emit_bench.document([_healthy_point(), _mispriced_point()])
+    path = tmp_path / "BENCH_sort.json"
+    path.write_text(json.dumps(doc))
+    # a generous factor admits the mispriced point too
+    assert bench_gate.main([str(path), "--factor", "100"]) == 0
+    assert bench_gate.main([str(path), "--factor", "1.5"]) == 1
+
+
+def test_gate_rejects_malformed_artifacts(tmp_path):
+    missing = tmp_path / "nope.json"
+    assert bench_gate.main([str(missing)]) == 2
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": "something/else", "points": []}))
+    assert bench_gate.main([str(bad)]) == 2
+
+
+def test_point_schema_carries_plan_and_error():
+    p = _mispriced_point()
+    assert p["auto"]["backend"] == "select"
+    assert p["auto"]["predicted_ns"] == 1_000.0
+    assert p["auto"]["cost_model_error"] == pytest.approx(313e6 / 1_000.0)
+    assert p["auto"]["plan"]["costs"]["xla"] == 10_000.0
+    assert p["best"] == {"backend": "xla", "ns": 3.4e6}
+    assert p["backends"]["select"]["bytes_moved"] == 1 << 24
+    # the document is strict JSON (inf costs become null, never Infinity)
+    json.loads(json.dumps(emit_bench.document([p]), allow_nan=False))
+
+
+def test_write_and_reload(tmp_path):
+    path = emit_bench.write([_healthy_point()], tmp_path / "b" / "out.json")
+    doc = json.loads(path.read_text())
+    assert doc["schema"] == emit_bench.SCHEMA
+    assert len(doc["points"]) == 1

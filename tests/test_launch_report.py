@@ -1,0 +1,62 @@
+"""launch/report.py: explicit results dir + honest mesh filtering.
+
+The module used to hard-code its results directory from ``__file__`` and
+``markdown()`` ignored its ``mesh`` argument on the way into ``rows()`` —
+every mesh rendered the same table.  Both entry points now take an
+explicit ``results_dir`` and the mesh filter actually filters.
+"""
+import json
+
+import pytest
+
+from repro.launch import report
+
+
+@pytest.fixture
+def results_dir(tmp_path):
+    recs = [
+        {"arch": "gemma-2b", "shape": "decode", "mesh": "16x16", "ok": True,
+         "memory": {"temp_bytes": 2.0e9, "argument_bytes": 1.0e9},
+         "hlo_analysis": {"flops": 1e12, "collective_total_bytes": 3e8},
+         "compile_s": 12},
+        {"arch": "gemma-2b", "shape": "decode", "mesh": "8x8", "ok": False},
+        {"arch": "moe-8x1b", "shape": "prefill", "skipped": True,
+         "reason": "host RAM exceeded while building the dry-run params"},
+    ]
+    for i, r in enumerate(recs):
+        (tmp_path / f"r{i}.json").write_text(json.dumps(r))
+    # suffix-filtered variants must never show up
+    (tmp_path / "r9_flash.json").write_text(json.dumps(recs[0]))
+    return tmp_path
+
+
+def test_rows_filters_by_mesh(results_dir):
+    all_rows = report.rows(results_dir=results_dir)
+    assert len(all_rows) == 3                        # _flash variant dropped
+    r16 = report.rows("16x16", results_dir=results_dir)
+    meshes = {r.get("mesh") for r in r16 if not r.get("skipped")}
+    assert meshes == {"16x16"}
+    # skips carry no mesh and survive every filter
+    assert any(r.get("skipped") for r in r16)
+    r8 = report.rows("8x8", results_dir=results_dir)
+    assert {r.get("mesh") for r in r8 if not r.get("skipped")} == {"8x8"}
+
+
+def test_markdown_respects_mesh(results_dir):
+    md16 = report.markdown("16x16", results_dir=results_dir)
+    assert "| gemma-2b | decode | ok |" in md16
+    assert "**FAIL**" not in md16                    # the 8x8 failure
+    assert "SKIP" in md16                            # skips print once
+    md8 = report.markdown("8x8", results_dir=results_dir)
+    assert "**FAIL**" in md8
+    assert "| ok |" not in md8
+    assert "SKIP" not in md8
+
+
+def test_status_counts(results_dir):
+    assert report.status_counts(results_dir=results_dir) == (1, 1, 1)
+    assert report.status_counts("8x8", results_dir=results_dir) == (0, 1, 1)
+
+
+def test_default_results_dir_unchanged():
+    assert report.RESULTS.parts[-2:] == ("results", "dryrun")
