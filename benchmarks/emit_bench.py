@@ -1,12 +1,20 @@
 """Emit BENCH_sort.json — the canonical perf-trajectory artifact.
 
-One JSON document per run, schema ``repro.bench.sort/v1``: a probe grid of
+One JSON document per run, schema ``repro.bench.sort/v2``: a probe grid of
 (op, n) bench points, and for each point every candidate backend's measured
 warm ns next to its analytic ``cost_model.bytes_moved`` accounting (the
 software analogue of the paper's Table I/II temp-row cycle counts), plus
 the ``auto`` plan the cost-model planner actually picked — its backend,
 predicted ns, measured ns, and the predicted-vs-measured
 ``cost_model_error`` ratio.
+
+v2 adds a top-level ``profile`` block recording the tuning provenance the
+run was planned under (``repro.core.tuning``): the device fingerprint, the
+profile source (default / calibrated / persisted), the tuned kernel
+parameters, and whether a persisted profile exists for this fingerprint —
+``scripts/bench_gate.py`` hard-fails (even under ``--warn-only``) when it
+does, because measured constants remove the only excuse for ``auto``
+missing the best backend.
 
 The point of the artifact is the *trajectory*: successive runs (CI uploads
 one per commit) show whether ``auto`` keeps tracking the best measured
@@ -35,7 +43,7 @@ import time
 
 import numpy as np
 
-SCHEMA = "repro.bench.sort/v1"
+SCHEMA = "repro.bench.sort/v2"
 
 QUICK_SIZES = (1024, 4096)
 DEFAULT_SIZES = (4096, 65536)
@@ -129,10 +137,26 @@ def collect(sizes=DEFAULT_SIZES, k: int = TOPK_K, reps: int = 3):
     return points
 
 
+def _profile_block() -> dict:
+    """Tuning provenance for the document: which profile priced the plans
+    this run measured, and whether a persisted one exists on this machine
+    (the bench gate's hard-fail condition)."""
+    from repro.core import tuning
+    prof = tuning.active()
+    return {"fingerprint": prof.fingerprint,
+            "source": prof.source,
+            "digit_bits": prof.digit_bits,
+            "run_len": prof.run_len,
+            "capacity_slack": prof.capacity_slack,
+            "select_min_n": prof.select_min_n,
+            "persisted": tuning.persisted_path(prof.fingerprint) is not None}
+
+
 def document(points) -> dict:
     import jax
     return {"schema": SCHEMA,
             "backend": jax.default_backend(),
+            "profile": _profile_block(),
             "points": points}
 
 

@@ -1,0 +1,85 @@
+"""Calibrate this device's tuning profile and persist it.
+
+Thin CLI over ``repro.engine.planner.calibrate(persist=True)``: probes every
+registered backend, sweeps the discrete kernel knobs (radix digit width, run
+length, sample-sort capacity slack), fits the per-device cost constants, and
+writes the winning ``repro.core.tuning`` profile as JSON.
+
+  PYTHONPATH=src python scripts/autotune.py                    # default grid
+  ... --tile-n 512 --batch 8 --reps 1                          # tiny CI grid
+  ... --out /tmp/profile.json --check                          # validate it
+  ... --no-sweeps                                              # constants only
+
+Without ``--out`` the profile lands in the default search path
+(``$REPRO_TUNING_DIR``, else ``~/.cache/repro/profiles``) where every
+subsequent repro process auto-loads it.  ``--check`` reloads the emitted file
+through ``tuning.load`` and verifies schema + device fingerprint, exiting
+non-zero on any mismatch — the tier-1 TIER1_TUNE leg runs exactly this.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tile-n", type=int, default=2048,
+                    help="probe tile length (power of two)")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="probe batch rows")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timing repetitions per probe")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="profile path (default: tuning search path)")
+    ap.add_argument("--no-sweeps", action="store_true",
+                    help="fit cost constants only, keep default knobs")
+    ap.add_argument("--include-pallas", action="store_true",
+                    help="probe Pallas kernels even off-TPU (interpret "
+                         "mode, slow)")
+    ap.add_argument("--check", action="store_true",
+                    help="reload the emitted profile and verify schema + "
+                         "device fingerprint")
+    args = ap.parse_args(argv)
+
+    from repro.core import tuning
+    from repro.engine import planner
+
+    prof = planner.calibrate(
+        tile_n=args.tile_n, batch=args.batch, reps=args.reps,
+        include_pallas=True if args.include_pallas else None,
+        sweep_params=not args.no_sweeps, persist=True, path=args.out)
+
+    path = (pathlib.Path(args.out) if args.out
+            else tuning.profile_path(prof.fingerprint))
+    print(f"[autotune] fingerprint   {prof.fingerprint}")
+    print(f"[autotune] digit_bits    {prof.digit_bits}")
+    print(f"[autotune] run_len       {prof.run_len}")
+    print(f"[autotune] capacity_slack {prof.capacity_slack}")
+    print(f"[autotune] select_min_n  {prof.select_min_n}")
+    print(f"[autotune] wrote {path}")
+
+    if args.check:
+        try:
+            loaded = tuning.load(path)
+        except tuning.ProfileError as e:
+            print(f"[autotune] CHECK FAILED: reload rejected: {e}",
+                  file=sys.stderr)
+            return 1
+        if loaded.fingerprint != tuning.device_fingerprint():
+            print(f"[autotune] CHECK FAILED: fingerprint "
+                  f"{loaded.fingerprint!r} != device "
+                  f"{tuning.device_fingerprint()!r}", file=sys.stderr)
+            return 1
+        if loaded.constants != prof.constants:
+            print("[autotune] CHECK FAILED: constants did not round-trip",
+                  file=sys.stderr)
+            return 1
+        print("[autotune] check OK: profile reloads with matching "
+              "fingerprint and constants")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,17 +21,35 @@ if [[ -n "${TIER1_MULTIDEV:-}" ]]; then
     tests/test_distributed_sort.py tests/test_samplesort.py \
     tests/test_distributed_topk.py "$@"
 fi
-# TIER1_BENCH=1 appends the perf-trajectory leg after the suite: emit the
-# canonical BENCH_sort.json on the quick probe grid, then enforce the
-# auto-within-factor-of-best invariant (scripts/bench_gate.py).  Pass
+# TIER1_BENCH=1 appends the perf-trajectory leg after the suite: emit a
+# fresh bench document on the quick probe grid, then enforce the
+# auto-within-factor-of-best invariant (scripts/bench_gate.py) and, when
+# the committed baseline exists, the no-drift-vs-baseline bound.  Pass
 # TIER1_BENCH_ARGS for extra gate flags (e.g. "--warn-only" on noisy CI).
 if [[ -n "${TIER1_BENCH:-}" ]]; then
   python -m pytest -x -q --durations=10 "$@"
-  echo "[tier1] bench leg: emitting benchmarks/BENCH_sort.json"
-  python -m benchmarks.emit_bench --quick --out benchmarks/BENCH_sort.json
+  echo "[tier1] bench leg: emitting benchmarks/BENCH_sort.ci.json"
+  python -m benchmarks.emit_bench --quick --out benchmarks/BENCH_sort.ci.json
+  baseline_args=()
+  if [[ -f benchmarks/BENCH_sort.json ]]; then
+    baseline_args=(--baseline benchmarks/BENCH_sort.json)
+  fi
   # shellcheck disable=SC2086
-  python scripts/bench_gate.py benchmarks/BENCH_sort.json \
-    ${TIER1_BENCH_ARGS:-}
+  python scripts/bench_gate.py benchmarks/BENCH_sort.ci.json \
+    "${baseline_args[@]}" ${TIER1_BENCH_ARGS:-}
+  exit 0
+fi
+# TIER1_TUNE=1 appends the autotuner leg: run a tiny-grid calibrate() that
+# probes this machine, persists the winning tuning profile, and validates
+# the emitted JSON (schema + device fingerprint) via --check.  The profile
+# lands in a throwaway dir so the run never pollutes the user's cache.
+if [[ -n "${TIER1_TUNE:-}" ]]; then
+  python -m pytest -x -q --durations=10 "$@"
+  tunedir="$(mktemp -d)"
+  trap 'rm -rf "$tunedir"' EXIT
+  echo "[tier1] tune leg: calibrating into $tunedir/profile.json"
+  python scripts/autotune.py --tile-n 512 --batch 8 --reps 1 \
+    --out "$tunedir/profile.json" --check
   exit 0
 fi
 # --durations=10 surfaces the suite's hot spots (it runs ~9 min on CPU CI)

@@ -19,9 +19,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.core import cas, network
+from repro.core import tuning as _tuning
+# Re-export: the constants' home is the tuning layer (the cost model
+# *consumes* measured profiles, it does not own them), but every historical
+# consumer spells cost_model.DeviceSortConstants.
+from repro.core.tuning import DeviceSortConstants  # noqa: F401
 
 # ---- paper constants (§III, Table I/II) -------------------------------------
 CYCLE_NS = 0.55                      # latency of one IMC operation, 65 nm
@@ -104,45 +109,25 @@ def memory_bits(n: int = 8, width: int = 4) -> int:
     return sorter.array_geometry(n, width)["bits"]
 
 
-# radix-backend shape constants (kernels/radix_sort.py imports these, so the
-# analytic model and the kernel can't drift apart)
-RADIX_DIGIT_BITS = 8                 # radix 256: 4 passes for 32-bit keys
-RADIX_TILE = 256                     # elements per histogram partition
-
-
 # ---- device-level cost model (engine auto-dispatch) --------------------------
 #
 # The paper's model prices one SRAM macro; the engine's planner needs the same
 # kind of closed form one level up: how long does each *device* backend take
 # to sort (batch, n)?  Asymptotics are fixed per backend; the per-element
-# constants are seeded with coarse defaults and can be overwritten by
-# ``repro.engine.planner.calibrate()``, which times single-tile probes on the
-# actual backend (the "measured per-tile constants").
+# constants and kernel shape parameters (radix digit width, histogram tile)
+# live in the active ``repro.core.tuning`` profile — coarse per-platform
+# defaults until ``repro.engine.planner.calibrate()`` measures and persists
+# real ones — and every cost function below resolves them from there when
+# the caller does not pin them explicitly.
 
-@dataclasses.dataclass
-class DeviceSortConstants:
-    """ns-per-element leading constants for each software backend."""
-    xla: float = 6.0             # comparison sort: c * n log2 n
-    bitonic: float = 1.2         # word-parallel jnp network: c * n log2^2 n
-    pallas: float = 0.25         # VMEM-resident network: c * n log2^2 n
-    merge_run: float = 6.0       # run generation: c * n log2 run_len
-    merge_level: float = 12.0    # one merge-path level: c * n
-    radix: float = 12.0          # LSD digit pass: c * n * ceil(b/8) passes
-    # MSD select, c * n * ceil(b/8) pass units.  The constant is seeded
-    # from the measured CPU bit-serial path (which runs DIGIT_BITS 1-bit
-    # refinements per pass unit), putting the modeled select/sort-prefix
-    # crossover at n ~ 1-2k for f32/k=64 — where the bench measures it
-    select: float = 15.0
-    # native lax.top_k on substrates where it lowers to a tuned O(n)
-    # selection (XLA:CPU): c * n.  Seeded from the measured 3.4ms at n=1M
-    # (results_engine_cpu.csv topk_xla rows); on TPU lax.top_k is
-    # sort-based and the xla backend keeps the sort-prefix price instead
-    xla_topk: float = 3.5
-    pallas_interpret_penalty: float = 300.0   # CPU interpret-mode multiplier
-    # mesh collectives (distributed dispatch): one collective round costs
-    # alpha (launch/latency) + bytes-moved-per-device / bandwidth
-    collective_alpha: float = 2_000.0         # ns per collective launch
-    collective_per_byte: float = 0.02         # ns/byte (~50 GB/s ICI link)
+
+def _radix_digit_bits(digit_bits: Optional[int]) -> int:
+    return digit_bits if digit_bits is not None \
+        else _tuning.active().digit_bits
+
+
+def _radix_tile(tile: Optional[int]) -> int:
+    return tile if tile is not None else _tuning.active().radix_tile
 
 
 def _log2(v: float) -> float:
@@ -150,17 +135,21 @@ def _log2(v: float) -> float:
 
 
 def device_sort_cost_ns(method: str, n: int, batch: int = 1, *,
-                        run_len: int = 2048,
+                        run_len: Optional[int] = None,
                         consts: DeviceSortConstants = None,
                         pallas_interpreted: bool = False,
-                        key_bits: int = 32) -> float:
+                        key_bits: int = 32,
+                        digit_bits: Optional[int] = None,
+                        tile: Optional[int] = None) -> float:
     """Estimated ns to sort ``batch`` rows of ``n`` with a software backend.
 
     ``n`` is priced at its padded (power-of-two / tiled) size, matching what
     each backend actually executes.  ``key_bits`` is the encoded key width
     (keycodec) — only the radix backend's pass count depends on it.
+    ``digit_bits`` / ``tile`` default to the active tuning profile's values,
+    i.e. exactly what the radix kernel will run with.
     """
-    c = consts or DeviceSortConstants()
+    c = consts or _tuning.active().constants
     m = 1 << max(0, (n - 1).bit_length())
     if method == "xla":
         return c.xla * batch * n * _log2(n)
@@ -170,15 +159,17 @@ def device_sort_cost_ns(method: str, n: int, batch: int = 1, *,
         pen = c.pallas_interpret_penalty if pallas_interpreted else 1.0
         return pen * c.pallas * batch * m * _log2(m) ** 2
     if method == "radix":
-        # O(n·b): ceil(b/8) digit passes, each touching every element once
-        # (histogram + rank + scatter); Pallas kernels, so interpret mode
-        # pays the same penalty as the bitonic kernel path
-        passes = -(-key_bits // RADIX_DIGIT_BITS)
-        tiled = -(-n // RADIX_TILE) * RADIX_TILE
+        # O(n·b): ceil(b/digit_bits) digit passes, each touching every
+        # element once (histogram + rank + scatter); Pallas kernels, so
+        # interpret mode pays the same penalty as the bitonic kernel path
+        passes = -(-key_bits // _radix_digit_bits(digit_bits))
+        rt = _radix_tile(tile)
+        tiled = -(-n // rt) * rt
         pen = c.pallas_interpret_penalty if pallas_interpreted else 1.0
         return pen * c.radix * batch * tiled * passes
     if method == "merge":
-        run_len = min(run_len, m)
+        run_len = min(run_len if run_len is not None
+                      else _tuning.active().run_len, m)
         tiles = 1 << max(0, (-(-n // run_len) - 1).bit_length())
         padded = tiles * run_len
         gen = c.merge_run * batch * padded * _log2(run_len)
@@ -188,12 +179,14 @@ def device_sort_cost_ns(method: str, n: int, batch: int = 1, *,
 
 
 def selection_cost_ns(n: int, k: int, key_bits: int = 32, batch: int = 1, *,
-                      consts: DeviceSortConstants = None) -> float:
+                      consts: DeviceSortConstants = None,
+                      digit_bits: Optional[int] = None,
+                      tile: Optional[int] = None) -> float:
     """Estimated ns for an exact top-k *selection* of ``(batch, n)`` rows —
     the partial-sort operating mode the hardware-sorting survey treats as
     first-class, priced so the planner can weigh it against sort-prefix:
 
-      ceil(b/DIGIT_BITS) MSD digit-refinement passes, each one O(n)
+      ceil(b/digit_bits) MSD digit-refinement passes, each one O(n)
       counting work over the (tile-padded) row, plus the O(k log k)
       two-key ordering of the k survivors.
 
@@ -201,9 +194,10 @@ def selection_cost_ns(n: int, k: int, key_bits: int = 32, batch: int = 1, *,
     histogram (kernels/radix_select.py), not an interpreted Pallas kernel
     — selection is exactly the radix path that stays fast on hosts.
     """
-    c = consts or DeviceSortConstants()
-    passes = -(-key_bits // RADIX_DIGIT_BITS)
-    tiled = -(-n // RADIX_TILE) * RADIX_TILE
+    c = consts or _tuning.active().constants
+    passes = -(-key_bits // _radix_digit_bits(digit_bits))
+    rt = _radix_tile(tile)
+    tiled = -(-n // rt) * rt
     return c.select * batch * tiled * passes + c.xla * batch * k * _log2(k)
 
 
@@ -221,13 +215,14 @@ def xla_topk_cost_ns(n: int, k: int, batch: int = 1, *,
     (``SortBackend.topk_cost_ns``) and the xla backend answers with this
     model off-TPU.
     """
-    c = consts or DeviceSortConstants()
+    c = consts or _tuning.active().constants
     return c.xla_topk * batch * n + c.xla * batch * k * _log2(k)
 
 
 def bytes_moved(method: str, n: int, itemsize: int = 4, *,
                 key_bits: int = 32, k: int = None,
-                run_len: int = 2048) -> int:
+                run_len: Optional[int] = None,
+                digit_bits: Optional[int] = None) -> int:
     """Analytic off-chip bytes one backend moves sorting ``n`` elements —
     the paper's data-movement accounting (Tables I/II count temp-row COPY
     cycles; this counts the software analogue: element reads+writes that
@@ -240,14 +235,15 @@ def bytes_moved(method: str, n: int, itemsize: int = 4, *,
     ``bytes_moved`` column next to every measured ns in BENCH_sort.json.
     """
     if k is not None:
-        passes = -(-key_bits // RADIX_DIGIT_BITS)
+        passes = -(-key_bits // _radix_digit_bits(digit_bits))
         if method == "select":
             return n * itemsize * passes + 2 * k * itemsize
         if method == "xla":            # native scan: one read, k writes
             return n * itemsize + 2 * k * itemsize
         # sort-prefix on any sort backend: full sort + one k-slice read
         return bytes_moved(method, n, itemsize, key_bits=key_bits,
-                           run_len=run_len) + k * itemsize
+                           run_len=run_len, digit_bits=digit_bits) \
+            + k * itemsize
     lvl = _log2(n)
     if method in ("xla", "merge"):
         # merge family: each level reads and writes every element; the
@@ -258,7 +254,7 @@ def bytes_moved(method: str, n: int, itemsize: int = 4, *,
     if method == "pallas":
         return 2 * n * itemsize        # VMEM-resident: in once, out once
     if method == "radix":
-        passes = -(-key_bits // RADIX_DIGIT_BITS)
+        passes = -(-key_bits // _radix_digit_bits(digit_bits))
         return 2 * n * itemsize * passes
     raise ValueError(f"no bytes-moved model for method {method!r}")
 
@@ -274,7 +270,7 @@ def collective_cost_ns(n_dev: int, m: int, itemsize: int,
     cluster-scale Eq. 3-4 term: temp-row operand movement priced per
     exchange, with the strategy choice reducing to *how many exchanges*.
     """
-    c = consts or DeviceSortConstants()
+    c = consts or _tuning.active().constants
     return c.collective_alpha + c.collective_per_byte * n_dev * m * itemsize
 
 
@@ -293,7 +289,7 @@ def distributed_sort_cost_ns(strategy: str, n: int, n_dev: int,
     wins once the per-round merge work dominates — the planner picks the
     winner per workload (``planner.choose_distributed``).
     """
-    c = consts or DeviceSortConstants()
+    c = consts or _tuning.active().constants
     m = -(-n // n_dev)
     local = c.xla * m * _log2(m)
     if strategy == "oddeven":

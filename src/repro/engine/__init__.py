@@ -63,6 +63,11 @@ def _obs_finish(sp, op: str, plan: planner.Plan, n: int, batch: int,
                       measured_ns=measured_ns, error=error)
     from repro.obs import metrics as _metrics
     _metrics.histogram("planner.cost_model_error").observe(error)
+    # closed-loop autotuning (opt-in, REPRO_AUTOTUNE=1): when the error
+    # histogram says the active constants have drifted off this device,
+    # re-probe and swap in a fresh profile — see tuning.refresh_if_stale
+    from repro.core import tuning as _tuning
+    _tuning.maybe_refresh()
 
 
 # ---------------------------------------------------------------------------

@@ -22,21 +22,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import cost_model, sortspec
+from repro.core import tuning as _tuning
 from repro.core.backends import MAX_BITONIC_N, MAX_PALLAS_N  # noqa: F401
 from repro.engine import runs as _runs
-
-# default engine tile size per substrate: on TPU a run is one VMEM tile; on
-# CPU larger runs trade (cheap, vectorised) tile-sort work for (expensive,
-# gather-bound) merge levels — 8K is the measured sweet spot for jnp tiles
-CPU_RUN_LEN = 8192
-
-_measured: Optional[cost_model.DeviceSortConstants] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +48,10 @@ def on_tpu() -> bool:
 
 
 def constants() -> cost_model.DeviceSortConstants:
-    return _measured or cost_model.DeviceSortConstants()
+    """The cost constants every plan is priced with — the active tuning
+    profile's (per-platform defaults until ``calibrate()`` measures real
+    ones or a persisted profile matches the device fingerprint)."""
+    return _tuning.active().constants
 
 
 def _eligible(method: str, n: int, dtype, run_len: int) -> bool:
@@ -87,8 +84,9 @@ def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
     chosen backend, predicted ns — so dispatch is auditable after the
     fact; ``choose_cached`` hits skip both re-pricing and the event.
     """
-    rl = run_len or (_runs.DEFAULT_RUN_LEN if on_tpu() else CPU_RUN_LEN)
-    consts = constants()
+    prof = _tuning.active()
+    rl = run_len or prof.run_len
+    consts = prof.constants
     interp = not on_tpu()
     candidates = _auto_candidates()
     costs = {
@@ -103,6 +101,12 @@ def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
         def _valid(name: str) -> bool:
             caps = candidates[name].capabilities
             if not candidates[name].eligible(n, dtype, rl):
+                return False
+            # selection switch-over: below the tuned floor the O(n·passes)
+            # counting constant never beats a tiny sort, and the modeled
+            # crossover is noisy at small n — auto skips selection engines
+            # there (explicit requested="select" is still honoured)
+            if k is not None and caps.selection and n < prof.select_min_n:
                 return False
             # sort plans need a sorter; top-k plans need a topk path
             return caps.supports_topk if k is not None else caps.supports_sort
@@ -182,7 +186,7 @@ def choose_distributed_cached(n: int, n_dev: int,
                               dtype=jnp.float32) -> DistPlan:
     """``choose_distributed`` memoized alongside the single-device plans —
     same invalidation rules (calibration state, registry generation)."""
-    key = ("dist", n, n_dev, jnp.dtype(dtype).name, id(_measured),
+    key = ("dist", n, n_dev, jnp.dtype(dtype).name, _tuning.generation(),
            sortspec.registry_generation(), jax.default_backend())
     plan = _PLAN_CACHE.get(key)
     if plan is None:
@@ -211,7 +215,7 @@ def choose_cached(n: int, batch: int = 1, dtype=jnp.float32, *,
     new backend transparently re-plans.
     """
     key = (n, batch, jnp.dtype(dtype).name, requested, run_len, k,
-           id(_measured), sortspec.registry_generation(),
+           _tuning.generation(), sortspec.registry_generation(),
            jax.default_backend())
     plan = _PLAN_CACHE.get(key)
     if plan is None:
@@ -231,7 +235,8 @@ def clear_plan_cache() -> None:
 
 
 # ---------------------------------------------------------------------------
-# measured per-tile constants
+# autotuner: probe every registered backend, sweep the parameter space,
+# fit the constants, persist the winning profile
 # ---------------------------------------------------------------------------
 
 def _time_ns(fn, reps: int = 3) -> float:
@@ -242,24 +247,170 @@ def _time_ns(fn, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps * 1e9
 
 
+def _probe_registered(x, sel_k: int, reps: int,
+                      include_pallas: bool) -> Dict[str, float]:
+    """One warm sort (and top-k, where supported) probe per *registered*
+    auto-dispatchable backend at the calibration shape -> {probe: ns}.
+
+    This is the raw measurement table a persisted profile carries
+    (``TuningProfile.probe_ns``): third-party backends registered via
+    ``@register_backend`` are probed too, so the profile stays an audit
+    of the whole registry, not just the built-in constant fit.
+    """
+    n = x.shape[-1]
+    vmem_only = () if include_pallas else ("pallas", "radix")
+    table: Dict[str, float] = {}
+    for name, be in sortspec.registered_backends().items():
+        caps = be.capabilities
+        if not caps.auto_dispatch or name in vmem_only:
+            continue
+        try:
+            if caps.supports_sort:
+                f = jax.jit(lambda v, b=be: b.sort(v))
+                table[f"{name}.sort.n{n}"] = _time_ns(
+                    lambda: jax.block_until_ready(f(x)), reps)
+            if caps.supports_topk and sel_k <= n:
+                f = jax.jit(lambda v, b=be: b.topk(v, sel_k)[0])
+                table[f"{name}.topk.n{n}.k{sel_k}"] = _time_ns(
+                    lambda: jax.block_until_ready(f(x)), reps)
+        except Exception:       # a broken third-party backend must not
+            continue            # sink the whole calibration
+    return table
+
+
+def _sweep_digit_bits(x, reps: int) -> Tuple[int, Dict[str, float]]:
+    """Time the LSD radix kernel at each candidate digit width and return
+    the fastest.  Wider digits mean fewer passes but a (1 << digit_bits)
+    times larger one-hot histogram tensor per tile — the classic radix
+    trade the paper makes at the CAS level with its bit-serial W."""
+    from repro.core import keycodec
+    from repro.kernels import radix_sort as _rs
+    enc = keycodec.encode(x, descending=False)
+    table: Dict[str, float] = {}
+    for db in (4, 8):
+        f = jax.jit(lambda v, d=db: _rs.sort_blocks(v, digit_bits=d))
+        table[f"digit_bits={db}"] = _time_ns(
+            lambda: jax.block_until_ready(f(enc)), reps)
+    best = min((4, 8), key=lambda d: table[f"digit_bits={d}"])
+    return best, table
+
+
+def _sweep_run_len(tile_n: int, batch: int, reps: int
+                   ) -> Tuple[Optional[int], Dict[str, float]]:
+    """Time the full engine pipeline (run generation + merge tree) over a
+    run-length grid at an 8-tile probe size and return the fastest.
+
+    Longer runs trade cheap vectorised tile-sort work for fewer
+    gather-bound merge levels; the crossover is a property of the
+    substrate (the reason the old hardcoded TPU/CPU split existed) and
+    this measures it instead of guessing it."""
+    import numpy as np
+    from repro.engine import merge as _merge
+    n_probe = 8 * tile_n
+    rows = max(1, batch // 8)
+    v = jnp.asarray(
+        np.random.default_rng(1).standard_normal((rows, n_probe)),
+        jnp.float32)
+    grid = sorted({rl for rl in (tile_n // 2, tile_n, 2 * tile_n,
+                                 4 * tile_n)
+                   if 256 <= rl <= n_probe // 2})
+    if not grid:
+        return None, {}
+    table: Dict[str, float] = {}
+    for rl in grid:
+        f = jax.jit(lambda w, r=rl: _merge.merge_runs(
+            _runs.generate_runs(w, r, method="xla"), backend="xla"))
+        table[f"run_len={rl}"] = _time_ns(
+            lambda: jax.block_until_ready(f(v)), reps)
+    best = min(grid, key=lambda r: table[f"run_len={r}"])
+    return best, table
+
+
+def _sweep_capacity_slack(reps: int) -> Tuple[Optional[float],
+                                              Dict[str, float]]:
+    """Time the distributed sample-sort at each candidate bucket-capacity
+    slack (multi-device only — with one device there is no exchange to
+    size).  Slack > 1 pads the measured bucket maximum so near-identical
+    workloads reuse one compiled phase-2 program; the sweep measures
+    whether the larger exchange buys back its cost in recompiles."""
+    import numpy as np
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None, {}
+    from jax.sharding import Mesh
+    from repro.engine.samplesort import sample_sort
+    n_dev = len(devs)
+    mesh = Mesh(np.array(devs), ("data",))
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(1024 * n_dev),
+                    jnp.float32)
+    table: Dict[str, float] = {}
+    for slack in (1.0, 1.25, 1.5):
+        try:
+            ns = _time_ns(lambda s=slack: jax.block_until_ready(
+                sample_sort(x, mesh, "data", capacity_slack=s)), reps)
+        except Exception:
+            continue
+        table[f"capacity_slack={slack}"] = ns
+    if not table:
+        return None, {}
+    best = min(table, key=table.__getitem__)
+    return float(best.split("=")[1]), table
+
+
+def _fit_select_min_n(consts: cost_model.DeviceSortConstants,
+                      digit_bits: int, tile: int) -> int:
+    """Analytic switch-over: the smallest power-of-two n at which the
+    *measured* selection constant beats the cheapest non-selection top-k
+    path (k=64, f32).  Below it, auto never dispatches a selection
+    engine — the counting passes cannot amortise."""
+    k = 64
+    for exp in range(6, 21):
+        n = 1 << exp
+        if n <= k:
+            continue
+        sel = cost_model.selection_cost_ns(
+            n, k, 32, consts=consts, digit_bits=digit_bits, tile=tile)
+        alt = cost_model.device_sort_cost_ns("xla", n, consts=consts)
+        if not on_tpu():
+            alt = min(alt, cost_model.xla_topk_cost_ns(n, k, consts=consts))
+        if sel < alt:
+            return n
+    return _tuning.DEFAULT_SELECT_MIN_N
+
+
 def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
-              include_pallas: Optional[bool] = None
-              ) -> cost_model.DeviceSortConstants:
-    """Measure per-tile constants on the live backend and cache them.
+              include_pallas: Optional[bool] = None,
+              sweep_params: bool = True,
+              persist: bool = False,
+              path=None) -> _tuning.TuningProfile:
+    """Autotune this device: probe every registered backend, sweep the
+    kernel parameter space, fit the per-element constants, install (and
+    optionally persist) the winning :class:`~repro.core.tuning.TuningProfile`.
 
-    Times one VMEM-tile-sized probe per backend plus one merge level, and
-    rescales the analytic constants so subsequent ``choose`` calls price
-    backends with numbers observed on this machine.  Optional: the defaults
-    are good enough for dispatch ordering; calibration sharpens crossover
-    points.
+    Stages:
 
-    The Pallas probes (the whole-array bitonic AND the radix kernel) only
-    run on a real TPU by default: interpret-mode timings say nothing about
+      1. **probe** — one warm timing per registered auto-dispatchable
+         backend (sort + top-k) at the calibration shape; the raw table
+         rides the profile as ``probe_ns``.
+      2. **fit** — rescale the analytic leading constants (xla, bitonic,
+         merge, radix, select, native top-k) to the measurements, exactly
+         the closed-form inversion the paper does from Table I/II to ns.
+      3. **sweep** (``sweep_params=True``) — measure the discrete knobs:
+         radix ``digit_bits`` in {4, 8} (kernel paths only), the engine
+         ``run_len`` grid, and the sample-sort ``capacity_slack`` (multi-
+         device only); fit the selection switch-over from the measured
+         constants.
+      4. **install** — ``tuning.set_active`` swaps the profile in (every
+         cached plan dies via the generation counter); ``persist=True``
+         writes the schema-versioned JSON (``path`` or the profile cache)
+         so the *next* process starts from measurements, not guesses.
+
+    The Pallas probes (whole-array bitonic AND the radix kernel) only run
+    on a real TPU by default: interpret-mode timings say nothing about
     kernel speed (the analytic constant plus the interpret penalty already
     prices those paths) and a single interpreted tile sort can take minutes
     on CPU.
     """
-    global _measured
     import numpy as np
     from repro.engine import merge as _merge
     if include_pallas is None:
@@ -280,13 +431,31 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
     bit_ns = _time_ns(lambda: bit_f(x).block_until_ready(), reps)
     mrg_ns = _time_ns(lambda: mrg_f(x).block_until_ready(), reps)
 
+    # parameter sweeps run BEFORE the constant fit so the radix/select
+    # constants are normalised by the pass count the tuned digit width
+    # actually implies
+    defaults = _tuning.default_profile()
+    digit_bits, tile = defaults.digit_bits, defaults.radix_tile
+    run_len, slack = defaults.run_len, defaults.capacity_slack
+    sweeps: Dict[str, Dict[str, float]] = {}
+    if sweep_params:
+        if include_pallas:
+            digit_bits, tbl = _sweep_digit_bits(x, reps)
+            sweeps["digit_bits"] = tbl
+        rl, tbl = _sweep_run_len(tile_n, batch, reps)
+        if rl is not None:
+            run_len, sweeps["run_len"] = rl, tbl
+        sl, tbl = _sweep_capacity_slack(reps)
+        if sl is not None:
+            slack, sweeps["capacity_slack"] = sl, tbl
+
     # selection probe: runs everywhere (off-TPU the select uses its jnp
     # histogram path, so the timing is honest without a real TPU)
     from repro.core import keycodec as _kc
     sel_k = min(64, tile_n)
     sel_f = jax.jit(lambda v: be("select").topk(v, sel_k)[0])
     sel_ns = _time_ns(lambda: sel_f(x).block_until_ready(), reps)
-    sel_passes = -(-_kc.key_bits(x.dtype) // cost_model.RADIX_DIGIT_BITS)
+    sel_passes = -(-_kc.key_bits(x.dtype) // digit_bits)
     # strip the modeled O(k log k) ordering term with the constant this
     # same calibration will price it at (the measured xla one, not the
     # default — selection_cost_ns re-adds the term using the measured
@@ -304,22 +473,23 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
     xtk_ns = _time_ns(lambda: xtk_f(x).block_until_ready(), reps)
     xtk_c = max(xtk_ns - sel_kterm, 0.1 * xtk_ns) / elems
 
-    defaults = cost_model.DeviceSortConstants()
-    pal_c, rad_c = defaults.pallas, defaults.radix
+    dc = defaults.constants
+    pal_c, rad_c = dc.pallas, dc.radix
     if include_pallas:
         from repro.core import keycodec
         from repro.kernels import radix_sort as _rs
         pal_f = jax.jit(lambda v: be("pallas").sort(v))
         pal_ns = _time_ns(lambda: pal_f(x).block_until_ready(), reps)
         pal_c = pal_ns / (elems * lg * lg)
-        rad_f = jax.jit(lambda v: be("radix").sort(v))
+        rad_f = jax.jit(lambda v: _rs.sort_blocks(
+            keycodec.encode(v, descending=False), digit_bits=digit_bits))
         rad_ns = _time_ns(lambda: rad_f(x).block_until_ready(), reps)
-        passes = -(-keycodec.key_bits(x.dtype) // _rs.DIGIT_BITS)
+        passes = -(-keycodec.key_bits(x.dtype) // digit_bits)
         rad_c = rad_ns / (elems * passes)
         if not on_tpu():  # fold into (constant x penalty) form
-            pal_c /= defaults.pallas_interpret_penalty
-            rad_c /= defaults.pallas_interpret_penalty
-    _measured = cost_model.DeviceSortConstants(
+            pal_c /= dc.pallas_interpret_penalty
+            rad_c /= dc.pallas_interpret_penalty
+    consts = cost_model.DeviceSortConstants(
         xla=xla_ns / (elems * lg),
         bitonic=bit_ns / (elems * lg * lg),
         pallas=pal_c,
@@ -329,11 +499,33 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
         merge_run=xla_ns / (elems * lg),
         merge_level=mrg_ns / elems,
     )
+    select_min_n = _fit_select_min_n(consts, digit_bits, tile) \
+        if sweep_params else defaults.select_min_n
+
+    probe_ns = _probe_registered(x, sel_k, reps, include_pallas)
+    probe_ns.update({"xla.merge_pairs": mrg_ns})
+
+    profile = _tuning.TuningProfile(
+        fingerprint=_tuning.device_fingerprint(),
+        constants=consts,
+        digit_bits=digit_bits,
+        radix_tile=tile,
+        run_len=run_len,
+        capacity_slack=slack,
+        select_min_n=select_min_n,
+        source="calibrated",
+        probe_ns=probe_ns,
+        sweeps=sweeps or None,
+    )
+    if persist:
+        _tuning.save(profile, path)
+    _tuning.set_active(profile)
     clear_plan_cache()
-    return _measured
+    return profile
 
 
 def reset_calibration() -> None:
-    global _measured
-    _measured = None
+    """Back to the built-in per-platform defaults (and re-plan): the
+    inverse of ``calibrate``, ignoring any persisted profile."""
+    _tuning.set_active(_tuning.default_profile())
     clear_plan_cache()

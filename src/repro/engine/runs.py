@@ -16,7 +16,12 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-DEFAULT_RUN_LEN = 2048
+from repro.core import tuning as _tuning
+
+# historical alias — the constant's home is the tuning layer; callers that
+# want the *measured* run length for this device resolve it through
+# ``tuning.active().run_len`` (``run_len=None`` below does exactly that)
+DEFAULT_RUN_LEN = _tuning.DEFAULT_RUN_LEN
 
 RUN_METHODS = ("xla", "bitonic", "pallas", "radix")
 
@@ -104,10 +109,15 @@ def _sort_tiles_kv(keys: jnp.ndarray, vals: jnp.ndarray, method: str,
     raise ValueError(f"run method must be one of {RUN_METHODS}, got {method!r}")
 
 
-def generate_runs(x: jnp.ndarray, run_len: int = DEFAULT_RUN_LEN, *,
+def generate_runs(x: jnp.ndarray, run_len: Optional[int] = None, *,
                   method: str = "xla", descending: bool = False,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
-    """(rows, n) -> (rows, n_tiles, run_len) independently sorted runs."""
+    """(rows, n) -> (rows, n_tiles, run_len) independently sorted runs.
+
+    ``run_len=None`` resolves the active tuning profile's measured run
+    length for this device."""
+    if run_len is None:
+        run_len = _tuning.active().run_len
     rows, n = x.shape
     n_tiles, m = run_layout(n, run_len)
     run_len = m // n_tiles
@@ -118,10 +128,12 @@ def generate_runs(x: jnp.ndarray, run_len: int = DEFAULT_RUN_LEN, *,
 
 
 def generate_runs_kv(keys: jnp.ndarray, vals: jnp.ndarray,
-                     run_len: int = DEFAULT_RUN_LEN, *,
+                     run_len: Optional[int] = None, *,
                      method: str = "xla", descending: bool = False,
                      interpret: Optional[bool] = None):
     """Key-value run generation: payloads follow their keys into the runs."""
+    if run_len is None:
+        run_len = _tuning.active().run_len
     rows, n = keys.shape
     n_tiles, m = run_layout(n, run_len)
     run_len = m // n_tiles

@@ -48,6 +48,7 @@ radix backend).  The sort is not stable.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -56,6 +57,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import keycodec
+from repro.core import tuning as _tuning
 from repro.engine.merge import merge_runs
 from repro.obs import metrics, trace as _obs
 
@@ -117,7 +119,7 @@ def bucket_bounds(ks: jnp.ndarray, splitters: jnp.ndarray, *,
         # row would materialise an un-tiled (1, m, D) one-hot in VMEM.
         # Pad slots carry an extra bucket id (n_dev) counted into a
         # throwaway histogram column
-        tile = min(max(8, _rs.DEFAULT_TILE), m)
+        tile = min(max(8, _tuning.active().radix_tile), m)
         mt = -(-m // tile) * tile
         if mt != m:
             ids = jnp.pad(ids, (0, mt - m), constant_values=n_dev)
@@ -319,6 +321,7 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
                 local_method: Optional[str] = None,
                 samples_per_shard: Optional[int] = None,
                 capacity: Optional[int] = None,
+                capacity_slack: Optional[float] = None,
                 use_histogram: Optional[bool] = None,
                 merge_backend: Optional[str] = None,
                 interpret: Optional[bool] = None):
@@ -339,6 +342,11 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
     the measured mode is unavailable (it syncs counts to the host) and
     the realized bounds cannot be checked, so only ``capacity >= m`` is
     accepted there.
+
+    ``capacity_slack`` (default: the active tuning profile's) multiplies
+    the *measured* bucket maximum before pow2 rounding: >1 buys headroom
+    so nearby workloads with slightly more skew reuse the same compiled
+    phase-2 program instead of recompiling at the next capacity.
     """
     x = jnp.asarray(x)
     if x.ndim != 1:
@@ -393,7 +401,9 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
                 "sample_sort's measured-capacity mode reads the bucket "
                 "counts on the host and cannot run under an outer jit; "
                 f"pass capacity= (the shard length {m} is always safe)")
-        cap = _round_capacity(max_bucket, m)
+        slack = capacity_slack if capacity_slack is not None \
+            else _tuning.active().capacity_slack
+        cap = _round_capacity(int(math.ceil(max_bucket * slack)), m)
     else:
         cap = _round_capacity(capacity, m)
         if max_bucket is None and cap < m:

@@ -54,10 +54,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import keycodec
-# shared shape constants: pricing (cost_model.selection_cost_ns), the LSD
-# sort kernels, and this module can't drift apart
-from repro.core.cost_model import RADIX_DIGIT_BITS as DIGIT_BITS
-from repro.core.cost_model import RADIX_TILE as DEFAULT_TILE
+# kernel shape parameters (digit width, histogram tile) come from the
+# tuning layer's active profile — the same object the cost model prices
+# with (cost_model.selection_cost_ns), so pricing, the LSD sort kernels,
+# and this module can't drift apart
+from repro.core import tuning as _tuning
 
 __all__ = ["select_topk", "select_topk_kv", "select_topk_encoded",
            "kth_key_encoded"]
@@ -71,11 +72,23 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def pass_tile_counts(n: int, dtype, use_kernel: Optional[bool] = None
-                     ) -> Tuple[int, int]:
+def _resolve(tile: Optional[int], digit_bits: Optional[int]
+             ) -> Tuple[int, int]:
+    """Fill unset kernel parameters from the active tuning profile —
+    outside any jit, so profile swaps reach fresh traces."""
+    prof = None
+    if tile is None or digit_bits is None:
+        prof = _tuning.active()
+    return (tile if tile is not None else prof.radix_tile,
+            digit_bits if digit_bits is not None else prof.digit_bits)
+
+
+def pass_tile_counts(n: int, dtype, use_kernel: Optional[bool] = None,
+                     tile: Optional[int] = None,
+                     digit_bits: Optional[int] = None) -> Tuple[int, int]:
     """(refinement passes, histogram tiles per pass) of the k-th-key
     search at this shape — analytic, from static shapes only.  The
-    digit-serial kernel path runs ceil(bits/DIGIT_BITS) passes over
+    digit-serial kernel path runs ceil(bits/digit_bits) passes over
     ceil(n/tile) VMEM tiles; the bit-serial host path runs ``bits``
     masked zero-counts with no tiling (tiles = 0)."""
     if use_kernel is None:
@@ -83,8 +96,9 @@ def pass_tile_counts(n: int, dtype, use_kernel: Optional[bool] = None
     bits = keycodec.key_bits(dtype)
     if not use_kernel:
         return bits, 0
-    tile = min(DEFAULT_TILE, max(8, n))
-    return -(-bits // DIGIT_BITS), -(-n // tile)
+    tile, digit_bits = _resolve(tile, digit_bits)
+    tile = min(tile, max(8, n))
+    return -(-bits // digit_bits), -(-n // tile)
 
 
 # ---------------------------------------------------------------------------
@@ -122,13 +136,13 @@ def _tile_hist(d: jnp.ndarray, ncols: int, interpret: bool) -> jnp.ndarray:
 
 
 def _masked_hist(digits: jnp.ndarray, active: jnp.ndarray, radix: int,
-                 interpret: Optional[bool]) -> jnp.ndarray:
+                 tile: int, interpret: Optional[bool]) -> jnp.ndarray:
     """(rows, n) digits + active mask -> (rows, radix) active-only counts
     on the per-tile Pallas kernel: inactive slots carry digit ``radix``,
     counted into a throwaway column (the bucket_bounds pad trick)."""
     rows, n = digits.shape
     d = jnp.where(active, digits, radix)
-    tile = min(DEFAULT_TILE, max(8, n))
+    tile = min(tile, max(8, n))
     m = -(-n // tile) * tile
     if m != n:
         d = jnp.pad(d, ((0, 0), (0, m - n)), constant_values=radix)
@@ -141,17 +155,17 @@ def _masked_hist(digits: jnp.ndarray, active: jnp.ndarray, radix: int,
 # digit refinement: the k-th encoded key, no data movement
 # ---------------------------------------------------------------------------
 
-def _kth_key_digit_serial(enc: jnp.ndarray, k: int,
-                          interpret: Optional[bool]):
-    """DIGIT_BITS-wide refinement on the Pallas histogram kernel — the
-    TPU path: ceil(b/DIGIT_BITS) passes of per-tile VPU counting."""
+def _kth_key_digit_serial(enc: jnp.ndarray, k: int, digit_bits: int,
+                          tile: int, interpret: Optional[bool]):
+    """digit_bits-wide refinement on the Pallas histogram kernel — the
+    TPU path: ceil(b/digit_bits) passes of per-tile VPU counting."""
     rows, _ = enc.shape
     bits = jnp.iinfo(enc.dtype).bits
-    radix = 1 << DIGIT_BITS
+    radix = 1 << digit_bits
     k_rem = jnp.full((rows,), k, jnp.int32)
     thresh = jnp.zeros((rows,), enc.dtype)
-    for shift in range(bits - DIGIT_BITS, -1, -DIGIT_BITS):
-        hi = shift + DIGIT_BITS
+    for shift in range(bits - digit_bits, -1, -digit_bits):
+        hi = shift + digit_bits
         if hi >= bits:
             active = jnp.ones(enc.shape, bool)
         else:
@@ -160,7 +174,7 @@ def _kth_key_digit_serial(enc: jnp.ndarray, k: int,
                 == jax.lax.shift_right_logical(thresh, sh)[:, None]
         digits = (jax.lax.shift_right_logical(enc, jnp.array(shift, enc.dtype))
                   .astype(jnp.int32) & (radix - 1))
-        hist = _masked_hist(digits, active, radix, interpret)
+        hist = _masked_hist(digits, active, radix, tile, interpret)
         cum = jnp.cumsum(hist, axis=-1)
         # smallest digit whose cumulative count reaches the residual k
         d = jnp.argmax(cum >= k_rem[:, None], axis=-1).astype(jnp.int32)
@@ -206,6 +220,8 @@ def _kth_key_bit_serial(enc: jnp.ndarray, k: int):
 
 def kth_key_encoded(enc: jnp.ndarray, k: int, *,
                     use_kernel: Optional[bool] = None,
+                    tile: Optional[int] = None,
+                    digit_bits: Optional[int] = None,
                     interpret: Optional[bool] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per row of unsigned ``(rows, n)``: the k-th *smallest* encoded key
@@ -214,7 +230,8 @@ def kth_key_encoded(enc: jnp.ndarray, k: int, *,
     if use_kernel is None:
         use_kernel = _kernel_default()
     if use_kernel:
-        return _kth_key_digit_serial(enc, k, interpret)
+        tile, digit_bits = _resolve(tile, digit_bits)
+        return _kth_key_digit_serial(enc, k, digit_bits, tile, interpret)
     return _kth_key_bit_serial(enc, k)
 
 
@@ -224,6 +241,8 @@ def kth_key_encoded(enc: jnp.ndarray, k: int, *,
 
 def select_topk_encoded(enc: jnp.ndarray, k: int, *,
                         use_kernel: Optional[bool] = None,
+                        tile: Optional[int] = None,
+                        digit_bits: Optional[int] = None,
                         interpret: Optional[bool] = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(rows, n) unsigned encoded keys -> the k smallest per row, in
@@ -233,8 +252,8 @@ def select_topk_encoded(enc: jnp.ndarray, k: int, *,
     if not 1 <= k <= n:
         raise ValueError(
             f"topk k must satisfy 1 <= k <= n (n={n}); got k={k}")
-    thresh, k_eq = kth_key_encoded(enc, k, use_kernel=use_kernel,
-                                   interpret=interpret)
+    thresh, k_eq = kth_key_encoded(enc, k, use_kernel=use_kernel, tile=tile,
+                                   digit_bits=digit_bits, interpret=interpret)
     less = enc < thresh[:, None]
     eq = enc == thresh[:, None]
     eq_rank = jnp.cumsum(eq.astype(jnp.int32), axis=-1) - 1
@@ -261,28 +280,49 @@ def select_topk_encoded(enc: jnp.ndarray, k: int, *,
 # front doors (source dtypes through the keycodec)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "use_kernel", "interpret"))
-def select_topk(x: jnp.ndarray, k: int, *,
-                use_kernel: Optional[bool] = None,
-                interpret: Optional[bool] = None
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-k largest per row of ``(rows, n)`` -> (values, indices), values
-    descending, ties by ascending index — ``jax.lax.top_k``'s convention,
-    in O(n·b/DIGIT_BITS) counting work instead of a sort."""
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel", "tile",
+                                             "digit_bits", "interpret"))
+def _select_topk_impl(x: jnp.ndarray, k: int, use_kernel: Optional[bool],
+                      tile: Optional[int], digit_bits: Optional[int],
+                      interpret: Optional[bool]
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     enc = keycodec.encode(x, descending=True)
     enc_s, idx_s = select_topk_encoded(enc, k, use_kernel=use_kernel,
+                                       tile=tile, digit_bits=digit_bits,
                                        interpret=interpret)
     return keycodec.decode(enc_s, x.dtype, descending=True), idx_s
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_kernel", "interpret"))
+def select_topk(x: jnp.ndarray, k: int, *,
+                use_kernel: Optional[bool] = None,
+                tile: Optional[int] = None,
+                digit_bits: Optional[int] = None,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k largest per row of ``(rows, n)`` -> (values, indices), values
+    descending, ties by ascending index — ``jax.lax.top_k``'s convention,
+    in O(n·b/digit_bits) counting work instead of a sort.
+
+    The kernel path's ``tile`` / ``digit_bits`` resolve from the active
+    tuning profile here, outside the jit, so ``tuning.set_active`` swaps
+    re-dispatch instead of hitting a stale trace cache."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    if use_kernel:
+        tile, digit_bits = _resolve(tile, digit_bits)
+    return _select_topk_impl(x, k, use_kernel, tile, digit_bits, interpret)
+
+
 def select_topk_kv(keys: jnp.ndarray, values: jnp.ndarray, k: int, *,
                    use_kernel: Optional[bool] = None,
+                   tile: Optional[int] = None,
+                   digit_bits: Optional[int] = None,
                    interpret: Optional[bool] = None):
     """Key-value variant: ``(topk keys, payload, indices)`` — the payload
     rides the exact-k selection by one gather through the indices."""
     if values.shape != keys.shape:
         raise ValueError(f"values shape {values.shape} must match keys "
                          f"shape {keys.shape}")
-    v, i = select_topk(keys, k, use_kernel=use_kernel, interpret=interpret)
+    v, i = select_topk(keys, k, use_kernel=use_kernel, tile=tile,
+                       digit_bits=digit_bits, interpret=interpret)
     return v, jnp.take_along_axis(values, i, axis=-1), i

@@ -40,25 +40,41 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# shared with the analytic cost model so pricing and kernel never drift
-from repro.core.cost_model import RADIX_DIGIT_BITS as DIGIT_BITS
-from repro.core.cost_model import RADIX_TILE as DEFAULT_TILE
+# the kernel shape parameters (digit width, histogram tile) live in the
+# tuning layer; the analytic cost model resolves the same profile, so
+# pricing and kernel can't drift — and the dependency points the right way
+# (kernels consume tuning; cost_model consumes tuning; neither owns the
+# other's constants)
+from repro.core import tuning as _tuning
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def pass_tile_counts(n: int, dtype, tile: int = DEFAULT_TILE
-                     ) -> Tuple[int, int]:
+def _resolve(tile: Optional[int], digit_bits: Optional[int]
+             ) -> Tuple[int, int]:
+    """Fill unset kernel parameters from the active tuning profile.  Runs
+    *outside* the jitted entry points so a profile swap reaches fresh
+    traces instead of being baked into a stale jit cache."""
+    prof = None
+    if tile is None or digit_bits is None:
+        prof = _tuning.active()
+    return (tile if tile is not None else prof.radix_tile,
+            digit_bits if digit_bits is not None else prof.digit_bits)
+
+
+def pass_tile_counts(n: int, dtype, tile: Optional[int] = None,
+                     digit_bits: Optional[int] = None) -> Tuple[int, int]:
     """(digit passes, VMEM tiles per row) ``sort_blocks`` runs at this
     shape — analytic, from static shapes only, so observability spans and
     cost-model cross-checks can label a jitted kernel call without
     reaching inside the trace."""
     from repro.core import keycodec
+    tile, digit_bits = _resolve(tile, digit_bits)
     bits = keycodec.key_bits(dtype)
     tile = min(tile, max(8, n))
-    return -(-bits // DIGIT_BITS), -(-n // tile)
+    return -(-bits // digit_bits), -(-n // tile)
 
 
 # ---------------------------------------------------------------------------
@@ -137,10 +153,10 @@ def _global_pos(d: jnp.ndarray, base: jnp.ndarray, rank: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _pass_permutation(keys: jnp.ndarray, shift: int, tile: int,
-                      interpret: bool) -> jnp.ndarray:
+                      digit_bits: int, interpret: bool) -> jnp.ndarray:
     """Stable permutation ordering ``keys`` by digit ``shift`` (gather form)."""
     rows, n = keys.shape
-    radix = 1 << DIGIT_BITS
+    radix = 1 << digit_bits
     n_tiles = n // tile
     digits = jax.lax.shift_right_logical(
         keys, jnp.array(shift, keys.dtype)).astype(jnp.int32) & (radix - 1)
@@ -178,30 +194,54 @@ def _padded(keys, vals, tile):
     return keys, vals, tile
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def sort_blocks(keys: jnp.ndarray, *, tile: int = DEFAULT_TILE,
-                interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Stable ascending LSD radix sort of each row of unsigned (rows, n)."""
-    interp = _interpret_default() if interpret is None else interpret
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "digit_bits", "interpret"))
+def _sort_blocks_impl(keys: jnp.ndarray, *, tile: int, digit_bits: int,
+                      interpret: bool) -> jnp.ndarray:
     rows, n = keys.shape
     keys, _, tile = _padded(keys, None, tile)
-    for shift in range(0, jnp.iinfo(keys.dtype).bits, DIGIT_BITS):
-        inv = _pass_permutation(keys, shift, tile, interp)
+    for shift in range(0, jnp.iinfo(keys.dtype).bits, digit_bits):
+        inv = _pass_permutation(keys, shift, tile, digit_bits, interpret)
         keys = jnp.take_along_axis(keys, inv, axis=-1)
     return keys[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def sort_kv_blocks(keys: jnp.ndarray, vals: jnp.ndarray, *,
-                   tile: int = DEFAULT_TILE,
-                   interpret: Optional[bool] = None
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Key-value variant: payloads ride their keys through every pass."""
-    interp = _interpret_default() if interpret is None else interpret
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "digit_bits", "interpret"))
+def _sort_kv_blocks_impl(keys: jnp.ndarray, vals: jnp.ndarray, *, tile: int,
+                         digit_bits: int, interpret: bool
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     rows, n = keys.shape
     keys, vals, tile = _padded(keys, vals, tile)
-    for shift in range(0, jnp.iinfo(keys.dtype).bits, DIGIT_BITS):
-        inv = _pass_permutation(keys, shift, tile, interp)
+    for shift in range(0, jnp.iinfo(keys.dtype).bits, digit_bits):
+        inv = _pass_permutation(keys, shift, tile, digit_bits, interpret)
         keys = jnp.take_along_axis(keys, inv, axis=-1)
         vals = jnp.take_along_axis(vals, inv, axis=-1)
     return keys[:, :n], vals[:, :n]
+
+
+def sort_blocks(keys: jnp.ndarray, *, tile: Optional[int] = None,
+                digit_bits: Optional[int] = None,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Stable ascending LSD radix sort of each row of unsigned (rows, n).
+
+    ``tile`` / ``digit_bits`` default to the active tuning profile; the
+    resolution happens here, outside the jit, so the inner trace sees
+    concrete statics and a ``tuning.set_active`` swap re-dispatches
+    instead of replaying a cache keyed on stale parameters."""
+    tile, digit_bits = _resolve(tile, digit_bits)
+    interp = _interpret_default() if interpret is None else interpret
+    return _sort_blocks_impl(keys, tile=tile, digit_bits=digit_bits,
+                             interpret=interp)
+
+
+def sort_kv_blocks(keys: jnp.ndarray, vals: jnp.ndarray, *,
+                   tile: Optional[int] = None,
+                   digit_bits: Optional[int] = None,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Key-value variant: payloads ride their keys through every pass."""
+    tile, digit_bits = _resolve(tile, digit_bits)
+    interp = _interpret_default() if interpret is None else interpret
+    return _sort_kv_blocks_impl(keys, vals, tile=tile, digit_bits=digit_bits,
+                                interpret=interp)

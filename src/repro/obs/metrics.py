@@ -124,6 +124,18 @@ class Histogram:
             seen += c
         return self.max
 
+    def clear(self) -> None:
+        """Zero this histogram in place (the registry keeps the instance).
+        Drift detectors (``tuning.refresh_if_stale``) clear the error
+        histogram after acting on it so the next decision starts from
+        fresh observations instead of re-counting the stale ones."""
+        with _LOCK:
+            self.buckets = [0] * _NBUCKETS
+            self.count = 0
+            self.sum = 0.0
+            self.min = None
+            self.max = None
+
     def _snap(self):
         return {"type": "histogram", "count": self.count, "sum": self.sum,
                 "min": self.min, "max": self.max,

@@ -31,6 +31,17 @@ def _load_bench_gate():
 bench_gate = _load_bench_gate()
 
 
+@pytest.fixture(autouse=True)
+def _isolated_profiles(tmp_path, monkeypatch):
+    """Profile lookups must not see the developer's real cache: a persisted
+    profile there would flip ``--warn-only`` into hard-fail mid-suite."""
+    from repro.core import tuning
+    monkeypatch.setenv(tuning.PROFILE_DIR_ENV, str(tmp_path / "profiles"))
+    tuning.set_active(None)
+    yield
+    tuning.set_active(None)
+
+
 class _FakePlan:
     """A planner Plan double carrying a cost table the gate never reads —
     the gate judges measurements, not predictions."""
@@ -109,3 +120,87 @@ def test_write_and_reload(tmp_path):
     doc = json.loads(path.read_text())
     assert doc["schema"] == emit_bench.SCHEMA
     assert len(doc["points"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# v2: tuning-profile provenance + baseline trajectory diff
+# ---------------------------------------------------------------------------
+
+def test_v2_document_carries_profile_provenance():
+    from repro.core import tuning
+    doc = emit_bench.document([_healthy_point()])
+    prof = doc["profile"]
+    assert prof["fingerprint"] == tuning.device_fingerprint()
+    assert prof["source"] == "default"        # isolated dir holds nothing
+    assert prof["persisted"] is False
+    assert prof["digit_bits"] == tuning.active().digit_bits
+    assert prof["run_len"] == tuning.active().run_len
+
+
+def test_v1_documents_still_check():
+    doc = emit_bench.document([_mispriced_point()])
+    doc["schema"] = "repro.bench.sort/v1"
+    doc.pop("profile")
+    violations, checked = bench_gate.check(doc, factor=2.0)
+    assert checked == 1 and len(violations) == 1
+
+
+def test_persisted_profile_overrides_warn_only(tmp_path):
+    """Satellite invariant: where a persisted profile matches this device's
+    fingerprint, the gate hard-fails even under --warn-only — measured
+    constants remove the the-defaults-were-guesses excuse."""
+    from repro.core import tuning
+    tuning.save(tuning.default_profile())     # lands in the isolated dir
+    tuning.set_active(None)                   # re-resolve -> persisted
+    doc = emit_bench.document([_mispriced_point()])
+    assert doc["profile"]["persisted"] is True
+    assert doc["profile"]["source"] == "persisted"
+    path = tmp_path / "BENCH_sort.json"
+    path.write_text(json.dumps(doc))
+    assert bench_gate.main([str(path), "--warn-only"]) == 1
+    # a healthy document under the same pinned profile still passes
+    ok = emit_bench.document([_healthy_point()])
+    path.write_text(json.dumps(ok))
+    assert bench_gate.main([str(path), "--warn-only"]) == 0
+
+
+def _named_point(name, auto_ns):
+    """A point whose auto/best ratio is auto_ns / 3.4e6 (xla is best)."""
+    plan = _FakePlan("select", {"select": 1_000.0, "xla": 10_000.0})
+    measured = {"xla": {"ns": 3.4e6, "bytes_moved": 0},
+                "select": {"ns": max(auto_ns, 3.4e6), "bytes_moved": 0}}
+    return emit_bench._point(name, "topk", 1 << 20, 64,
+                             measured, auto_ns, plan)
+
+
+def test_baseline_bounds_trajectory(tmp_path):
+    """--baseline turns the gate into a drift check: a point the committed
+    baseline already shows as noisy passes until it drifts past factor x
+    its committed ratio; points absent from the baseline keep the absolute
+    factor bound."""
+    base = emit_bench.document([_named_point("a", 34e6),    # ratio 10
+                                _named_point("b", 3.4e6)])  # ratio 1
+    basep = tmp_path / "baseline.json"
+    basep.write_text(json.dumps(base))
+    doc = emit_bench.document([
+        _named_point("a", 51e6),     # ratio 15 < 2x10: tolerated drift
+        _named_point("b", 10.2e6),   # ratio 3 > 2x1: regression
+        _named_point("c", 10.2e6),   # ratio 3, no baseline: factor bound
+    ])
+    violations, checked = bench_gate.check(doc, 2.0, base)
+    assert checked == 3
+    assert sorted(v["name"] for v in violations) == ["b", "c"]
+    assert {v["name"]: v["why"] for v in violations} == {
+        "b": "baseline", "c": "factor"}
+    path = tmp_path / "run.json"
+    path.write_text(json.dumps(doc))
+    assert bench_gate.main([str(path), "--baseline", str(basep)]) == 1
+    assert bench_gate.main([str(path), "--baseline", str(basep),
+                            "--warn-only"]) == 0
+    # without the baseline, "a" fails the absolute bound too
+    violations, _ = bench_gate.check(doc, 2.0)
+    assert sorted(v["name"] for v in violations) == ["a", "b", "c"]
+    # a malformed baseline is a config error, not a silent pass
+    badbase = tmp_path / "badbase.json"
+    badbase.write_text(json.dumps({"schema": "nope/v9", "points": []}))
+    assert bench_gate.main([str(path), "--baseline", str(badbase)]) == 2

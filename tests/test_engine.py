@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro import engine
-from repro.core import sort_api
+from repro.core import sort_api, tuning
 from repro.engine import merge as engine_merge
 from repro.engine import planner, runs, segmented
 
@@ -212,8 +212,7 @@ def test_choose_merge_eligibility_uses_resolved_run_len():
     pick a degenerate single-run merge for 2048 < n <= 8192."""
     plan = planner.choose(4096, 1)
     assert plan.method != "merge"
-    assert plan.run_len == (runs.DEFAULT_RUN_LEN if planner.on_tpu()
-                            else planner.CPU_RUN_LEN)
+    assert plan.run_len == tuning.active().run_len
     # with an explicit small run_len, 4096 is multiple runs again: merge
     # must be a *candidate* (picked or not is the cost model's call)
     assert planner._eligible("merge", 4096, jnp.dtype(jnp.float32), 1024)
@@ -222,20 +221,21 @@ def test_choose_merge_eligibility_uses_resolved_run_len():
 
 def test_plan_is_executable():
     plan = planner.choose(100000, 1)
-    expect = (runs.DEFAULT_RUN_LEN if planner.on_tpu()
-              else planner.CPU_RUN_LEN)
-    assert plan.run_len == expect
+    assert plan.run_len == tuning.active().run_len
     assert plan.run_method in runs.RUN_METHODS
     assert plan.merge_backend in engine_merge.MERGE_BACKENDS
 
 
 def test_calibrate_updates_constants():
     try:
-        c = planner.calibrate(tile_n=256, batch=8, reps=1,
-                              include_pallas=False)
+        prof = planner.calibrate(tile_n=256, batch=8, reps=1,
+                                 include_pallas=False)
+        c = prof.constants
         assert c.xla > 0 and c.bitonic > 0 and c.merge_level > 0
         assert c.radix > 0     # analytic default kept off-TPU
+        assert prof.source == "calibrated"
         assert planner.constants() is c
+        assert tuning.active() is prof
         # post-calibration dispatch still returns an executable method
         assert planner.choose(100000, 1).method in (
             "xla", "bitonic", "pallas", "merge", "radix")
@@ -243,6 +243,7 @@ def test_calibrate_updates_constants():
         planner.reset_calibration()
     from repro.core import cost_model
     assert planner.constants() == cost_model.DeviceSortConstants()
+    assert tuning.active().source == "default"
 
 
 def test_sort_api_merge_and_auto_methods():

@@ -93,6 +93,25 @@ def test_calibrate_invalidates_mid_session():
     assert planner.choose_cached(100000, 1, jnp.float32) is not fresh
 
 
+def test_profile_swap_invalidates():
+    """Installing a different tuning profile must re-key cached plans: the
+    plan cache folds ``tuning.generation()`` into its key, so a swapped
+    profile (different run_len here) shows up without an explicit clear."""
+    from dataclasses import replace
+
+    from repro.core import tuning
+    before = planner.choose_cached(100000, 1, jnp.float32)
+    try:
+        tuning.set_active(replace(tuning.active(),
+                                  run_len=before.run_len // 2))
+        after = planner.choose_cached(100000, 1, jnp.float32)
+        assert after is not before
+        assert after.run_len == before.run_len // 2
+    finally:
+        tuning.set_active(None)
+    assert planner.choose_cached(100000, 1, jnp.float32) is not after
+
+
 def test_distributed_plans_share_invalidation():
     d1 = planner.choose_distributed_cached(1 << 20, 8)
     assert planner.choose_distributed_cached(1 << 20, 8) is d1   # hit

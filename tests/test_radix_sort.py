@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import sort_api
+from repro.core import sort_api, tuning
 from repro.kernels import radix_sort
 
 
@@ -31,7 +31,8 @@ def test_sort_blocks_matches_np(dtype, n):
 def test_sort_blocks_multi_tile_rows():
     """n spanning many tiles exercises the cross-tile prefix-sum."""
     rng = np.random.default_rng(5)
-    x = _rand(rng, (2, 5 * radix_sort.DEFAULT_TILE + 17), np.uint32)
+    tile = tuning.active().radix_tile
+    x = _rand(rng, (2, 5 * tile + 17), np.uint32)
     out = np.asarray(radix_sort.sort_blocks(jnp.asarray(x)))
     np.testing.assert_array_equal(out, np.sort(x, -1))
 
