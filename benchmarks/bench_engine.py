@@ -214,6 +214,84 @@ def run_distributed(sizes=DEFAULT_SIZES):
     return rows
 
 
+# the naive join materialises an (n_l, n_r) equality matrix — quadratic,
+# so its leg (and the sorted join it anchors) is capped
+REL_JOIN_CAP = 4096
+
+
+def run_relational(sizes=DEFAULT_SIZES):
+    """Relational ops vs their naive XLA one-liners.
+
+    Rows per n (dup-heavy int32 keys, ~n/4 distinct):
+
+      * ``rel_unique``   vs ``jnp.unique(size=n)`` (scatter-heavy lowering)
+      * ``rel_group_by`` (sum) vs unique+segment_sum composed directly
+      * ``rel_join``     vs the dense O(n_l*n_r) equality-matrix nonzero,
+                         both capped at n=4096
+
+    The summary rows record the warm speedup of each op over its naive
+    formulation at the largest n — the README "Relational kernels" numbers.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import relational as rel
+
+    rows, summary = [], {}
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        keys = jnp.asarray(rng.integers(0, max(2, n // 4), n), jnp.int32)
+        vals = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+        reps = 3 if n <= 65536 else 1
+
+        def naive_unique(v):
+            return jnp.unique(v, size=n, fill_value=0)
+
+        def naive_group(v):
+            u, inv = jnp.unique(keys, size=n, fill_value=0,
+                                return_inverse=True)
+            return u, jax.ops.segment_sum(v, inv, num_segments=n)
+
+        legs = [
+            ("rel_unique", lambda v: rel.unique(v).values, naive_unique,
+             keys),
+            ("rel_group_by",
+             lambda v: rel.group_by(keys, v, agg="sum").aggregates[0],
+             naive_group, vals),
+        ]
+        if n <= REL_JOIN_CAP:
+            nj = n
+            lk, rk = keys, jnp.asarray(
+                rng.integers(0, max(2, n // 4), n), jnp.int32)
+            pair_cap = 16 * nj
+
+            def naive_join(l):
+                return jnp.nonzero(l[:, None] == rk[None, :],
+                                   size=pair_cap, fill_value=-1)
+
+            legs.append(
+                ("rel_join",
+                 lambda l: rel.join(l, rk, size=pair_cap)[:2],
+                 naive_join, lk))
+        for name, fn, naive, x in legs:
+            cold, warm = _time_cold_warm(fn, x, reps)
+            ncold, nwarm = _time_cold_warm(naive, x, reps)
+            rows.append((f"engine.{name}.cold_ms.n{n}",
+                         round(cold * 1e3, 1), n))
+            rows.append((f"engine.{name}.warm_us.n{n}",
+                         round(warm * 1e6, 1), n))
+            rows.append((f"engine.{name}_naive.warm_us.n{n}",
+                         round(nwarm * 1e6, 1), n))
+            summary[(name, n)] = (warm, nwarm)
+    for name in ("rel_unique", "rel_group_by", "rel_join"):
+        ns = [n for (b, n) in summary if b == name]
+        if not ns:
+            continue
+        w, nw = summary[(name, max(ns))]
+        rows.append((f"engine.{name}_vs_naive_warm_speedup.n{max(ns)}",
+                     0.0, round(nw / w, 2)))
+    return rows
+
+
 def run(sizes=DEFAULT_SIZES):
     import jax
     import jax.numpy as jnp
@@ -262,6 +340,7 @@ def run(sizes=DEFAULT_SIZES):
         rows.append((f"engine.radix_vs_merge_warm_speedup.n{rn}",
                      0.0, round(summary[("merge", rn)][1] / rw, 2)))
     rows.extend(run_topk(sizes))
+    rows.extend(run_relational(sizes))
     rows.extend(run_distributed(sizes))
     rows.extend(run_topk_distributed(sizes))
     return rows

@@ -84,11 +84,11 @@ def _plan_dict(plan):
             "costs": {m: _finite(c) for m, c in sorted(plan.costs.items())}}
 
 
-def _point(name, op, n, k, measured, auto_ns, plan):
+def _point(name, op, n, k, measured, auto_ns, plan, dtype="float32"):
     best = min(measured, key=lambda m: measured[m]["ns"])
     predicted = _finite(plan.costs.get(plan.method))
     return {
-        "name": name, "op": op, "n": n, "k": k, "dtype": "float32",
+        "name": name, "op": op, "n": n, "k": k, "dtype": dtype,
         "backends": measured,
         "auto": {"backend": plan.method, "ns": auto_ns,
                  "predicted_ns": predicted,
@@ -137,6 +137,35 @@ def collect(sizes=DEFAULT_SIZES, k: int = TOPK_K, reps: int = 3):
     return points
 
 
+def collect_relational(sizes=DEFAULT_SIZES, reps: int = 3):
+    """Optional relational probe points (``--relational``; OFF by default
+    so the CI baseline grid is byte-stable): one ``unique.nN`` point per
+    size, measuring each auto-dispatchable sort backbone under
+    ``relational.unique`` plus the ``choose_relational`` auto pick —
+    the same auto-tracks-best trajectory, one workload class up."""
+    import jax.numpy as jnp
+    from repro import relational as rel
+    from repro.core import cost_model
+    from repro.engine import planner
+
+    rng = np.random.default_rng(0)
+    points = []
+    for n in sizes:
+        x = jnp.asarray(rng.integers(0, max(2, n // 4), n), jnp.int32)
+        measured = {}
+        for name in _sort_candidates():
+            ns = _time_warm_ns(
+                lambda v, m=name: rel.unique(v, method=m).values, x, reps)
+            measured[name] = {
+                "ns": ns, "bytes_moved": cost_model.bytes_moved(name, n)}
+        auto_ns = _time_warm_ns(lambda v: rel.unique(v).values, x, reps)
+        plan = planner.choose_relational_cached("unique", n,
+                                                dtype=jnp.int32)
+        points.append(_point(f"unique.n{n}", "unique", n, None,
+                             measured, auto_ns, plan, dtype="int32"))
+    return points
+
+
 def _profile_block() -> dict:
     """Tuning provenance for the document: which profile priced the plans
     this run measured, and whether a persisted one exists on this machine
@@ -176,12 +205,18 @@ def main() -> None:
     ap.add_argument("--sizes", default="",
                     help="comma-separated n values (overrides presets)")
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--relational", action="store_true",
+                    help="append relational probe points (unique.nN); off "
+                         "by default so the CI baseline grid is unchanged")
     args = ap.parse_args()
     if args.sizes:
         sizes = tuple(int(s) for s in args.sizes.split(","))
     else:
         sizes = QUICK_SIZES if args.quick else DEFAULT_SIZES
-    path = write(collect(sizes, reps=args.reps), args.out)
+    points = collect(sizes, reps=args.reps)
+    if args.relational:
+        points += collect_relational(sizes, reps=args.reps)
+    path = write(points, args.out)
     doc = json.loads(path.read_text())
     for p in doc["points"]:
         print(f"[emit_bench] {p['name']}: auto={p['auto']['backend']} "

@@ -19,7 +19,8 @@ if [[ -n "${TIER1_MULTIDEV:-}" ]]; then
   export XLA_FLAGS="--xla_force_host_platform_device_count=${TIER1_MULTIDEV} ${XLA_FLAGS:-}"
   exec python -m pytest -x -q --durations=10 \
     tests/test_distributed_sort.py tests/test_samplesort.py \
-    tests/test_distributed_topk.py "$@"
+    tests/test_distributed_topk.py tests/test_relational_distributed.py \
+    "$@"
 fi
 # TIER1_BENCH=1 appends the perf-trajectory leg after the suite: emit a
 # fresh bench document on the quick probe grid, then enforce the

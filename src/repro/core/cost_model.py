@@ -259,6 +259,63 @@ def bytes_moved(method: str, n: int, itemsize: int = 4, *,
     raise ValueError(f"no bytes-moved model for method {method!r}")
 
 
+# ---- relational kernels (repro.relational auto-dispatch) ---------------------
+#
+# Every relational op is priced as (sort backbone) + (O(n) post-pass): the
+# survey's framing — group-by/join/dedup are a sorter plus a scan.  The
+# post-pass is a handful of elementwise/searchsorted sweeps over the sorted
+# column, so its unit price is the measured one-merge-level constant
+# (``merge_level``: one O(n) gather-bound pass) times a per-op pass count.
+# No new tuning-profile fields: relational pricing reuses the calibrated
+# sort constants, so persisted profiles stay schema-stable.
+
+REL_POST_PASSES: Dict[str, float] = {
+    "unique": 3.0,     # boundary mask + compaction search + pad
+    "group_by": 4.0,   # boundary + compaction + segment reduce (per agg ~1)
+    "join": 6.0,       # 2x searchsorted runs + offset scan + pair expansion
+    "rle": 3.0,        # boundary + compaction + segment lengths
+    "delta": 1.0,      # one adjacent-diff sweep
+}
+
+# ops that sort more than one column (join sorts both sides)
+REL_SORT_COLUMNS: Dict[str, float] = {"join": 2.0}
+
+
+def relational_cost_ns(op: str, method: str, n: int, batch: int = 1, *,
+                       run_len: Optional[int] = None,
+                       key_bits: int = 32,
+                       consts: DeviceSortConstants = None,
+                       pallas_interpreted: bool = False) -> float:
+    """Estimated ns for relational ``op`` over an ``n``-element column with
+    its sort backbone on ``method``.
+
+    The planner's ``choose_relational`` prices every auto candidate with
+    this — substituting the forced-stable merge pipeline for non-stable
+    backends on order-sensitive ops (join pair order, group-by arrival
+    ranks) BEFORE calling, since that is what the engine actually executes.
+    The sketches are priced too (quantile at its selection contract,
+    histogram at one binary-search sweep) so bench tooling can put a
+    predicted column next to every measured row, but they take no backend
+    override — there is nothing to dispatch.
+    """
+    c = consts or _tuning.active().constants
+    if op == "quantile":
+        # bottom-k selection at the median contract (k grows with the
+        # highest requested fraction; n/2 is the representative price)
+        return selection_cost_ns(n, max(1, n // 2), key_bits, batch,
+                                 consts=c)
+    if op == "histogram":
+        # one searchsorted sweep over the edges + a bincount scatter
+        return c.xla * batch * n * _log2(n)
+    if op not in REL_POST_PASSES:
+        raise ValueError(f"no relational cost model for op {op!r}")
+    sort_ns = device_sort_cost_ns(method, n, batch, run_len=run_len,
+                                  consts=c, key_bits=key_bits,
+                                  pallas_interpreted=pallas_interpreted)
+    post = c.merge_level * batch * n * REL_POST_PASSES[op]
+    return REL_SORT_COLUMNS.get(op, 1.0) * sort_ns + post
+
+
 def collective_cost_ns(n_dev: int, m: int, itemsize: int,
                        consts: DeviceSortConstants = None) -> float:
     """Estimated ns for ONE collective round in which every device

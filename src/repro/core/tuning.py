@@ -45,6 +45,7 @@ import os
 import pathlib
 import re
 import threading
+import time
 from typing import Dict, Optional, Tuple
 
 __all__ = [
@@ -77,6 +78,11 @@ _VALID_DIGIT_BITS = (1, 2, 4, 8)
 # [1/threshold, threshold] after at least min-observations samples
 REFRESH_P90_THRESHOLD = 4.0
 REFRESH_MIN_OBSERVATIONS = 32
+# minimum seconds between drift-triggered recalibrations: a calibrate()
+# sweep is milliseconds-to-seconds of probe sorts, so a persistently noisy
+# drift signal (e.g. a co-tenant stealing the device) must not turn the
+# closed loop into a calibration storm
+REFRESH_COOLDOWN_S = 300.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -366,9 +372,16 @@ def generation() -> int:
 # observability feedback: re-probe on cost-model drift
 # ---------------------------------------------------------------------------
 
+# monotonic stamp of the last drift-triggered calibrate (None = never);
+# tests reset it by assigning None
+_last_refresh_t: Optional[float] = None
+
+
 def refresh_if_stale(threshold: float = REFRESH_P90_THRESHOLD,
                      min_count: int = REFRESH_MIN_OBSERVATIONS, *,
                      persist: bool = True,
+                     cooldown_s: float = REFRESH_COOLDOWN_S,
+                     now_fn=None,
                      **calibrate_kwargs) -> Optional[TuningProfile]:
     """Re-run the autotuner when measured/predicted cost drift says the
     active constants no longer describe this device.
@@ -381,7 +394,14 @@ def refresh_if_stale(threshold: float = REFRESH_P90_THRESHOLD,
     default) persists the fresh profile — then clears the histogram so
     the next drift measurement starts clean.  Returns the new profile, or
     None when the constants still hold (or there is too little signal).
+
+    Refreshes are rate-limited: after a drift-triggered calibrate, further
+    triggers within ``cooldown_s`` (monotonic clock; ``now_fn`` injectable
+    for tests) return None WITHOUT clearing the histogram — the drift
+    evidence keeps accumulating and the refresh fires as soon as the
+    cooldown lapses.  ``cooldown_s=0`` disables the limit.
     """
+    global _last_refresh_t
     from repro.obs import metrics
     h = metrics.histogram("planner.cost_model_error")
     if h.count < min_count:
@@ -389,8 +409,16 @@ def refresh_if_stale(threshold: float = REFRESH_P90_THRESHOLD,
     p90 = h.percentile(90)
     if p90 is None or (1.0 / threshold) <= p90 <= threshold:
         return None
+    # cooldown check AFTER the signal checks: the rate-limited counter
+    # counts refreshes that *would* have fired, nothing else
+    now = (now_fn or time.monotonic)()
+    if _last_refresh_t is not None and cooldown_s > 0 \
+            and now - _last_refresh_t < cooldown_s:
+        metrics.counter("tuning.refreshes_rate_limited").inc()
+        return None
     from repro.engine import planner
     prof = planner.calibrate(persist=persist, **calibrate_kwargs)
+    _last_refresh_t = now
     h.clear()
     metrics.counter("tuning.refreshes").inc()
     from repro.obs import trace

@@ -75,11 +75,54 @@ class SyntheticLM:
         return {k: v[lo:hi] for k, v in g.items()}
 
     def iterate(self, start_step: int = 0, shard: int = 0,
-                n_shards: int = 1) -> Iterator[Dict[str, np.ndarray]]:
+                n_shards: int = 1, dedup: bool = False
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        """Batch stream; ``dedup=True`` drops duplicate token rows within
+        each shard batch (motif planting repeats rows at small seq_len), so
+        the batch dimension can shrink step to step."""
         step = start_step
         while True:
-            yield self.shard_at(step, shard, n_shards)
+            batch = self.shard_at(step, shard, n_shards)
+            if dedup:
+                keep = dedup_rows(batch["tokens"])
+                batch = {k: v[keep] for k, v in batch.items()}
+            yield batch
             step += 1
+
+
+def row_fingerprints(tokens: np.ndarray) -> np.ndarray:
+    """uint32 polynomial hash of each token row (multiplier 1000003,
+    modular): equal rows always share a fingerprint, so dedup over
+    fingerprints is dedup over rows (up to a ~b^2/2^33 collision risk the
+    synthetic stream doesn't approach)."""
+    t = np.ascontiguousarray(tokens).astype(np.uint32)
+    s = t.shape[-1]
+    pows = np.empty((s,), np.uint32)
+    acc = 1
+    for i in range(s - 1, -1, -1):
+        pows[i] = acc
+        acc = (acc * 1000003) % (1 << 32)
+    return (t * pows).sum(axis=-1, dtype=np.uint32)
+
+
+def dedup_rows(tokens: np.ndarray) -> np.ndarray:
+    """Keep-mask selecting the FIRST occurrence of each distinct token row.
+
+    The fingerprint column goes through ``relational.unique`` (sort-based
+    dedup — the subsystem's canonical workload); first-occurrence selection
+    is a scatter-min of positions over the inverse index.
+    """
+    import jax.numpy as jnp
+
+    from repro import relational
+    h = row_fingerprints(tokens)
+    n = h.shape[0]
+    if n == 0:
+        return np.zeros((0,), bool)
+    u = relational.unique(jnp.asarray(h), return_inverse=True)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    first = jnp.full((n,), n, jnp.int32).at[u.inverse].min(pos)
+    return np.asarray(first[u.inverse] == pos)
 
 
 def device_put_batch(batch: Dict[str, np.ndarray], mesh, dp_axes):

@@ -147,6 +147,91 @@ def choose_method(n: int, batch: int = 1, dtype=jnp.float32) -> str:
 
 
 # ---------------------------------------------------------------------------
+# relational dispatch — which sorting backend carries each relational op
+# ---------------------------------------------------------------------------
+
+def choose_relational(op: str, n: int, batch: int = 1, dtype=jnp.float32, *,
+                      requested: str = "auto") -> Plan:
+    """Resolve the sort backbone for a relational op (repro.relational).
+
+    Prices every auto-dispatchable sort backend with
+    ``cost_model.relational_cost_ns``.  Order-sensitive ops (join's
+    duplicate-pair order, group-by's arrival-order aggregation,
+    group_ranks) run the engine's *stable* pipeline: a non-stable backend
+    would be silently substituted by the forced-stable merge fallback at
+    execution time (``engine.argsort``/``sort_kv`` with ``stable=True``),
+    so the planner prices those candidates at that fallback — the honest
+    cost of actually picking them — instead of their raw sort cost.
+    """
+    from repro.core import keycodec
+    from repro.relational.relspec import SORT_OPS, STABLE_OPS
+    if op not in SORT_OPS:
+        raise ValueError(
+            f"choose_relational plans the sort-backed ops "
+            f"{tuple(sorted(SORT_OPS))}, got {op!r}")
+    prof = _tuning.active()
+    rl = prof.run_len
+    consts = prof.constants
+    interp = not on_tpu()
+    kb = keycodec.key_bits(dtype) if keycodec.supports(dtype) else 32
+    candidates = {name: be for name, be in _auto_candidates().items()
+                  if be.capabilities.supports_sort}
+    costs: Dict[str, float] = {}
+    for name, be in candidates.items():
+        effective = name
+        if op in STABLE_OPS and not be.capabilities.stable \
+                and name != "merge":
+            effective = "merge"
+        try:
+            costs[name] = cost_model.relational_cost_ns(
+                op, effective, n, batch, run_len=rl, key_bits=kb,
+                consts=consts, pallas_interpreted=interp)
+        except ValueError:
+            costs[name] = float("inf")   # unknown backend: never auto-picked
+    if requested == "auto":
+        valid = [m for m in costs
+                 if candidates[m].eligible(n, dtype, rl)
+                 and costs[m] != float("inf")]
+        method = min(valid, key=costs.__getitem__)
+    else:
+        method = requested
+    run_method = "pallas" if (on_tpu() and _eligible("pallas", rl, dtype, rl)) \
+        else "xla"
+    plan = Plan(method=method, run_len=rl, run_method=run_method,
+                merge_backend="pallas" if on_tpu() else "xla", costs=costs)
+    from repro.obs import trace as _obs
+    if _obs.enabled():
+        _obs.record_event(
+            "relational_plan_decision", op=op, n=n, batch=batch,
+            dtype=jnp.dtype(dtype).name, requested=requested,
+            method=plan.method, predicted_ns=plan.costs.get(plan.method),
+            costs=dict(plan.costs), backend=jax.default_backend())
+        from repro.obs import metrics as _m
+        _m.counter("planner.relational_decisions").inc()
+    return plan
+
+
+def choose_relational_cached(op: str, n: int, batch: int = 1,
+                             dtype=jnp.float32, *,
+                             requested: str = "auto") -> Plan:
+    """``choose_relational`` memoized in the shared plan cache — same
+    invalidation rules (calibration generation, registry generation)."""
+    key = ("rel", op, n, batch, jnp.dtype(dtype).name, requested,
+           _tuning.generation(), sortspec.registry_generation(),
+           jax.default_backend())
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = choose_relational(op, n, batch, dtype, requested=requested)
+        _PLAN_CACHE[key] = plan
+    else:
+        from repro.obs import trace as _obs
+        if _obs.enabled():
+            from repro.obs import metrics as _m
+            _m.counter("planner.plan_cache_hits").inc()
+    return plan
+
+
+# ---------------------------------------------------------------------------
 # distributed dispatch — sample-sort vs odd-even transposition
 # ---------------------------------------------------------------------------
 

@@ -129,6 +129,26 @@ class LengthSortedScheduler:
         return 1.0 - sum(lens) / (len(lens) * max(lens))
 
 
+def batch_accounting(done: List[Request]):
+    """Per-prompt-length accounting of the completed requests — ONE
+    ``relational.group_by`` (prompt length -> generated-token count) with
+    ``agg=("count", "mean")``, i.e. the serving ledger expressed as the
+    sort subsystem's group-by aggregate.  Returns ascending
+    ``[(prompt_len, n_requests, mean_new_tokens), ...]``."""
+    from repro import relational
+    if not done:
+        return []
+    lens = jnp.asarray([len(r.prompt) for r in done], dtype=jnp.int32)
+    gen = jnp.asarray([0 if r.out is None else len(r.out) for r in done],
+                      dtype=jnp.int32)
+    gb = relational.group_by(lens, gen, agg=("count", "mean"))
+    g = int(gb.n_groups)
+    keys = np.asarray(gb.keys[:g])
+    cnt = np.asarray(gb.aggregates[0][:g])
+    mean = np.asarray(gb.aggregates[1][:g])
+    return [(int(k), int(c), float(m)) for k, c, m in zip(keys, cnt, mean)]
+
+
 def serve(arch: str, smoke: bool = True, n_requests: int = 16,
           batch_size: int = 8, decode_steps: int = 32, topk: int = 50,
           seed: int = 0, max_len: int = 256,
@@ -209,6 +229,13 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 16,
     print(f"[serve] {len(done)} requests in {stats['batches']} batches; "
           f"mean padding waste {waste:.3f}; "
           f"decode {np.mean(stats['decode_tps']):.1f} tok/s")
+    acct = batch_accounting(done)
+    stats["length_groups"] = acct
+    if acct:
+        head = ", ".join(f"len={k}: {c} req x {m:.0f} tok"
+                         for k, c, m in acct[:8])
+        more = "" if len(acct) <= 8 else f" (+{len(acct) - 8} more)"
+        print(f"[serve] length accounting: {head}{more}")
     if _obs.enabled():
         print(_obs_report.slo_report())
     return done, stats

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import relational
 from repro import sort as sorting
 from repro.configs.base import MoEConfig
 from repro.models import layers
@@ -113,9 +114,10 @@ def apply(params, x, cfg: MoEConfig, mlp_type: str, policy=None):
     z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(rl, axis=-1)))
 
     # 2. group (token, expert) pairs by expert id, PER BATCH ROW.  Expert
-    # ids are log2(E)-bit keys, so the grouping sort is a COUNTING sort: a
-    # one-hot exclusive cumsum along the row gives each pair its rank within
-    # its expert — the bit-width-aware strengthening of the paper's 4-bit
+    # ids are log2(E)-bit keys, so the grouping sort is a COUNTING sort:
+    # ``relational.group_ranks`` gives each pair its arrival rank within
+    # its expert (one-hot exclusive cumsum on this batched/small-domain
+    # shape) — the bit-width-aware strengthening of the paper's 4-bit
     # bitonic sort (DESIGN.md §2).  The bitonic comparison network still
     # powers the top-k above.
     # (token, expert) pairs in (token-major, k-minor) order: pair p belongs
@@ -126,10 +128,9 @@ def apply(params, x, cfg: MoEConfig, mlp_type: str, policy=None):
     flat_e = gate_i.reshape(b, s * k)                           # (B, S*k)
     flat_g = gate_v.reshape(b, s * k)
 
-    onehot_e = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (B, S*k, E)
-    onehot_e = constrain(onehot_e, P(dp, None, None))
-    pos = jnp.sum((jnp.cumsum(onehot_e, axis=1) - onehot_e) * onehot_e,
-                  axis=-1)                                      # (B, S*k)
+    pos = relational.group_ranks(
+        flat_e, e,
+        constrain=lambda oh: constrain(oh, P(dp, None, None))).ranks
 
     cap = capacity(s, cfg)
     keep = pos < cap

@@ -1,0 +1,183 @@
+"""repro.relational — sort-powered relational kernels.
+
+The hardware-sorting survey (Jalilvand et al., PAPERS.md) treats group-by,
+join, dedup, and min/max search as first-class applications of a hardware
+sorter; Mutlu et al. argue the win is keeping these data-movement-bound
+operators next to the data.  This package is that workload class on top of
+the repo's sort engine: every op is a sort (or radix selection) plus an
+O(n) scan/searchsorted post-pass, described by one frozen
+:class:`~repro.relational.relspec.RelSpec` and executed by ``run``:
+
+    import repro.relational as rel
+
+    rel.unique(x, return_counts=True)        # dedup (np.unique semantics)
+    rel.group_by(keys, vals, agg=("sum", "mean"))
+    rel.join(left_keys, right_keys, size=64) # sorted equi-join
+    rel.run_length_encode(x)                 # sorted-column RLE
+    rel.delta_encode(ids)                    # sorted-column deltas (ints)
+    rel.histogram(x, num_bins=32)
+    rel.quantiles(x, (0.5, 0.99))            # radix-select order statistics
+    rel.group_ranks(expert_ids, num_groups=E)  # MoE dispatch primitive
+
+    rel.unique(x, mesh=mesh, axis_name="data")   # distributed dedup
+    rel.group_by(k, v, agg="sum", mesh=mesh)     # distributed group-by
+
+Validation happens once in ``RelSpec.canonical``; ``method="auto"``
+resolves through ``planner.choose_relational`` with the relational cost
+entries (``cost_model.relational_cost_ns``), so the sorting backend under
+each op is planner-picked per workload.  Distributed variants exist where
+the op composes over the mesh (dedup, group-by): the sample-sort splitter
+round co-locates equal keys, so the local post-pass is the global answer.
+
+Static-shape contract: data-dependent result sizes (unique values, groups,
+join pairs, runs) come back as fixed-size padded arrays + a valid count
+(``jnp.unique(size=...)`` discipline) — see each result NamedTuple.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.relational.relspec import AGGS, OPS, RelSpec  # noqa: F401
+# module handles bound BEFORE the wrapper defs below shadow the submodule
+# names on the package (rel.unique the function vs relational/unique.py)
+from repro.relational import encode as _encode_mod
+from repro.relational import groupby as _groupby_mod
+from repro.relational import join as _join_mod
+from repro.relational import sketch as _sketch_mod
+from repro.relational import unique as _unique_mod
+from repro.relational.encode import (  # noqa: F401
+    Delta, RunLength, delta_decode, rle_decode)
+from repro.relational.groupby import GroupBy, GroupRanks  # noqa: F401
+from repro.relational.join import Join  # noqa: F401
+from repro.relational.sketch import (  # noqa: F401
+    HistogramSketch, QuantileSketch)
+from repro.relational.unique import Unique  # noqa: F401
+
+__all__ = [
+    "RelSpec", "OPS", "AGGS", "run",
+    "unique", "group_by", "join", "run_length_encode", "rle_decode",
+    "delta_encode", "delta_decode", "histogram", "quantiles",
+    "group_ranks",
+    "Unique", "GroupBy", "GroupRanks", "Join", "RunLength", "Delta",
+    "HistogramSketch", "QuantileSketch",
+]
+
+_Arr = jnp.ndarray
+
+
+def run(spec: RelSpec, x: _Arr, values: Optional[_Arr] = None):
+    """Execute ``spec``.  ``x`` is the (key) column; ``values`` is the
+    payload column (group_by) or the right key column (join)."""
+    x = jnp.asarray(x)
+    values = None if values is None else jnp.asarray(values)
+    spec = spec.canonical(x, values)
+    if spec.op == "unique":
+        return _unique_mod.run(spec, x)
+    if spec.op == "group_by":
+        return _groupby_mod.run(spec, x, values)
+    if spec.op == "join":
+        return _join_mod.run(spec, x, values)
+    if spec.op == "rle":
+        return _encode_mod.run_rle(spec, x)
+    if spec.op == "delta":
+        return _encode_mod.run_delta(spec, x)
+    if spec.op == "histogram":
+        return _sketch_mod.run_histogram(spec, x)
+    if spec.op == "quantile":
+        return _sketch_mod.run_quantile(spec, x)
+    return _groupby_mod.run_group_ranks(spec, x)
+
+
+# ---------------------------------------------------------------------------
+# ergonomic wrappers — each builds a spec and runs it
+# ---------------------------------------------------------------------------
+
+def unique(x: _Arr, *, return_inverse: bool = False,
+           return_counts: bool = False, fill_value=None,
+           method: Optional[str] = None, mesh=None,
+           axis_name: Optional[str] = None,
+           interpret: Optional[bool] = None) -> Unique:
+    """Distinct values of a column, ascending (np.unique semantics) —
+    sort, adjacent-diff mask, searchsorted compaction.  With ``mesh`` the
+    sort goes mesh-global (sample-sort) and the same post-pass applies."""
+    return run(RelSpec(op="unique", return_inverse=return_inverse,
+                       return_counts=return_counts, fill_value=fill_value,
+                       method=method, mesh=mesh, axis_name=axis_name,
+                       interpret=interpret), x)
+
+
+def group_by(keys: _Arr, values: _Arr, *,
+             agg: Union[str, Tuple[str, ...]] = "sum", fill_value=None,
+             method: Optional[str] = None, mesh=None,
+             axis_name: Optional[str] = None,
+             interpret: Optional[bool] = None) -> GroupBy:
+    """Aggregate ``values`` per distinct key: segmented sort -> boundary
+    flags -> segment reductions.  ``agg`` is one of (or a tuple from)
+    ``AGGS``; results follow its order in ``.aggregates``."""
+    return run(RelSpec(op="group_by", agg=agg, fill_value=fill_value,
+                       method=method, mesh=mesh, axis_name=axis_name,
+                       interpret=interpret), keys, values)
+
+
+def join(left_keys: _Arr, right_keys: _Arr, *, size: Optional[int] = None,
+         fill_value=None, method: Optional[str] = None,
+         interpret: Optional[bool] = None) -> Join:
+    """Sorted equi-join -> matching (left, right) index pairs, padded to
+    the static ``size`` (default ``n_l * n_r``; pass a real bound for
+    production shapes).  Payload columns follow by gathering through the
+    returned indices."""
+    return run(RelSpec(op="join", size=size, fill_value=fill_value,
+                       method=method, interpret=interpret),
+               left_keys, right_keys)
+
+
+def run_length_encode(x: _Arr, *, assume_sorted: bool = False,
+                      fill_value=None, method: Optional[str] = None,
+                      interpret: Optional[bool] = None) -> RunLength:
+    """Run-length encode the sorted column (sorts first unless
+    ``assume_sorted``); ``rle_decode`` rebuilds it exactly."""
+    return run(RelSpec(op="rle", assume_sorted=assume_sorted,
+                       fill_value=fill_value, method=method,
+                       interpret=interpret), x)
+
+
+def delta_encode(x: _Arr, *, assume_sorted: bool = False,
+                 method: Optional[str] = None,
+                 interpret: Optional[bool] = None) -> Delta:
+    """Delta encode the sorted integer column (modular, bit-exact
+    round-trip via ``delta_decode``)."""
+    return run(RelSpec(op="delta", assume_sorted=assume_sorted,
+                       method=method, interpret=interpret), x)
+
+
+def histogram(x: _Arr, num_bins: int, *, lo=None, hi=None,
+              interpret: Optional[bool] = None) -> HistogramSketch:
+    """Equi-width histogram over [lo, hi] (defaults to the column's
+    range): searchsorted over explicit float32 edges, rightmost bin
+    closed (np.histogram convention)."""
+    return run(RelSpec(op="histogram", num_bins=num_bins, lo=lo, hi=hi,
+                       interpret=interpret), x)
+
+
+def quantiles(x: _Arr, qs, *,
+              interpret: Optional[bool] = None) -> QuantileSketch:
+    """Lower order statistics at fractions ``qs`` via one bottom-k radix
+    selection — no sort; every answer is an element of the column."""
+    return run(RelSpec(op="quantile", qs=qs if isinstance(qs, tuple)
+                       else tuple(qs) if not isinstance(qs, float)
+                       else (qs,), interpret=interpret), x)
+
+
+def group_ranks(keys: _Arr, num_groups: int, *, constrain=None,
+                method: Optional[str] = None,
+                interpret: Optional[bool] = None) -> GroupRanks:
+    """Each element's 0-based arrival rank within its key group plus
+    per-group counts — the counting-sort dispatch primitive MoE routing
+    runs per batch row.  ``constrain`` (optional callable) annotates the
+    one-hot's sharding on the small-domain path."""
+    keys = jnp.asarray(keys)
+    spec = RelSpec(op="group_ranks", num_groups=num_groups, method=method,
+                   interpret=interpret).canonical(keys)
+    return _groupby_mod.run_group_ranks(spec, keys, constrain=constrain)

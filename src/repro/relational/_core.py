@@ -1,0 +1,151 @@
+"""Shared machinery for the relational ops: the sorted post-pass
+primitives, planner resolution, and obs plumbing.
+
+Every op in this package is (sort via the front door) + (an O(n) scan /
+searchsorted post-pass on the sorted column).  The post-passes here are
+scatter-free where possible: compaction uses the cumulative-count
+searchsorted trick (XLA:CPU serializes scatters; a binary-search gather
+vectorizes), mirroring the survivor-compaction idiom in
+``kernels/radix_select.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.relational.relspec import RelSpec, SORT_OPS, STABLE_OPS
+
+
+def boundary_mask(s: jnp.ndarray) -> jnp.ndarray:
+    """(n,) sorted column -> (n,) bool, True where a new value starts.
+
+    Numeric inequality, not encoded-key inequality: the keycodec orders
+    -0.0 strictly below +0.0, but relationally they are ONE value (numpy
+    semantics), so the boundary test must compare decoded values.
+    """
+    n = s.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), bool)
+    return jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]])
+
+
+def compact_sorted(s: jnp.ndarray, mask: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gather the masked (first-of-run) elements of a sorted column to the
+    front WITHOUT a scatter -> (compacted, n_valid, segment_ids).
+
+    ``compacted`` is (n,) with the distinct values ascending in the first
+    ``n_valid`` slots; the tail repeats the maximum value, so the array
+    stays globally non-decreasing (searchsorted-safe — ``inverse`` and the
+    distributed post-pass both rely on this).  ``segment_ids[i]`` is the
+    0-based run id of sorted position i.
+    """
+    n = s.shape[0]
+    csum = jnp.cumsum(mask.astype(jnp.int32))
+    n_valid = csum[-1] if n else jnp.zeros((), jnp.int32)
+    # slot j holds the first sorted position whose cumulative run count
+    # reaches j+1; past the valid prefix searchsorted answers n -> clipped
+    # to the maximum element
+    src = jnp.searchsorted(csum, jnp.arange(1, n + 1, dtype=jnp.int32),
+                           side="left")
+    compacted = s[jnp.clip(src, 0, max(n - 1, 0))]
+    return compacted, n_valid, csum - 1
+
+
+def pad_tail(arr: jnp.ndarray, n_valid: jnp.ndarray, fill) -> jnp.ndarray:
+    """Overwrite slots at index >= n_valid with ``fill`` (no-op fill=None)."""
+    if fill is None:
+        return arr
+    idx = jnp.arange(arr.shape[0], dtype=jnp.int32)
+    return jnp.where(idx < n_valid, arr, jnp.asarray(fill, arr.dtype))
+
+
+# ---------------------------------------------------------------------------
+# planner resolution + obs
+# ---------------------------------------------------------------------------
+
+def resolve_plan(spec: RelSpec, n: int, dtype):
+    """-> (method, plan).  Distributed specs return (None, None): the mesh
+    sort dispatches through ``planner.choose_distributed`` on its own.
+    Explicit methods skip pricing; "auto" goes through the relational cost
+    entries (``planner.choose_relational_cached``)."""
+    if spec.mesh is not None or spec.op not in SORT_OPS:
+        return None, None
+    if spec.method != "auto":
+        return spec.method, None
+    if n == 0:
+        return "xla", None
+    from repro.engine import planner
+    plan = planner.choose_relational_cached(spec.op, n, dtype=dtype)
+    return plan.method, plan
+
+
+def span(spec: RelSpec, n: int):
+    """Obs span for one relational op (no-op object when obs is off),
+    plus the per-op invocation counter."""
+    from repro.obs import trace as _obs
+    sp = _obs.trace(f"relational.{spec.op}", n=n,
+                    method=spec.method, distributed=spec.mesh is not None)
+    if _obs.enabled():
+        from repro.obs import metrics as _m
+        _m.counter(f"relational.{spec.op}").inc()
+    return sp
+
+
+def finish(sp, spec: RelSpec, plan, n: int) -> None:
+    """Pair the fenced span with its relational plan: one
+    ``relational_cost_observation`` event + the
+    ``relational.cost_model_error`` ratio histogram — the same
+    predicted-vs-measured audit the engine keeps for raw sorts
+    (``engine._obs_finish``), in a separate histogram so relational
+    post-pass noise never perturbs the autotuner's refresh signal."""
+    if plan is None or sp.device_ms is None:
+        return
+    predicted = plan.costs.get(plan.method)
+    if not predicted or predicted != predicted or predicted == float("inf"):
+        return
+    from repro.obs import trace as _obs
+    measured_ns = sp.device_ms * 1e6
+    _obs.record_event("relational_cost_observation", op=spec.op, n=n,
+                      method=plan.method, predicted_ns=predicted,
+                      measured_ns=measured_ns,
+                      error=measured_ns / predicted)
+    from repro.obs import metrics as _m
+    _m.histogram("relational.cost_model_error").observe(
+        measured_ns / predicted)
+
+
+def sorted_column(spec: RelSpec, x: jnp.ndarray, method: Optional[str],
+                  values: Optional[jnp.ndarray] = None):
+    """The op's sort backbone: mesh-global sample-sort when the spec is
+    distributed, the planner-picked (or pinned) local backend otherwise.
+    Stable-order ops go through the stable argsort pipeline instead —
+    see ``stable_order``."""
+    import repro.sort as rsort
+    if spec.mesh is not None:
+        if values is not None:
+            return rsort.sort_kv(x, values, mesh=spec.mesh,
+                                 axis_name=spec.axis_name,
+                                 interpret=spec.interpret)
+        return rsort.sort(x, mesh=spec.mesh, axis_name=spec.axis_name,
+                          interpret=spec.interpret)
+    if values is not None:
+        return rsort.sort_kv(x, values, method=method, stable=True,
+                             interpret=spec.interpret)
+    return rsort.sort(x, method=method, interpret=spec.interpret)
+
+
+def stable_order(x: jnp.ndarray, method: Optional[str],
+                 interpret: Optional[bool]) -> jnp.ndarray:
+    """Stable ascending permutation of a 1-D column via the front door
+    (non-stable backends fall back to the engine's stable merge pipeline
+    — exactly what ``cost_model.relational_cost_ns`` prices them at)."""
+    import repro.sort as rsort
+    return rsort.argsort(x, stable=True, method=method, interpret=interpret)
+
+
+__all__ = ["boundary_mask", "compact_sorted", "pad_tail", "resolve_plan",
+           "span", "finish", "sorted_column", "stable_order",
+           "SORT_OPS", "STABLE_OPS"]

@@ -279,3 +279,126 @@ def test_fuzz_topk_lens_kv_payload(case):
         np.asarray(pv),
         np.take_along_axis(np.asarray(payload), np.asarray(ir), -1),
         err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# relational lens: every repro.relational op vs its numpy reference
+# ---------------------------------------------------------------------------
+
+import repro.relational as rel  # noqa: E402
+
+REL_DTYPES = ("float32", "int32", "uint16", "int8")
+# empty-group / dup-heavy / all-equal / signed-zero distributions are the
+# regimes where a compaction or boundary-mask bug would hide
+REL_DISTRIBUTIONS = ("uniform", "dup_heavy", "all_equal", "signed_zero")
+
+
+def _rel_values(seed: int, n: int, dtype_name: str, dist: str):
+    if dist == "signed_zero":
+        if not dtype_name.startswith("float"):
+            dist = "dup_heavy"              # ints have one zero
+        else:
+            rng = np.random.default_rng(seed)
+            x = np.where(rng.random(n) < 0.5, -0.0,
+                         rng.integers(0, 3, n).astype(np.float64))
+            return jnp.asarray(x).astype(jnp.dtype(dtype_name))
+    return _values(seed, (n,), dtype_name, dist)
+
+
+@st.composite
+def rel_cases(draw):
+    return {
+        "seed": draw(st.integers(0, 2**31 - 1)),
+        "n": draw(st.sampled_from([0, 1, 2, 7, 33])),
+        "dtype": draw(st.sampled_from(REL_DTYPES)),
+        "dist": draw(st.sampled_from(REL_DISTRIBUTIONS)),
+    }
+
+
+@given(rel_cases())
+@settings(max_examples=6, deadline=None)
+def test_fuzz_relational_unique_matches_numpy(case):
+    x = np.asarray(_rel_values(case["seed"], case["n"], case["dtype"],
+                               case["dist"]))
+    ref_v, ref_inv, ref_c = np.unique(x, return_inverse=True,
+                                      return_counts=True)
+    u = rel.unique(x, return_inverse=True, return_counts=True)
+    m = int(u.n_unique)
+    msg = f"{case['dtype']}/{case['dist']}/n={case['n']}"
+    assert m == len(ref_v), msg
+    np.testing.assert_array_equal(_f64(u.values[:m]), _f64(ref_v),
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(u.inverse), ref_inv,
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(u.counts[:m]), ref_c,
+                                  err_msg=msg)
+
+
+@given(rel_cases())
+@settings(max_examples=6, deadline=None)
+def test_fuzz_relational_group_by_matches_scatter_reference(case):
+    k = np.asarray(_rel_values(case["seed"], case["n"], case["dtype"],
+                               case["dist"]))
+    v = np.random.default_rng(case["seed"] ^ 0x5EED).integers(
+        0, 50, case["n"]).astype(np.int32)          # the kv payload
+    gb = rel.group_by(k, v, agg=("sum", "min", "max", "count", "mean"))
+    ref_k, inv = np.unique(k, return_inverse=True)
+    g = len(ref_k)
+    msg = f"{case['dtype']}/{case['dist']}/n={case['n']}"
+    assert int(gb.n_groups) == g, msg
+    np.testing.assert_array_equal(_f64(gb.keys[:g]), _f64(ref_k),
+                                  err_msg=msg)
+    rsum = np.zeros(g, np.int64)
+    np.add.at(rsum, inv, v)
+    rmin = np.full(g, np.iinfo(np.int32).max)
+    np.minimum.at(rmin, inv, v)
+    rmax = np.full(g, np.iinfo(np.int32).min)
+    np.maximum.at(rmax, inv, v)
+    rcnt = np.bincount(inv, minlength=g)
+    refs = (rsum.astype(np.int32), rmin, rmax, rcnt,
+            rsum.astype(np.float32)
+            / np.maximum(rcnt, 1).astype(np.float32))
+    for got, want in zip(gb.aggregates, refs):
+        np.testing.assert_array_equal(np.asarray(got[:g]), want[:g]
+                                      if g else want, err_msg=msg)
+
+
+@given(rel_cases())
+@settings(max_examples=6, deadline=None)
+def test_fuzz_relational_join_matches_searchsorted_reference(case):
+    lk = np.asarray(_rel_values(case["seed"], case["n"], case["dtype"],
+                                case["dist"]))
+    rk = np.asarray(_rel_values(case["seed"] ^ 0xA5A5, max(1, case["n"]),
+                                case["dtype"], case["dist"]))
+    j = rel.join(lk, rk)
+    p = int(j.n_pairs)
+    # reference via stable sorts + searchsorted runs (the documented pair
+    # order: ascending key, left input order, right input order)
+    ol = np.argsort(lk, kind="stable")
+    orr = np.argsort(rk, kind="stable")
+    sl, sr = lk[ol], rk[orr]
+    pairs = []
+    for pos, key in enumerate(sl):
+        a, b = np.searchsorted(sr, key, "left"), \
+            np.searchsorted(sr, key, "right")
+        pairs.extend((int(ol[pos]), int(orr[t])) for t in range(a, b))
+    got = list(zip(np.asarray(j.left_idx[:p]).tolist(),
+                   np.asarray(j.right_idx[:p]).tolist()))
+    assert got == pairs, f"{case['dtype']}/{case['dist']}/n={case['n']}"
+
+
+@given(rel_cases())
+@settings(max_examples=6, deadline=None)
+def test_fuzz_relational_rle_and_histogram(case):
+    x = np.asarray(_rel_values(case["seed"], case["n"], case["dtype"],
+                               case["dist"]))
+    msg = f"{case['dtype']}/{case['dist']}/n={case['n']}"
+    r = rel.run_length_encode(x)
+    dec = rel.rle_decode(r.values, r.run_lengths, case["n"])
+    np.testing.assert_array_equal(_f64(dec), _f64(np.sort(x)),
+                                  err_msg=msg)
+    assert int(np.asarray(r.run_lengths).sum()) == case["n"], msg
+    h = rel.histogram(x, 8)
+    ref, _ = np.histogram(x.astype(np.float32),
+                          bins=np.asarray(h.edges))
+    np.testing.assert_array_equal(np.asarray(h.counts), ref, err_msg=msg)

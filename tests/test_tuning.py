@@ -264,7 +264,9 @@ def _obs_on():
     from repro.obs import metrics, trace
     trace.enable()
     metrics.reset()
+    tuning._last_refresh_t = None           # cooldown slate per test
     yield metrics
+    tuning._last_refresh_t = None
     metrics.reset()
     trace.disable()
 
@@ -303,6 +305,68 @@ def test_refresh_on_drift_recalibrates_and_clears(_obs_on, monkeypatch):
     assert calls == {"persist": False, "tile_n": 256}
     assert h.count == 0                     # slate cleared for next window
     assert _obs_on.counter("tuning.refreshes").value == 1
+
+
+def _drift(h, ratio=50.0):
+    for _ in range(tuning.REFRESH_MIN_OBSERVATIONS):
+        h.observe(ratio)
+
+
+def test_refresh_cooldown_rate_limits(_obs_on, monkeypatch):
+    h = _obs_on.histogram("planner.cost_model_error")
+    fresh = dataclasses.replace(tuning.default_profile(),
+                                source="calibrated")
+    calls = []
+    monkeypatch.setattr(planner, "calibrate",
+                        lambda **kw: (calls.append(kw), fresh)[1])
+    clock = {"t": 1000.0}
+
+    _drift(h)
+    assert tuning.refresh_if_stale(persist=False,
+                                   now_fn=lambda: clock["t"]) is fresh
+    assert len(calls) == 1 and h.count == 0
+
+    # drifts again inside the cooldown: refused, evidence kept
+    _drift(h)
+    assert tuning.refresh_if_stale(persist=False,
+                                   now_fn=lambda: clock["t"]) is None
+    assert len(calls) == 1
+    assert h.count == tuning.REFRESH_MIN_OBSERVATIONS    # NOT cleared
+    assert _obs_on.counter(
+        "tuning.refreshes_rate_limited").value == 1
+
+    # clock lapses past the cooldown: the held-back refresh fires
+    clock["t"] += tuning.REFRESH_COOLDOWN_S + 1.0
+    assert tuning.refresh_if_stale(persist=False,
+                                   now_fn=lambda: clock["t"]) is fresh
+    assert len(calls) == 2 and h.count == 0
+    assert _obs_on.counter("tuning.refreshes").value == 2
+
+
+def test_refresh_cooldown_checked_after_signal(_obs_on, monkeypatch):
+    # a healthy in-band signal inside the cooldown is a plain no-op: the
+    # rate-limited counter only counts refreshes that WOULD have fired
+    h = _obs_on.histogram("planner.cost_model_error")
+    monkeypatch.setattr(tuning, "_last_refresh_t", 1000.0)
+    for _ in range(tuning.REFRESH_MIN_OBSERVATIONS):
+        h.observe(1.1)
+    assert tuning.refresh_if_stale(now_fn=lambda: 1001.0) is None
+    assert _obs_on.counter(
+        "tuning.refreshes_rate_limited").value == 0
+
+
+def test_refresh_cooldown_zero_disables(_obs_on, monkeypatch):
+    h = _obs_on.histogram("planner.cost_model_error")
+    fresh = dataclasses.replace(tuning.default_profile(),
+                                source="calibrated")
+    calls = []
+    monkeypatch.setattr(planner, "calibrate",
+                        lambda **kw: (calls.append(kw), fresh)[1])
+    for _ in range(2):
+        _drift(h)
+        assert tuning.refresh_if_stale(persist=False, cooldown_s=0.0,
+                                       now_fn=lambda: 1000.0) is fresh
+    assert len(calls) == 2
 
 
 def test_maybe_refresh_is_gated_by_env(monkeypatch, _obs_on):
