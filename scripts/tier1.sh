@@ -22,6 +22,18 @@ if [[ -n "${TIER1_MULTIDEV:-}" ]]; then
     tests/test_distributed_topk.py tests/test_relational_distributed.py \
     "$@"
 fi
+# TIER1_SPILL=1 runs the out-of-core spill tier by itself: the spill unit
+# suite, the data-pipeline dedup consumers, the spill fuzz lenses, and the
+# suite-wide slow-marked cases (the spill job is CI's home for `-m slow`
+# coverage, so the deselected-by-default tests still run on every push).
+if [[ -n "${TIER1_SPILL:-}" ]]; then
+  python -m pytest -x -q --durations=10 \
+    tests/test_spill.py tests/test_data.py \
+    "tests/test_fuzz_conformance.py::test_fuzz_spill_sort_matches_jnp" \
+    "tests/test_fuzz_conformance.py::test_fuzz_spill_argsort_is_stable" \
+    "$@"
+  exec python -m pytest -x -q --durations=10 -m slow "$@"
+fi
 # TIER1_BENCH=1 appends the perf-trajectory leg after the suite: emit a
 # fresh bench document on the quick probe grid, then enforce the
 # auto-within-factor-of-best invariant (scripts/bench_gate.py) and, when

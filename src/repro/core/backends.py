@@ -398,3 +398,57 @@ class DistributedBackend(SortBackend):
                                                 interpret=interpret)
                          for c in comp])
         return (out & ((1 << idx_bits) - 1)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# spill — out-of-core: chunked device sorts + host-resident k-way merge
+# ---------------------------------------------------------------------------
+
+@register_backend
+class SpillBackend(SortBackend):
+    """Out-of-core spill-to-host tier (``repro.engine.spill``): the input
+    is cut into ``spill_threshold_bytes`` chunks, each chunk sorted on
+    device through the registry (``method="auto"``), sorted runs streamed
+    to host with double-buffered transfers, and a k-way merge-path
+    combines the host-resident runs block by block.
+
+    Never auto-*priced* (``auto_dispatch=False``): the planner routes to
+    it by *feasibility* — any workload whose key bytes exceed the active
+    profile's ``spill_threshold_bytes`` spills, everything below never
+    does — rather than by cost comparison against backends that could not
+    hold the array anyway.  Host-driven and eager-only: under an outer
+    ``jit`` the engine falls back to the on-device merge pipeline.
+
+    The kv path is always stable (stable chunk sorts + run-index tie
+    breaks in both merge stages), so the capability claim is honest for
+    the sweep tests.  No top-k/segmented paths (a dataset-scale top-k
+    wants per-chunk selection + candidate merge — ROADMAP follow-through,
+    not a sort-everything fallback).
+    """
+    name = "spill"
+    # numpy owns the host half (searchsorted cursors, run storage), so the
+    # dtype set is COMPARABLE_DTYPES minus bfloat16
+    capabilities = Capabilities(
+        dtypes=frozenset({"float32", "float16", "int32", "uint32",
+                          "int16", "uint16", "int8", "uint8"}),
+        stable=True, supports_kv=True, supports_topk=False,
+        supports_segments=False, auto_dispatch=False, substrate="host")
+
+    def sort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.engine import spill
+        self.check_dtype(rows.dtype)
+        return spill.sort_rows(rows, descending=descending,
+                               interpret=interpret)
+
+    def sort_kv(self, keys, values, *, descending=False, plan=None,
+                interpret=None):
+        from repro.engine import spill
+        self.check_dtype(keys.dtype)
+        return spill.sort_rows_kv(keys, values, descending=descending,
+                                  interpret=interpret)
+
+    def argsort(self, rows, *, descending=False, plan=None, interpret=None):
+        from repro.engine import spill
+        self.check_dtype(rows.dtype)
+        return spill.argsort_rows(rows, descending=descending,
+                                  interpret=interpret)

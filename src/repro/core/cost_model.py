@@ -316,6 +316,49 @@ def relational_cost_ns(op: str, method: str, n: int, batch: int = 1, *,
     return REL_SORT_COLUMNS.get(op, 1.0) * sort_ns + post
 
 
+def spill_sort_cost_ns(n: int, batch: int = 1, itemsize: int = 4, *,
+                       chunk_bytes: Optional[int] = None,
+                       key_bits: int = 32,
+                       overlap: bool = True,
+                       consts: DeviceSortConstants = None) -> float:
+    """Estimated ns for the out-of-core spill tier (``repro.engine.spill``)
+    over ``batch`` rows of ``n`` elements.
+
+    Three terms, mirroring the paper's accounting that off-chip movement —
+    not compute — dominates once data outgrows the compute unit's memory:
+
+      chunk sorts   ceil(total/chunk) device sorts at the chunk size,
+                    priced at the registry's comparison-sort contract
+      link transfer every element crosses the host<->device link four
+                    times (chunk H2D, run D2H, merge-block H2D, merged
+                    D2H) at ``pcie_per_byte``; with double buffering the
+                    *spill phase's* half overlaps the chunk sorts, so
+                    the overlapped pipeline pays max(sorts, spill-xfer)
+                    instead of their sum
+      host merge    ceil(log2(chunks)) effective fan-in levels of host
+                    cursor partitioning + device block merges at
+                    ``host_merge_level`` per element
+
+    ``chunk_bytes`` defaults to the active profile's
+    ``spill_threshold_bytes`` — the same knob the planner routes on.
+    """
+    c = consts or _tuning.active().constants
+    cb = chunk_bytes if chunk_bytes is not None \
+        else _tuning.active().spill_threshold_bytes
+    chunk = max(1, cb // max(1, itemsize))
+    total = n * batch
+    n_chunks = max(1, -(-total // chunk))
+    per_chunk = device_sort_cost_ns("xla", min(chunk, total), consts=c,
+                                    key_bits=key_bits)
+    sort_ns = n_chunks * per_chunk
+    spill_xfer = 2.0 * total * itemsize * c.pcie_per_byte   # H2D + D2H
+    merge_xfer = 2.0 * total * itemsize * c.pcie_per_byte   # blocks in/out
+    pipeline = max(sort_ns, spill_xfer) if overlap else sort_ns + spill_xfer
+    levels = _log2(n_chunks) if n_chunks > 1 else 0.0
+    merge_ns = c.host_merge_level * total * levels
+    return pipeline + merge_xfer + merge_ns
+
+
 def collective_cost_ns(n_dev: int, m: int, itemsize: int,
                        consts: DeviceSortConstants = None) -> float:
     """Estimated ns for ONE collective round in which every device

@@ -71,6 +71,15 @@ DEFAULT_RUN_LEN = 2048          # engine tile: one VMEM tile on TPU
 DEFAULT_CPU_RUN_LEN = 8192      # host tile: measured jnp sweet spot
 DEFAULT_CAPACITY_SLACK = 1.0    # sample-sort bucket capacity multiplier
 DEFAULT_SELECT_MIN_N = 1024     # auto never picks selection below this n
+# Out-of-core spill tier: arrays whose key payload exceeds this many bytes
+# auto-route to repro.engine.spill (chunked device sorts + host k-way
+# merge).  The default is sized for a ~16 GiB accelerator with headroom
+# for the sort's own scratch (runs + merge ping-pong ~ 4x the input).
+DEFAULT_SPILL_THRESHOLD_BYTES = 4 << 30
+# floor: a chunk must hold at least a handful of elements of the widest
+# key dtype (8 B) for the chunk/merge machinery to be meaningful; tests
+# force tiny thresholds (e.g. 256 B) to exercise many-chunk paths cheaply
+MIN_SPILL_THRESHOLD_BYTES = 64
 
 _VALID_DIGIT_BITS = (1, 2, 4, 8)
 
@@ -115,6 +124,12 @@ class DeviceSortConstants:
     # alpha (launch/latency) + bytes-moved-per-device / bandwidth
     collective_alpha: float = 2_000.0         # ns per collective launch
     collective_per_byte: float = 0.02         # ns/byte (~50 GB/s ICI link)
+    # spill tier (out-of-core): host<->device link bandwidth term and the
+    # host-side k-way merge constant.  0.0625 ns/byte ~ 16 GB/s, a
+    # PCIe-gen4-class x16 link; the merge constant prices one host
+    # cursor-partition + device block-merge pass per element
+    pcie_per_byte: float = 0.0625
+    host_merge_level: float = 8.0
 
 
 class ProfileError(ValueError):
@@ -139,6 +154,7 @@ class TuningProfile:
     run_len: int = DEFAULT_RUN_LEN
     capacity_slack: float = DEFAULT_CAPACITY_SLACK
     select_min_n: int = DEFAULT_SELECT_MIN_N
+    spill_threshold_bytes: int = DEFAULT_SPILL_THRESHOLD_BYTES
     source: str = "default"
     probe_ns: Optional[Dict[str, float]] = None
     sweeps: Optional[Dict[str, Dict[str, float]]] = None
@@ -163,6 +179,11 @@ class TuningProfile:
         if self.select_min_n < 0:
             raise ProfileError(
                 f"select_min_n must be >= 0, got {self.select_min_n}")
+        if self.spill_threshold_bytes < MIN_SPILL_THRESHOLD_BYTES:
+            raise ProfileError(
+                f"spill_threshold_bytes must be >= "
+                f"{MIN_SPILL_THRESHOLD_BYTES}, "
+                f"got {self.spill_threshold_bytes}")
 
     # -- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -348,9 +369,16 @@ def active() -> TuningProfile:
 
 
 def _set(profile: Optional[TuningProfile]) -> None:
-    global _active, _generation
+    global _active, _generation, _last_refresh_t
     _active = profile
     _generation += 1
+    # Installing/resetting a profile starts a fresh refresh epoch: the
+    # drift-refresh cooldown stamp must not leak from one install to the
+    # next (a calibrate in one test would silently suppress drift
+    # refreshes in the next for REFRESH_COOLDOWN_S).  refresh_if_stale
+    # re-stamps *after* its calibrate() returns, so the cooldown it
+    # enforces always refers to the profile it installed.
+    _last_refresh_t = None
 
 
 def set_active(profile: Optional[TuningProfile]) -> None:

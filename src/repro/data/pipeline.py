@@ -66,10 +66,22 @@ class SyntheticLM:
 
     def shard_at(self, step: int, shard: int, n_shards: int
                  ) -> Dict[str, np.ndarray]:
-        """This host's slice of the step's global batch."""
-        g = self.global_batch_at(step)
+        """This host's slice of the step's global batch.
+
+        Shard-layout mistakes are launcher *configuration* errors, so they
+        raise ``ValueError`` with the offending numbers (a bare ``assert``
+        would vanish under ``python -O`` and read as a raw tuple).
+        """
         b = self.cfg.global_batch
-        assert b % n_shards == 0, (b, n_shards)
+        if n_shards < 1 or b % n_shards != 0:
+            raise ValueError(
+                f"global_batch={b} is not divisible into n_shards="
+                f"{n_shards} equal host shards; adjust the dp degree or "
+                f"the batch size")
+        if not 0 <= shard < n_shards:
+            raise ValueError(
+                f"shard index {shard} out of range for n_shards={n_shards}")
+        g = self.global_batch_at(step)
         lo = (b // n_shards) * shard
         hi = lo + b // n_shards
         return {k: v[lo:hi] for k, v in g.items()}
@@ -105,24 +117,88 @@ def row_fingerprints(tokens: np.ndarray) -> np.ndarray:
     return (t * pows).sum(axis=-1, dtype=np.uint32)
 
 
+def _keep_first_distinct(tokens: np.ndarray, group: np.ndarray,
+                         keep: np.ndarray) -> None:
+    """Within one fingerprint group (ascending original positions), mark the
+    first occurrence of each DISTINCT token row.  Fingerprint equality is
+    necessary but not sufficient — two different rows can collide — so a
+    row is only dropped after a full ``np.array_equal`` against a kept
+    member of its group.  Groups are almost always singletons or true
+    duplicates, so the quadratic inner walk touches a handful of rows."""
+    if group.shape[0] == 1:
+        keep[group[0]] = True
+        return
+    kept: list = []
+    for gi in group:
+        gi = int(gi)
+        if not any(np.array_equal(tokens[gi], tokens[kj]) for kj in kept):
+            keep[gi] = True
+            kept.append(gi)
+
+
+def _first_occurrence_mask(tokens: np.ndarray, sorted_groups: np.ndarray,
+                           sorted_pos: np.ndarray) -> np.ndarray:
+    """Keep-mask from a fingerprint column already sorted into groups.
+    ``sorted_groups[i]`` is the group key at sorted rank i and
+    ``sorted_pos[i]`` the row's original position (ascending within a group
+    — the sort must be stable)."""
+    n = sorted_pos.shape[0]
+    keep = np.zeros((n,), bool)
+    bounds = np.flatnonzero(
+        np.r_[True, sorted_groups[1:] != sorted_groups[:-1], True])
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        _keep_first_distinct(tokens, sorted_pos[s:e], keep)
+    return keep
+
+
 def dedup_rows(tokens: np.ndarray) -> np.ndarray:
     """Keep-mask selecting the FIRST occurrence of each distinct token row.
 
     The fingerprint column goes through ``relational.unique`` (sort-based
-    dedup — the subsystem's canonical workload); first-occurrence selection
-    is a scatter-min of positions over the inverse index.
+    dedup — the subsystem's canonical workload) to find candidate duplicate
+    groups; rows inside a group are then verified byte-for-byte before any
+    is dropped.  Fingerprints alone are NOT a dedup key: the uint32 hash
+    collides for crafted (and, at scale, eventually natural) row pairs, and
+    dropping on hash equality alone silently loses data.
     """
     import jax.numpy as jnp
 
     from repro import relational
+    tokens = np.asarray(tokens)
     h = row_fingerprints(tokens)
     n = h.shape[0]
     if n == 0:
         return np.zeros((0,), bool)
     u = relational.unique(jnp.asarray(h), return_inverse=True)
-    pos = jnp.arange(n, dtype=jnp.int32)
-    first = jnp.full((n,), n, jnp.int32).at[u.inverse].min(pos)
-    return np.asarray(first[u.inverse] == pos)
+    inv = np.asarray(u.inverse)
+    order = np.argsort(inv, kind="stable").astype(np.int64)
+    return _first_occurrence_mask(tokens, inv[order], order)
+
+
+def global_dedup(tokens: np.ndarray, *, chunk_bytes: int = None
+                 ) -> np.ndarray:
+    """Dataset-scale first-occurrence keep-mask over the spill tier.
+
+    Same contract as :func:`dedup_rows`, but the fingerprint column is
+    sorted out-of-core (``engine.spill.spill_sort_kv`` carrying original
+    row positions), so only one device-sized chunk of fingerprints is
+    resident at a time — the grouping scales to corpora whose fingerprint
+    column alone exceeds device memory.  The kv spill path is stable, so
+    positions within a fingerprint group come back ascending and the
+    first-occurrence/collision-verification walk is shared with
+    ``dedup_rows``.  ``chunk_bytes`` forces a chunk size (testing); the
+    default comes from the active tuning profile's spill threshold.
+    """
+    from repro.engine import spill
+    tokens = np.asarray(tokens)
+    n = tokens.shape[0]
+    if n == 0:
+        return np.zeros((0,), bool)
+    h = row_fingerprints(tokens)
+    pos = np.arange(n, dtype=np.int32)
+    sh, sp = spill.spill_sort_kv(h, pos, chunk_bytes=chunk_bytes)
+    return _first_occurrence_mask(tokens, np.asarray(sh),
+                                  np.asarray(sp).astype(np.int64))
 
 
 def device_put_batch(batch: Dict[str, np.ndarray], mesh, dp_axes):

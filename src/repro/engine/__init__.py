@@ -17,8 +17,10 @@ single-backend work is delegated through the registry
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import sortspec
@@ -70,6 +72,16 @@ def _obs_finish(sp, op: str, plan: planner.Plan, n: int, batch: int,
     _tuning.maybe_refresh()
 
 
+def _spill_fallback(plan: planner.Plan, x2) -> planner.Plan:
+    """The spill tier is host-driven (blocking D2H, data-dependent merge
+    cursors) and cannot run under an outer ``jit``: for tracer inputs a
+    spill plan degrades to the on-device merge pipeline — the best plan
+    that *can* execute in the trace, at the caller's own memory risk."""
+    if plan.method == "spill" and isinstance(x2, jax.core.Tracer):
+        return dataclasses.replace(plan, method="merge")
+    return plan
+
+
 # ---------------------------------------------------------------------------
 # merge pipeline over rows form — what the "merge" backend executes
 # ---------------------------------------------------------------------------
@@ -114,8 +126,9 @@ def sort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
     """
     x2, lead, ax = _to_rows(x, axis)
     batch, n = x2.shape
-    plan = planner.choose_cached(n, batch, x.dtype, requested=method,
-                                 run_len=run_len)
+    plan = _spill_fallback(
+        planner.choose_cached(n, batch, x.dtype, requested=method,
+                              run_len=run_len), x2)
     sp = _obs.trace("engine.sort", n=n, batch=batch, method=plan.method)
     with sp:
         if plan.method == "merge":
@@ -143,8 +156,9 @@ def sort_kv(keys: jnp.ndarray, values: jnp.ndarray, *, axis: int = -1,
     k2, lead, ax = _to_rows(keys, axis)
     v2, _, _ = _to_rows(values, axis)
     batch, n = k2.shape
-    plan = planner.choose_cached(n, batch, keys.dtype, requested=method,
-                                 run_len=run_len)
+    plan = _spill_fallback(
+        planner.choose_cached(n, batch, keys.dtype, requested=method,
+                              run_len=run_len), k2)
     sp = _obs.trace("engine.sort_kv", n=n, batch=batch, method=plan.method)
     with sp:
         sk = sv = None
@@ -174,8 +188,9 @@ def argsort(x: jnp.ndarray, *, axis: int = -1, descending: bool = False,
     """
     x2, lead, ax = _to_rows(x, axis)
     batch, n = x2.shape
-    plan = planner.choose_cached(n, batch, x.dtype, requested=method,
-                                 run_len=run_len)
+    plan = _spill_fallback(
+        planner.choose_cached(n, batch, x.dtype, requested=method,
+                              run_len=run_len), x2)
     sp = _obs.trace("engine.argsort", n=n, batch=batch, method=plan.method)
     with sp:
         order = None

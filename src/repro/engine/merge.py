@@ -169,14 +169,27 @@ def merge_runs(run_keys: jnp.ndarray, run_vals: Optional[jnp.ndarray] = None,
     return keys, vals.reshape(rows, l)
 
 
+def _pad_value(dtype, descending: bool):
+    """Pad that keeps a sorted run sorted when appended: the top of the
+    dtype's TOTAL order in the merge direction.  For ascending floats that
+    is NaN, not +inf — the sort backends and searchsorted both order NaN
+    after +inf, so an inf sentinel appended after genuine NaNs would leave
+    the padded run unsorted and corrupt every cross-rank.  (Descending
+    runs end at -inf; genuine NaNs sort to the *front*, so the -inf
+    sentinel stays correct.)"""
+    if not descending and jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.nan, dtype)
+    return _runs.sort_sentinel(dtype, descending)
+
+
 def kway_merge(arrays: Sequence[jnp.ndarray], *, descending: bool = False,
                backend: str = "xla",
                interpret: Optional[bool] = None) -> jnp.ndarray:
     """Merge k independently sorted 1-D arrays into one sorted array.
 
     Arrays may have different lengths; each is padded to a common
-    power-of-two run length with the direction's sentinel, and the pad is
-    sliced off the far end of the result.
+    power-of-two run length with the direction's total-order pad, and the
+    pad is sliced off the far end of the result.
     """
     if not arrays:
         raise ValueError("need at least one array")
@@ -185,7 +198,7 @@ def kway_merge(arrays: Sequence[jnp.ndarray], *, descending: bool = False,
     total = sum(a.shape[0] for a in arrays)
     l = _runs.next_pow2(max(a.shape[0] for a in arrays))
     r = _runs.next_pow2(len(arrays))
-    sent = _runs.sort_sentinel(dtype, descending)
+    sent = _pad_value(dtype, descending)
     padded = [jnp.pad(a, (0, l - a.shape[0]), constant_values=sent)
               for a in arrays]
     padded += [jnp.full((l,), sent, dtype)] * (r - len(arrays))
@@ -193,3 +206,53 @@ def kway_merge(arrays: Sequence[jnp.ndarray], *, descending: bool = False,
     merged = merge_runs(stacked, descending=descending, backend=backend,
                         interpret=interpret)
     return merged[0, :total]
+
+
+def kway_merge_kv(keys: Sequence[jnp.ndarray], vals: Sequence[jnp.ndarray],
+                  *, descending: bool = False, backend: str = "xla",
+                  interpret: Optional[bool] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge k independently sorted 1-D (key, payload) arrays.
+
+    The key-only :func:`kway_merge` slices its sentinel padding off the far
+    end of the tournament output — value-identical for keys, but with a
+    payload attached a pad slot from an *earlier* run ties with a genuine
+    sentinel-valued key from a later run, wins on the left-first rule, and
+    displaces the genuine payload past the slice boundary.  So the kv
+    variant runs the tournament on (key, concatenation-position) pairs and
+    drops pad slots by position afterwards: a pad can never shadow a
+    genuine element, whatever its key.  Stable for the ``xla``/``pallas``
+    backends (ties keep array order, i.e. earlier array first).
+
+    Eager-only: the final compaction is a data-dependent boolean gather —
+    fine for the spill tier's host-side merge driver, not jittable.
+    """
+    if not keys or len(keys) != len(vals):
+        raise ValueError("need matching non-empty key/payload array lists")
+    keys = [jnp.ravel(a) for a in keys]
+    vals = [jnp.ravel(v) for v in vals]
+    for a, v in zip(keys, vals):
+        if a.shape != v.shape:
+            raise ValueError(
+                f"key/payload length mismatch: {a.shape} vs {v.shape}")
+    dtype = keys[0].dtype
+    total = sum(a.shape[0] for a in keys)
+    l = _runs.next_pow2(max(1, max(a.shape[0] for a in keys)))
+    r = _runs.next_pow2(len(keys))
+    sent = _pad_value(dtype, descending)
+    pk, pp, off = [], [], 0
+    for a in keys:
+        m = a.shape[0]
+        pk.append(jnp.pad(a, (0, l - m), constant_values=sent))
+        pos = jnp.arange(off, off + m, dtype=jnp.int32)
+        pp.append(jnp.pad(pos, (0, l - m), constant_values=total))
+        off += m
+    pk += [jnp.full((l,), sent, dtype)] * (r - len(keys))
+    pp += [jnp.full((l,), total, jnp.int32)] * (r - len(keys))
+    mk, mp = merge_runs(jnp.stack(pk)[None, :, :], jnp.stack(pp)[None, :, :],
+                        descending=descending, backend=backend,
+                        interpret=interpret)
+    mk, mp = mk[0], mp[0]
+    genuine = mp < total
+    mk, mp = mk[genuine], mp[genuine]
+    return mk, jnp.take(jnp.concatenate(vals), mp)

@@ -97,21 +97,39 @@ def choose(n: int, batch: int = 1, dtype=jnp.float32, *,
                                interpreted=interp))
         for name, be in candidates.items()
     }
+    # out-of-core routing is by *feasibility*, not price: key bytes beyond
+    # the active profile's spill threshold do not fit the device backends'
+    # working set (input + runs + merge ping-pong), so the spill tier is
+    # the only honest plan above it and never a candidate below it.
+    # Top-k stays on the device paths (a dataset-scale top-k wants
+    # per-chunk selection + candidate merge — ROADMAP follow-through).
+    itemsize = jnp.dtype(dtype).itemsize
+    oversized = (k is None
+                 and n * batch * itemsize > prof.spill_threshold_bytes
+                 and sortspec.get_backend("spill").eligible(n, dtype, rl))
+    if k is None and (oversized or requested == "spill"):
+        costs["spill"] = cost_model.spill_sort_cost_ns(
+            n, batch, itemsize, consts=consts)
     if requested == "auto":
-        def _valid(name: str) -> bool:
-            caps = candidates[name].capabilities
-            if not candidates[name].eligible(n, dtype, rl):
-                return False
-            # selection switch-over: below the tuned floor the O(n·passes)
-            # counting constant never beats a tiny sort, and the modeled
-            # crossover is noisy at small n — auto skips selection engines
-            # there (explicit requested="select" is still honoured)
-            if k is not None and caps.selection and n < prof.select_min_n:
-                return False
-            # sort plans need a sorter; top-k plans need a topk path
-            return caps.supports_topk if k is not None else caps.supports_sort
-        valid = [m for m in costs if _valid(m)]
-        method = min(valid, key=costs.__getitem__)
+        if oversized:
+            method = "spill"
+        else:
+            def _valid(name: str) -> bool:
+                caps = candidates[name].capabilities
+                if not candidates[name].eligible(n, dtype, rl):
+                    return False
+                # selection switch-over: below the tuned floor the
+                # O(n·passes) counting constant never beats a tiny sort,
+                # and the modeled crossover is noisy at small n — auto
+                # skips selection engines there (explicit
+                # requested="select" is still honoured)
+                if k is not None and caps.selection and n < prof.select_min_n:
+                    return False
+                # sort plans need a sorter; top-k plans need a topk path
+                return caps.supports_topk if k is not None \
+                    else caps.supports_sort
+            valid = [m for m in costs if _valid(m)]
+            method = min(valid, key=costs.__getitem__)
     else:
         method = requested
     run_method = "pallas" if (on_tpu() and _eligible("pallas", rl, dtype, rl)) \

@@ -1,0 +1,489 @@
+"""Out-of-core spill-to-host sort tier — sorting past device memory.
+
+The paper's thesis is that off-chip data movement, not compute, dominates
+sorting cost; its answer on-chip is the partition/temp-row structure that
+keeps operands next to the compute.  This module is the same structure one
+level up the hierarchy, for arrays that do not fit on the device at all:
+
+    cut     the host-resident input into device-sized chunks
+            (``spill_threshold_bytes`` worth of keys, the same knob the
+            planner auto-routes on),
+    sort    each chunk on device through the existing registry
+            (``repro.engine.sort``, ``method="auto"`` — keycodec, radix,
+            merge pipeline, whatever the planner prices cheapest at the
+            chunk size),
+    spill   sorted runs back to host memory with **double-buffered
+            transfers**: chunk ``i+1``'s H2D + device sort are dispatched
+            (jax's async dispatch returns futures) *before* blocking on
+            chunk ``i``'s D2H, so the link transfer overlaps kernel work,
+    merge   the host-resident runs with a k-way merge-path: exact stable
+            per-run cursors at every output-block boundary (multi-sequence
+            selection by bisection over ``np.searchsorted`` cross-ranks),
+            each block's slices merged on device by the engine's merge
+            tournament (``merge.kway_merge`` / ``kway_merge_kv``).
+
+Results come back as **host** (numpy) arrays — an out-of-core sort that
+ended with one device-resident array would defeat itself.  The engine
+front door (``plan.method == "spill"``) converts back to jnp for API
+symmetry at sizes where that is representable.
+
+Observability (when ``repro.obs`` tracing is on): a ``spill.sort`` span
+over the whole pipeline with per-chunk ``spill.chunk`` child spans and a
+``spill.merge_block`` span per output block; ``spill.h2d_bytes`` /
+``spill.d2h_bytes`` counters for every byte that crosses the link; and a
+``spill.overlap_fraction`` gauge — the fraction of the spill phase's wall
+time NOT spent blocked in D2H waits (1.0 = transfers fully hidden behind
+chunk sorts, 0.0 = fully serial).
+
+An optional wire-compression hook (``codec=``) mirrors the optimizer's
+``grad_compress`` int8 path: sorted float runs are quantized per-run on
+spill and dequantized at merge time.  Quantization is monotonic, so runs
+stay sorted and the result is exactly the sort of the quantized data —
+but it is LOSSY on the key values, so it is opt-in, for
+fidelity-tolerant pipelines (fingerprint streams, score shuffles), never
+part of auto dispatch.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tuning as _tuning
+from repro.engine import merge as _merge
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _obs
+
+__all__ = [
+    "chunk_elems", "spill_sort", "spill_sort_kv", "spill_argsort",
+    "sort_rows", "sort_rows_kv", "argsort_rows",
+]
+
+
+def chunk_elems(itemsize: int, chunk_bytes: Optional[int] = None) -> int:
+    """Elements of a given width per device chunk.  ``chunk_bytes`` defaults
+    to the active profile's ``spill_threshold_bytes`` — the spill tier's
+    chunks are exactly the largest arrays the planner will NOT spill."""
+    cb = chunk_bytes if chunk_bytes is not None \
+        else _tuning.active().spill_threshold_bytes
+    if cb < _tuning.MIN_SPILL_THRESHOLD_BYTES:
+        raise ValueError(
+            f"chunk_bytes must be >= {_tuning.MIN_SPILL_THRESHOLD_BYTES}, "
+            f"got {cb}")
+    return max(2, int(cb) // max(1, int(itemsize)))
+
+
+# ---------------------------------------------------------------------------
+# optional wire compression (grad_compress's int8 scheme, split in two)
+# ---------------------------------------------------------------------------
+
+def _int8_encode(a: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Per-run symmetric int8 quantization — the same scheme as
+    ``repro.optim.grad_compress``'s int8 codec (per-tensor absmax scale),
+    applied per spilled run.  Monotonic, so a sorted run stays sorted."""
+    scale = float(np.max(np.abs(a))) / 127.0 if a.size else 0.0
+    if scale == 0.0 or not np.isfinite(scale):
+        scale = 1.0
+    q = np.clip(np.rint(a.astype(np.float32) / scale), -127, 127)
+    return q.astype(np.int8), scale
+
+
+def _int8_decode(q: np.ndarray, scale: float, dtype) -> np.ndarray:
+    return (q.astype(np.float32) * scale).astype(dtype)
+
+
+class _RunStore:
+    """Host-resident sorted runs, optionally held compressed.
+
+    ``codec=None`` stores raw numpy runs.  ``codec="int8"`` stores each
+    run quantized (4x fewer host bytes for f32 keys) and dequantizes at
+    merge time; the savings land on the ``spill.codec_bytes_saved``
+    counter.  A ``(encode, decode)`` callable pair plugs in custom codecs
+    — ``encode(run) -> (payload, state)``, ``decode(payload, state,
+    dtype) -> run``.
+    """
+
+    def __init__(self, codec, dtype):
+        if codec == "int8" and not np.issubdtype(np.dtype(dtype), np.floating):
+            raise ValueError(
+                f"int8 spill codec quantizes float runs, got {np.dtype(dtype)}")
+        self._codec = codec
+        self._dtype = dtype
+        self._runs: List = []
+
+    def append(self, run: np.ndarray) -> None:
+        if self._codec is None:
+            self._runs.append(run)
+            return
+        if self._codec == "int8":
+            q, scale = _int8_encode(run)
+        else:
+            enc, _ = self._codec
+            q, scale = enc(run)
+        saved = run.nbytes - q.nbytes
+        if saved > 0 and _obs.enabled():
+            _metrics.counter("spill.codec_bytes_saved").inc(saved)
+        self._runs.append((q, scale))
+
+    def materialize(self) -> List[np.ndarray]:
+        if self._codec is None:
+            return self._runs
+        if self._codec == "int8":
+            return [_int8_decode(q, s, self._dtype) for q, s in self._runs]
+        _, dec = self._codec
+        return [dec(q, s, self._dtype) for q, s in self._runs]
+
+    def __len__(self):
+        return len(self._runs)
+
+
+# ---------------------------------------------------------------------------
+# phase 1 — chunk, device-sort, spill (double-buffered)
+# ---------------------------------------------------------------------------
+
+def _spill_phase(keys_np: np.ndarray, vals_np: Optional[np.ndarray],
+                 chunk: int, *, descending: bool, stable: bool, method: str,
+                 overlap: bool, codec, interpret: Optional[bool]
+                 ) -> Tuple[_RunStore, Optional[List[np.ndarray]], float]:
+    """Cut ``keys_np`` (and optional payload) into ``chunk``-element pieces,
+    sort each on device, stream sorted runs back to host.
+
+    ``overlap=True`` is the double-buffered pipeline: chunk ``i+1``'s
+    device_put + sort dispatch happen *before* the blocking D2H of chunk
+    ``i`` — jax's async dispatch makes the sort a future, so the host-side
+    copy of run ``i`` proceeds while the device works on ``i+1``.
+    ``overlap=False`` drains every chunk before touching the next (the
+    bench's comparison baseline).  Returns the run store, payload runs,
+    and the measured overlap fraction of the phase.
+    """
+    from repro import engine
+
+    n = keys_np.shape[0]
+    key_runs = _RunStore(codec, keys_np.dtype)
+    val_runs: Optional[List[np.ndarray]] = None if vals_np is None else []
+    t_begin = time.perf_counter()
+    t_blocked = 0.0
+
+    def _drain(pend) -> None:
+        nonlocal t_blocked
+        sk, sv = pend
+        t0 = time.perf_counter()
+        hk = np.asarray(sk)                      # D2H (blocks until ready)
+        hv = None if sv is None else np.asarray(sv)
+        t_blocked += time.perf_counter() - t0
+        if _obs.enabled():
+            d2h = hk.nbytes + (0 if hv is None else hv.nbytes)
+            _metrics.counter("spill.d2h_bytes").inc(d2h)
+        key_runs.append(hk)
+        if hv is not None:
+            val_runs.append(hv)
+
+    pending = None
+    for start in range(0, n, chunk):
+        stop = min(start + chunk, n)
+        with _obs.trace("spill.chunk", start=start, stop=stop,
+                        method=method):
+            kc = jax.device_put(keys_np[start:stop])     # H2D
+            if _obs.enabled():
+                h2d = kc.nbytes
+            if vals_np is None:
+                sk = engine.sort(kc[None, :], descending=descending,
+                                 method=method, interpret=interpret)[0]
+                sv = None
+            else:
+                vc = jax.device_put(vals_np[start:stop])
+                if _obs.enabled():
+                    h2d += vc.nbytes
+                sk, sv = engine.sort_kv(kc[None, :], vc[None, :],
+                                        descending=descending, stable=stable,
+                                        method=method, interpret=interpret)
+                sk, sv = sk[0], sv[0]
+            if _obs.enabled():
+                _metrics.counter("spill.h2d_bytes").inc(h2d)
+        if overlap:
+            if pending is not None:
+                _drain(pending)                  # overlaps this chunk's sort
+            pending = (sk, sv)
+        else:
+            _drain((sk, sv))                     # fully serial baseline
+    if pending is not None:
+        _drain(pending)
+
+    wall = max(time.perf_counter() - t_begin, 1e-12)
+    frac = max(0.0, 1.0 - t_blocked / wall)
+    if _obs.enabled():
+        _metrics.gauge("spill.overlap_fraction").set(frac)
+    return key_runs, val_runs, frac
+
+
+# ---------------------------------------------------------------------------
+# phase 2 — host k-way merge-path
+# ---------------------------------------------------------------------------
+
+def _count_before(asc: np.ndarray, key, tie_first: bool,
+                  descending: bool) -> int:
+    """How many elements of a sorted run precede ``key`` in merged order.
+
+    ``tie_first=True`` counts equal keys as preceding (the run sits to the
+    *left* of the element's own run in the stable tie order).  ``asc`` is
+    the run's ascending view (descending runs are searched through their
+    reversed view, since ``np.searchsorted`` wants ascending data).
+    """
+    if descending:
+        # preceding = strictly greater (plus ties when tie_first)
+        side = "left" if tie_first else "right"
+        return int(asc.shape[0] - np.searchsorted(asc, key, side=side))
+    side = "right" if tie_first else "left"
+    return int(np.searchsorted(asc, key, side=side))
+
+
+def _stable_rank(runs: Sequence[np.ndarray], asc: Sequence[np.ndarray],
+                 r: int, i: int, descending: bool) -> int:
+    """Exact merged position of element ``runs[r][i]`` under the stable
+    order (ties broken by run index, then in-run index) — the merge-path
+    diagonal one level up, computed with cross-run binary searches."""
+    key = runs[r][i]
+    rank = int(i)
+    for q in range(len(runs)):
+        if q == r:
+            continue
+        rank += _count_before(asc[q], key, tie_first=q < r,
+                              descending=descending)
+    return rank
+
+
+def _cursors_at(runs: Sequence[np.ndarray], asc: Sequence[np.ndarray],
+                d: int, lows: Sequence[int], descending: bool) -> List[int]:
+    """Per-run cursors ``hi`` with ``sum(hi) == d``: ``runs[r][:hi[r]]``
+    are exactly the first ``d`` elements of the stable merged order.
+    ``lows`` (the previous boundary's cursors) bound the bisection."""
+    his = []
+    for r, run in enumerate(runs):
+        lo, hi = int(lows[r]), run.shape[0]
+        # smallest i with stable_rank(r, i) >= d; cursor = that i
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if _stable_rank(runs, asc, r, mid, descending) < d:
+                lo = mid + 1
+            else:
+                hi = mid
+        his.append(lo)
+    return his
+
+
+def _merge_phase(key_runs: Sequence[np.ndarray],
+                 val_runs: Optional[Sequence[np.ndarray]], *,
+                 descending: bool, block: int,
+                 interpret: Optional[bool]
+                 ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """K-way merge-path over host-resident runs, one output block at a time.
+
+    Host side owns the *partition* (stable cursors at each block boundary,
+    ``O(R^2 log^2 L)`` binary searches — noise next to the data movement);
+    the device owns the *merge* of each block's slices through the engine
+    tournament.  Only the current block's slices are device-resident, so
+    peak device footprint stays at chunk scale.
+    """
+    runs = [np.ravel(r) for r in key_runs]
+    total = int(sum(r.shape[0] for r in runs))
+    kv = val_runs is not None
+    if len(runs) == 1:
+        return runs[0], (np.ravel(val_runs[0]) if kv else None)
+    asc = [r[::-1] if descending else r for r in runs]
+    out_k = np.empty((total,), runs[0].dtype)
+    out_v = None
+    if kv:
+        vruns = [np.ravel(v) for v in val_runs]
+        out_v = np.empty((total,), vruns[0].dtype)
+    lows = [0] * len(runs)
+    written = 0
+    bounds = list(range(block, total, block)) + [total]
+    for d in bounds:
+        his = _cursors_at(runs, asc, d, lows, descending)
+        sel = [(r, lo, hi) for r, (lo, hi) in enumerate(zip(lows, his))
+               if hi > lo]
+        with _obs.trace("spill.merge_block", start=written, stop=d,
+                        fan_in=len(sel)):
+            if len(sel) == 1:
+                r, lo, hi = sel[0]
+                mk = runs[r][lo:hi]
+                mv = vruns[r][lo:hi] if kv else None
+            else:
+                kslices = [jnp.asarray(runs[r][lo:hi]) for r, lo, hi in sel]
+                if _obs.enabled():
+                    _metrics.counter("spill.h2d_bytes").inc(
+                        sum(s.nbytes for s in kslices))
+                if kv:
+                    vslices = [jnp.asarray(vruns[r][lo:hi])
+                               for r, lo, hi in sel]
+                    if _obs.enabled():
+                        _metrics.counter("spill.h2d_bytes").inc(
+                            sum(s.nbytes for s in vslices))
+                    dk, dv = _merge.kway_merge_kv(
+                        kslices, vslices, descending=descending,
+                        backend="xla", interpret=interpret)
+                    mk, mv = np.asarray(dk), np.asarray(dv)
+                else:
+                    # keys-only ALSO goes through the kv tournament (with a
+                    # throwaway payload): kway_merge's sentinel padding is
+                    # sliced off positionally, which miscounts when genuine
+                    # NaN keys sort past the +inf pads — the kv variant
+                    # drops pads by position, exact for every key value
+                    dk, _ = _merge.kway_merge_kv(
+                        kslices, [jnp.zeros(s.shape, jnp.int8)
+                                  for s in kslices],
+                        descending=descending, backend="xla",
+                        interpret=interpret)
+                    mk, mv = np.asarray(dk), None
+                if _obs.enabled():
+                    _metrics.counter("spill.d2h_bytes").inc(
+                        mk.nbytes + (0 if mv is None else mv.nbytes))
+        out_k[written:d] = mk
+        if kv:
+            out_v[written:d] = mv
+        written = d
+        lows = his
+    return out_k, out_v
+
+
+# ---------------------------------------------------------------------------
+# public 1-D drivers
+# ---------------------------------------------------------------------------
+
+def _prepare(x) -> np.ndarray:
+    a = np.asarray(x)
+    if a.ndim != 1:
+        raise ValueError(
+            f"spill tier sorts flat 1-D arrays (rows are driven "
+            f"independently by the engine); got a {a.ndim}-d input")
+    return a
+
+
+def _nan_safe_method(keys: np.ndarray, method: str) -> str:
+    """Dataset-scale streams carry NaNs; the min/max-network device
+    backends assume NaN-free floats (registry convention), so when the
+    host-resident input visibly contains NaN, ``auto`` chunk sorts pin to
+    the total-order ``xla`` backend (NaN sorts last, matching the host
+    merge's ``searchsorted`` order).  Explicit methods are honoured."""
+    if (method == "auto" and np.issubdtype(keys.dtype, np.floating)
+            and np.isnan(keys).any()):
+        return "xla"
+    return method
+
+
+def spill_sort(x, *, descending: bool = False,
+               chunk_bytes: Optional[int] = None, method: str = "auto",
+               overlap: bool = True, codec=None,
+               interpret: Optional[bool] = None) -> np.ndarray:
+    """Sort a (host- or device-resident) 1-D array of any size; returns a
+    sorted **host** numpy array.  See the module docstring for the
+    pipeline; ``method`` picks the per-chunk device backend ("auto" =
+    planner), ``codec`` opts into lossy int8 wire compression."""
+    keys = _prepare(x)
+    n = keys.shape[0]
+    if n == 0:
+        return keys.copy()
+    method = _nan_safe_method(keys, method)
+    chunk = chunk_elems(keys.dtype.itemsize, chunk_bytes)
+    n_chunks = -(-n // chunk)
+    with _obs.trace("spill.sort", n=n, chunks=n_chunks, chunk_elems=chunk,
+                    overlap=overlap):
+        key_runs, _, _ = _spill_phase(
+            keys, None, chunk, descending=descending, stable=False,
+            method=method, overlap=overlap, codec=codec, interpret=interpret)
+        out, _ = _merge_phase(key_runs.materialize(), None,
+                              descending=descending, block=chunk,
+                              interpret=interpret)
+    return out
+
+
+def spill_sort_kv(keys, values, *, descending: bool = False,
+                  chunk_bytes: Optional[int] = None, method: str = "auto",
+                  overlap: bool = True, codec=None,
+                  interpret: Optional[bool] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Key-value spill sort (always stable: equal keys keep input order —
+    chunk sorts run the engine's stable pipeline and both merge stages
+    break ties by run index).  ``codec`` compresses the *payload* runs;
+    keys stay exact so the merge order is exact."""
+    k = _prepare(keys)
+    v = _prepare(values)
+    if k.shape != v.shape:
+        raise ValueError(
+            f"values shape {v.shape} must match keys shape {k.shape}")
+    n = k.shape[0]
+    if n == 0:
+        return k.copy(), v.copy()
+    method = _nan_safe_method(k, method)
+    chunk = chunk_elems(k.dtype.itemsize, chunk_bytes)
+    n_chunks = -(-n // chunk)
+    with _obs.trace("spill.sort_kv", n=n, chunks=n_chunks, chunk_elems=chunk,
+                    overlap=overlap):
+        key_runs, val_runs, _ = _spill_phase(
+            k, v, chunk, descending=descending, stable=True, method=method,
+            overlap=overlap, codec=None, interpret=interpret)
+        if codec is not None:
+            store = _RunStore(codec, v.dtype)
+            for vr in val_runs:
+                store.append(vr)
+            val_runs = store.materialize()
+        out_k, out_v = _merge_phase(key_runs.materialize(), val_runs,
+                                    descending=descending, block=chunk,
+                                    interpret=interpret)
+    return out_k, out_v
+
+
+def spill_argsort(x, *, descending: bool = False,
+                  chunk_bytes: Optional[int] = None, method: str = "auto",
+                  overlap: bool = True,
+                  interpret: Optional[bool] = None) -> np.ndarray:
+    """Stable sorting permutation via the kv path (int32 positions)."""
+    keys = _prepare(x)
+    idx = np.arange(keys.shape[0], dtype=np.int32)
+    _, order = spill_sort_kv(keys, idx, descending=descending,
+                             chunk_bytes=chunk_bytes, method=method,
+                             overlap=overlap, interpret=interpret)
+    return order
+
+
+# ---------------------------------------------------------------------------
+# rows-form adapters — what the engine/backend registry dispatches to
+# ---------------------------------------------------------------------------
+
+def sort_rows(x2, *, descending: bool = False,
+              chunk_bytes: Optional[int] = None, method: str = "auto",
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(rows, n) adapter: each row spilled independently.  Returns jnp for
+    engine API symmetry — callers at truly device-impossible sizes use the
+    1-D ``spill_sort`` directly and keep the result on host."""
+    rows = np.asarray(x2)
+    out = np.stack([spill_sort(r, descending=descending,
+                               chunk_bytes=chunk_bytes, method=method,
+                               interpret=interpret) for r in rows])
+    return jnp.asarray(out)
+
+
+def sort_rows_kv(k2, v2, *, descending: bool = False,
+                 chunk_bytes: Optional[int] = None, method: str = "auto",
+                 interpret: Optional[bool] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    ks, vs = np.asarray(k2), np.asarray(v2)
+    outs = [spill_sort_kv(kr, vr, descending=descending,
+                          chunk_bytes=chunk_bytes, method=method,
+                          interpret=interpret)
+            for kr, vr in zip(ks, vs)]
+    return (jnp.asarray(np.stack([o[0] for o in outs])),
+            jnp.asarray(np.stack([o[1] for o in outs])))
+
+
+def argsort_rows(x2, *, descending: bool = False,
+                 chunk_bytes: Optional[int] = None, method: str = "auto",
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    rows = np.asarray(x2)
+    out = np.stack([spill_argsort(r, descending=descending,
+                                  chunk_bytes=chunk_bytes, method=method,
+                                  interpret=interpret) for r in rows])
+    return jnp.asarray(out)

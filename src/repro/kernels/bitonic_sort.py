@@ -128,9 +128,13 @@ def default_block_rows(n: int, itemsize: int, vmem_budget: int = 8 << 20,
                    static_argnames=("descending", "block_rows", "interpret"))
 def sort_blocks(x: jnp.ndarray, *, descending: bool = False,
                 block_rows: Optional[int] = None,
-                interpret: bool = False) -> jnp.ndarray:
+                interpret: Optional[bool] = None) -> jnp.ndarray:
     """Sort each row of (rows, n) in VMEM. n must be a power of two and rows
-    must divide by block_rows (ops.py handles padding/reshaping)."""
+    must divide by block_rows (ops.py handles padding/reshaping).
+    ``interpret=None`` resolves per-platform like every other kernel entry
+    point (interpret mode off-TPU)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     rows, n = x.shape
     br = block_rows or min(rows, default_block_rows(n, x.dtype.itemsize))
     br = max(1, min(br, rows))
@@ -152,8 +156,11 @@ def sort_blocks(x: jnp.ndarray, *, descending: bool = False,
 def sort_kv_blocks(keys: jnp.ndarray, vals: jnp.ndarray, *,
                    descending: bool = False,
                    block_rows: Optional[int] = None,
-                   interpret: bool = False):
-    """Key-value sort of (rows, n) by keys, carrying int32 payloads."""
+                   interpret: Optional[bool] = None):
+    """Key-value sort of (rows, n) by keys, carrying int32 payloads.
+    ``interpret=None`` resolves per-platform (interpret mode off-TPU)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     rows, n = keys.shape
     itemsize = keys.dtype.itemsize + vals.dtype.itemsize
     br = block_rows or min(rows, default_block_rows(n, itemsize))

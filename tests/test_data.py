@@ -1,6 +1,8 @@
-"""Data pipeline determinism + sharding invariance."""
+"""Data pipeline determinism + sharding invariance + dedup correctness."""
 import numpy as np
+import pytest
 
+from repro.data import pipeline
 from repro.data.pipeline import DataConfig, SyntheticLM
 
 
@@ -38,3 +40,67 @@ def test_labels_are_shifted_tokens():
     b = d.global_batch_at(0)
     np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
     assert (b["labels"][:, -1] == -100).all()
+
+
+def test_shard_at_rejects_bad_layouts_with_valueerror():
+    d = SyntheticLM(_cfg())
+    with pytest.raises(ValueError, match="global_batch=8.*n_shards=3"):
+        d.shard_at(0, 0, 3)
+    with pytest.raises(ValueError, match="n_shards"):
+        d.shard_at(0, 0, 0)
+    with pytest.raises(ValueError, match="shard index 4"):
+        d.shard_at(0, 4, 4)
+    with pytest.raises(ValueError, match="shard index -1"):
+        d.shard_at(0, -1, 4)
+
+
+# ---------------------------------------------------------------------------
+# dedup: fingerprint collisions must not lose data
+# ---------------------------------------------------------------------------
+
+def _colliding_rows():
+    """Two DIFFERENT length-2 rows with equal fingerprints: the hash is
+    ``row[0] * 1000003 + row[1] (mod 2^32)``, so [0, 1000003] and [1, 0]
+    both map to 1000003."""
+    return (np.array([0, 1000003], np.int32), np.array([1, 0], np.int32))
+
+
+def test_row_fingerprints_collide_on_crafted_pair():
+    a, b = _colliding_rows()
+    h = pipeline.row_fingerprints(np.stack([a, b]))
+    assert h[0] == h[1]
+    assert not np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("dedup_fn", [
+    pipeline.dedup_rows,
+    lambda t: pipeline.global_dedup(t, chunk_bytes=64),
+], ids=["dedup_rows", "global_dedup"])
+def test_dedup_keeps_both_rows_of_a_fingerprint_collision(dedup_fn):
+    """Regression: dedup used to drop rows on fingerprint equality alone,
+    silently losing one of every colliding pair.  Both colliding rows must
+    survive; genuine duplicates must still be dropped (first kept)."""
+    a, b = _colliding_rows()
+    tokens = np.stack([a, b, a, b, np.array([5, 6], np.int32)])
+    keep = dedup_fn(tokens)
+    np.testing.assert_array_equal(keep, [True, True, False, False, True])
+
+
+def test_global_dedup_matches_dedup_rows_and_brute_force():
+    rng = np.random.default_rng(0)
+    t = rng.integers(0, 4, size=(200, 3)).astype(np.int32)
+    seen, ref = [], np.zeros(len(t), bool)
+    for i, row in enumerate(t):
+        if not any(np.array_equal(row, s) for s in seen):
+            ref[i] = True
+            seen.append(row)
+    np.testing.assert_array_equal(pipeline.dedup_rows(t), ref)
+    # forced tiny chunks: the fingerprint column spills over many runs
+    np.testing.assert_array_equal(
+        pipeline.global_dedup(t, chunk_bytes=128), ref)
+
+
+def test_dedup_empty():
+    empty = np.zeros((0, 4), np.int32)
+    assert pipeline.dedup_rows(empty).shape == (0,)
+    assert pipeline.global_dedup(empty).shape == (0,)

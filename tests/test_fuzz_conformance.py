@@ -282,6 +282,64 @@ def test_fuzz_topk_lens_kv_payload(case):
 
 
 # ---------------------------------------------------------------------------
+# spill lens: the out-of-core tier vs the jnp oracle at forced tiny chunks
+# ---------------------------------------------------------------------------
+
+from repro.engine import spill as _spill  # noqa: E402
+
+# small enough that every fuzzed n spans several chunks (f32: 16 elems),
+# large enough to clear tuning.MIN_SPILL_THRESHOLD_BYTES
+SPILL_CHUNK_BYTES = 64
+SPILL_DTYPES = ("float32", "int32", "uint16", "int8", "float16")
+
+
+@st.composite
+def spill_cases(draw):
+    return {
+        "seed": draw(st.integers(0, 2**31 - 1)),
+        # uneven tails on purpose: primes and off-by-ones around the
+        # 16/32/64-element chunk sizes the forced threshold produces
+        "n": draw(st.sampled_from([1, 15, 16, 17, 33, 100, 257])),
+        "dtype": draw(st.sampled_from(SPILL_DTYPES)),
+        "dist": draw(st.sampled_from(DISTRIBUTIONS)),
+        "descending": draw(st.booleans()),
+    }
+
+
+@given(spill_cases())
+@settings(max_examples=6, deadline=None)
+def test_fuzz_spill_sort_matches_jnp(case):
+    x = _values(case["seed"], (case["n"],), case["dtype"], case["dist"])
+    desc = case["descending"]
+    ref = _f64(jnp.sort(x))
+    if desc:
+        ref = ref[::-1]
+    out = _spill.spill_sort(np.asarray(x), descending=desc,
+                            chunk_bytes=SPILL_CHUNK_BYTES)
+    np.testing.assert_array_equal(
+        _f64(out), ref,
+        err_msg=f"spill/{case['dtype']}/{case['dist']}/n={case['n']}/"
+                f"desc={desc}")
+
+
+@given(spill_cases())
+@settings(max_examples=6, deadline=None)
+def test_fuzz_spill_argsort_is_stable(case):
+    """The kv spill path claims stability: the permutation must be
+    element-exact against the stable jnp.argsort in both directions —
+    across chunk boundaries, where a tie between runs is decided by the
+    host merge's cursor arithmetic rather than one device sort."""
+    x = _values(case["seed"], (case["n"],), case["dtype"], case["dist"])
+    desc = case["descending"]
+    order = _spill.spill_argsort(np.asarray(x), descending=desc,
+                                 chunk_bytes=SPILL_CHUNK_BYTES)
+    np.testing.assert_array_equal(
+        np.asarray(order), _ref_argsort(x, -1, desc),
+        err_msg=f"spill/{case['dtype']}/{case['dist']}/n={case['n']}/"
+                f"desc={desc}")
+
+
+# ---------------------------------------------------------------------------
 # relational lens: every repro.relational op vs its numpy reference
 # ---------------------------------------------------------------------------
 

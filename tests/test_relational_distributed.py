@@ -89,6 +89,7 @@ def test_mesh_spec_validation():
         rel.unique(jnp.zeros(8, bool), mesh=mesh)
 
 
+@pytest.mark.slow          # ~25s: 8-device subprocess restart + suite
 def test_distributed_relational_8dev_subprocess():
     """Forced 8-device run: dedup and group-by agree with the
     single-device ops over uneven, duplicate-heavy, and signed-zero

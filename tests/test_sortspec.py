@@ -39,7 +39,12 @@ def _claimed_dtypes(backend):
         else sorted(COMPARABLE_DTYPES)
 
 
-@pytest.mark.parametrize("name", sorted(sortspec.backend_names()))
+@pytest.mark.parametrize(
+    "name",
+    # the interpret-mode pallas sweep is the suite's slowest single case
+    # (~30s on CPU); it keeps full coverage under ``-m slow``
+    [pytest.param(n, marks=pytest.mark.slow) if n == "pallas" else n
+     for n in sorted(sortspec.backend_names())])
 def test_capabilities_dtype_claims_are_truthful(name):
     backend = sortspec.get_backend(name)
     n = _n_for(backend)

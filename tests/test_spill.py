@@ -1,0 +1,269 @@
+"""Out-of-core spill tier: correctness, routing, and the merge machinery.
+
+The spill tier's contract is bit-exactness with the in-core registry
+reference at any chunking — the chunk size only changes WHERE the work
+happens (device chunks + host merge), never the answer.  Tests force tiny
+chunks so a few hundred elements exercise many runs and every block
+boundary, then diff against ``np.sort`` / stable ``np.argsort``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import tuning
+from repro.engine import planner, spill
+from repro.engine.merge import kway_merge, kway_merge_kv
+
+CHUNK_BYTES = 256                     # 64 f32 elements per device chunk
+
+
+@pytest.fixture(autouse=True)
+def _clean_tuning():
+    tuning.set_active(None)
+    planner.clear_plan_cache()
+    yield
+    tuning.set_active(None)
+    planner.clear_plan_cache()
+
+
+def _keys(n, dtype="float32", seed=0):
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(np.dtype(dtype), np.floating):
+        return rng.standard_normal(n).astype(dtype)
+    info = np.iinfo(dtype)
+    return rng.integers(info.min, info.max, n, dtype=dtype,
+                        endpoint=True)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the in-core reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "int32", "uint16", "float16"])
+@pytest.mark.parametrize("descending", [False, True])
+def test_spill_sort_bit_matches_reference(dtype, descending):
+    n = 4 * spill.chunk_elems(np.dtype(dtype).itemsize, CHUNK_BYTES) + 17
+    x = _keys(n, dtype)
+    out = spill.spill_sort(x, descending=descending, chunk_bytes=CHUNK_BYTES)
+    ref = np.sort(x)
+    if descending:
+        ref = ref[::-1]
+    assert isinstance(out, np.ndarray)
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("descending", [False, True])
+def test_spill_sort_kv_stable_bit_match(descending):
+    # duplicate-heavy keys: stability is the hard part of the contract
+    rng = np.random.default_rng(3)
+    n = 700
+    k = rng.integers(0, 8, n).astype(np.int32)
+    v = np.arange(n, dtype=np.int32)
+    sk, sv = spill.spill_sort_kv(k, v, descending=descending,
+                                 chunk_bytes=CHUNK_BYTES)
+    order = np.argsort(-k.astype(np.int64) if descending else k,
+                       kind="stable")
+    np.testing.assert_array_equal(sk, k[order])
+    np.testing.assert_array_equal(sv, order.astype(np.int32))
+
+
+def test_spill_argsort_is_stable_permutation():
+    rng = np.random.default_rng(11)
+    x = rng.integers(0, 5, 500).astype(np.int32)
+    order = spill.spill_argsort(x, chunk_bytes=CHUNK_BYTES)
+    np.testing.assert_array_equal(order, np.argsort(x, kind="stable"))
+
+
+def test_spill_nan_keys_match_total_order():
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(400).astype(np.float32)
+    x[rng.integers(0, 400, 30)] = np.nan
+    x[rng.integers(0, 400, 10)] = np.inf
+    x[rng.integers(0, 400, 10)] = -np.inf
+    out = spill.spill_sort(x, chunk_bytes=CHUNK_BYTES)
+    np.testing.assert_array_equal(out, np.sort(x))   # NaN last, total order
+    v = np.arange(400, dtype=np.int32)
+    sk, sv = spill.spill_sort_kv(x, v, chunk_bytes=CHUNK_BYTES)
+    np.testing.assert_array_equal(sv, np.argsort(x, kind="stable"))
+
+
+# ---------------------------------------------------------------------------
+# chunk-boundary shapes
+# ---------------------------------------------------------------------------
+
+def test_n_not_multiple_of_chunk():
+    chunk = spill.chunk_elems(4, CHUNK_BYTES)
+    for n in (chunk - 1, chunk + 1, 3 * chunk - 5, 3 * chunk + 5):
+        x = _keys(n, "float32", seed=n)
+        np.testing.assert_array_equal(
+            spill.spill_sort(x, chunk_bytes=CHUNK_BYTES), np.sort(x))
+
+
+def test_n_smaller_than_one_chunk_passthrough():
+    x = _keys(13, "float32")
+    np.testing.assert_array_equal(
+        spill.spill_sort(x, chunk_bytes=CHUNK_BYTES), np.sort(x))
+
+
+def test_empty_input():
+    out = spill.spill_sort(np.empty((0,), np.float32),
+                           chunk_bytes=CHUNK_BYTES)
+    assert out.shape == (0,) and out.dtype == np.float32
+    sk, sv = spill.spill_sort_kv(np.empty((0,), np.int32),
+                                 np.empty((0,), np.int32),
+                                 chunk_bytes=CHUNK_BYTES)
+    assert sk.shape == sv.shape == (0,)
+
+
+def test_overlap_off_is_equal_not_just_close():
+    x = _keys(777, "float32", seed=5)
+    a = spill.spill_sort(x, chunk_bytes=CHUNK_BYTES, overlap=True)
+    b = spill.spill_sort(x, chunk_bytes=CHUNK_BYTES, overlap=False)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_rejects_non_1d_and_bad_chunk():
+    with pytest.raises(ValueError, match="1-D"):
+        spill.spill_sort(np.zeros((2, 3), np.float32))
+    with pytest.raises(ValueError, match="chunk_bytes"):
+        spill.spill_sort(np.zeros((8,), np.float32), chunk_bytes=4)
+    with pytest.raises(ValueError, match="match keys"):
+        spill.spill_sort_kv(np.zeros((4,), np.float32),
+                            np.zeros((5,), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# planner routing + cache invalidation
+# ---------------------------------------------------------------------------
+
+def _install_threshold(threshold):
+    tuning.set_active(dataclasses.replace(
+        tuning.active(), spill_threshold_bytes=threshold))
+
+
+def test_planner_routes_oversized_to_spill():
+    _install_threshold(1024)
+    plan = planner.choose(4096, 1, jnp.float32)
+    assert plan.method == "spill"
+    assert np.isfinite(plan.costs["spill"])
+    assert planner.choose(64, 1, jnp.float32).method != "spill"
+
+
+def test_spill_never_a_candidate_below_threshold():
+    # auto dispatch under the threshold must not even price spill
+    plan = planner.choose(512, 1, jnp.float32)
+    assert plan.method != "spill"
+    assert "spill" not in plan.costs
+
+
+def test_threshold_change_invalidates_cached_plans():
+    assert planner.choose_cached(4096, 1, jnp.float32).method != "spill"
+    _install_threshold(1024)             # bumps the tuning generation
+    assert planner.choose_cached(4096, 1, jnp.float32).method == "spill"
+    tuning.set_active(None)
+    assert planner.choose_cached(4096, 1, jnp.float32).method != "spill"
+
+
+def test_engine_front_door_auto_spills_and_matches():
+    _install_threshold(1024)
+    x = jnp.asarray(_keys(4096, "float32", seed=9))
+    out = engine.sort(x)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+
+
+def test_jit_fallback_swaps_spill_for_merge():
+    _install_threshold(1024)
+    x = jnp.asarray(_keys(4096, "float32", seed=10))
+    out = jax.jit(lambda a: engine.sort(a))(x)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+
+
+def test_spill_backend_registered_with_honest_caps():
+    from repro.core import sortspec
+    caps = sortspec.get_backend("spill").capabilities
+    assert caps.stable and caps.supports_kv
+    assert not caps.supports_topk and not caps.auto_dispatch
+
+
+# ---------------------------------------------------------------------------
+# wire codec
+# ---------------------------------------------------------------------------
+
+def test_int8_codec_output_sorted_and_close():
+    x = _keys(600, "float32", seed=2)
+    out = spill.spill_sort(x, chunk_bytes=CHUNK_BYTES, codec="int8")
+    assert np.all(np.diff(out) >= 0)              # still globally sorted
+    # lossy but bounded by one per-run quantization step
+    step = np.abs(x).max() / 127.0
+    assert np.max(np.abs(out - np.sort(x))) <= 2 * step
+
+
+def test_int8_codec_rejects_int_keys():
+    with pytest.raises(ValueError, match="int8 spill codec"):
+        spill.spill_sort(_keys(64, "int32"), chunk_bytes=CHUNK_BYTES,
+                         codec="int8")
+
+
+def test_kv_codec_compresses_payload_keys_exact():
+    rng = np.random.default_rng(4)
+    k = rng.integers(0, 100, 500).astype(np.int32)
+    v = rng.standard_normal(500).astype(np.float32)
+    sk, sv = spill.spill_sort_kv(k, v, chunk_bytes=CHUNK_BYTES, codec="int8")
+    np.testing.assert_array_equal(sk, np.sort(k))  # keys never quantized
+    order = np.argsort(k, kind="stable")
+    step = np.abs(v).max() / 127.0
+    assert np.max(np.abs(sv - v[order])) <= 2 * step
+
+
+# ---------------------------------------------------------------------------
+# merge padding regressions (NaN / sentinel-valued genuine keys)
+# ---------------------------------------------------------------------------
+
+def test_kway_merge_kv_sentinel_valued_genuine_keys():
+    # genuine int32 max keys tie with the pad sentinel; pads must lose
+    info = np.iinfo(np.int32)
+    a = np.array([1, info.max, info.max], np.int32)
+    b = np.array([0, info.max], np.int32)
+    va = np.array([10, 11, 12], np.int32)
+    vb = np.array([20, 21], np.int32)
+    mk, mv = kway_merge_kv([jnp.asarray(a), jnp.asarray(b)],
+                           [jnp.asarray(va), jnp.asarray(vb)])
+    np.testing.assert_array_equal(
+        np.asarray(mk), [0, 1, info.max, info.max, info.max])
+    np.testing.assert_array_equal(np.asarray(mv), [20, 10, 11, 12, 21])
+
+
+def test_kway_merge_nan_tail_both_directions():
+    a = np.array([1.0, np.inf, np.nan], np.float32)
+    b = np.array([-np.inf, 2.0], np.float32)
+    got = np.asarray(kway_merge([jnp.asarray(a), jnp.asarray(b)]))
+    np.testing.assert_array_equal(got, np.sort(np.concatenate([a, b])))
+    d_a, d_b = a[::-1].copy(), b[::-1].copy()    # descending-sorted inputs
+    got_d = np.asarray(kway_merge([jnp.asarray(d_a), jnp.asarray(d_b)],
+                                  descending=True))
+    np.testing.assert_array_equal(
+        got_d, np.sort(np.concatenate([a, b]))[::-1])
+
+
+# ---------------------------------------------------------------------------
+# observability contract
+# ---------------------------------------------------------------------------
+
+def test_spill_counters_and_overlap_gauge():
+    from repro.obs import metrics, trace
+    trace.enable()
+    metrics.reset()
+    try:
+        x = _keys(600, "float32", seed=6)
+        spill.spill_sort(x, chunk_bytes=CHUNK_BYTES)
+        assert metrics.counter("spill.h2d_bytes").value >= x.nbytes
+        assert metrics.counter("spill.d2h_bytes").value >= x.nbytes
+        frac = metrics.gauge("spill.overlap_fraction").value
+        assert 0.0 <= frac <= 1.0
+    finally:
+        metrics.reset()
+        trace.disable()

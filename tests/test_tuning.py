@@ -247,6 +247,7 @@ def test_calibrate_records_audit_trail():
     assert "digit_bits" not in prof.sweeps
 
 
+@pytest.mark.slow          # ~30s: interpret-mode pallas probe grid
 def test_calibrate_sweeps_digit_bits_with_pallas():
     prof = planner.calibrate(tile_n=128, batch=2, reps=1,
                              include_pallas=True)
@@ -353,6 +354,39 @@ def test_refresh_cooldown_checked_after_signal(_obs_on, monkeypatch):
     assert tuning.refresh_if_stale(now_fn=lambda: 1001.0) is None
     assert _obs_on.counter(
         "tuning.refreshes_rate_limited").value == 0
+
+
+def test_profile_reset_clears_refresh_cooldown(_obs_on, monkeypatch):
+    """Regression: ``_last_refresh_t`` used to survive ``set_active`` —
+    after a profile reset/reinstall the stale stamp rate-limited the first
+    refresh of the NEW profile epoch for a full cooldown, even though the
+    timestamp described a calibration of a profile that no longer exists.
+    Installing or clearing a profile must start a fresh refresh epoch."""
+    h = _obs_on.histogram("planner.cost_model_error")
+    fresh = dataclasses.replace(tuning.default_profile(),
+                                source="calibrated")
+    calls = []
+    monkeypatch.setattr(planner, "calibrate",
+                        lambda **kw: (calls.append(kw),
+                                      tuning.set_active(fresh), fresh)[2])
+    clock = {"t": 1000.0}
+    _drift(h)
+    assert tuning.refresh_if_stale(persist=False,
+                                   now_fn=lambda: clock["t"]) is fresh
+    assert len(calls) == 1
+    # the refresh stamp survives its own calibrate()'s set_active ...
+    assert tuning._last_refresh_t == clock["t"]
+    # ... but an explicit reset/reinstall clears it
+    tuning.set_active(None)
+    assert tuning._last_refresh_t is None
+    # still inside the OLD cooldown window on the fake clock: the fresh
+    # epoch must refresh immediately instead of being rate-limited
+    clock["t"] += 1.0
+    _drift(h)
+    assert tuning.refresh_if_stale(persist=False,
+                                   now_fn=lambda: clock["t"]) is fresh
+    assert len(calls) == 2
+    assert _obs_on.counter("tuning.refreshes_rate_limited").value == 0
 
 
 def test_refresh_cooldown_zero_disables(_obs_on, monkeypatch):
