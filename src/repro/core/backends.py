@@ -310,10 +310,12 @@ class SelectBackend(SortBackend):
 
 @register_backend
 class DistributedBackend(SortBackend):
-    """Mesh-global sorting behind the registry: the single-round
-    sample-sort (engine/samplesort.py) with odd-even transposition as the
-    small-(n, D) fallback, strategy priced by
-    ``planner.choose_distributed``.
+    """Mesh-global sorting behind the registry: the sample-sort
+    (engine/samplesort.py — single-round flat, or the two-level ICI/DCN
+    hierarchical schedule on multi-axis meshes) with odd-even
+    transposition as the small-(n, D) single-axis fallback, strategy
+    priced by ``planner.choose_distributed`` against the active
+    ``core.topology``.
 
     The natural entry is a spec carrying mesh fields —
     ``SortSpec(mesh=..., axis_name=...)`` through ``repro.sort`` — which
@@ -426,11 +428,13 @@ class SpillBackend(SortBackend):
     not a sort-everything fallback).
     """
     name = "spill"
-    # numpy owns the host half (searchsorted cursors, run storage), so the
-    # dtype set is COMPARABLE_DTYPES minus bfloat16
+    # numpy owns the host half (searchsorted cursors, run storage);
+    # bfloat16 — which numpy's comparators don't know — rides the
+    # pipeline as its uint16 keycodec encoding (spill._bf16_encode), so
+    # the full COMPARABLE_DTYPES set is honest
     capabilities = Capabilities(
-        dtypes=frozenset({"float32", "float16", "int32", "uint32",
-                          "int16", "uint16", "int8", "uint8"}),
+        dtypes=frozenset({"float32", "float16", "bfloat16", "int32",
+                          "uint32", "int16", "uint16", "int8", "uint8"}),
         stable=True, supports_kv=True, supports_topk=False,
         supports_segments=False, auto_dispatch=False, substrate="host")
 

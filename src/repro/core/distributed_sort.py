@@ -8,8 +8,9 @@ scale the same structure maps 1:1 onto a device mesh:
     intra-stage parallelism ->  SPMD over the mesh axis
     temp-row exchange       ->  shard exchange over ICI
 
-One entry point, two strategies behind it (``strategy="auto"`` prices them
-with ``planner.choose_distributed``):
+One entry point, three strategies behind it (``strategy="auto"`` prices
+them with ``planner.choose_distributed``, on two-axis meshes against the
+link rates of the mesh's ``core.topology.Topology``):
 
   ``oddeven``  odd-even transposition merge: D rounds of neighbour
                ppermute + bitonic merge-split.  Minimal per-round state,
@@ -25,6 +26,11 @@ with ``planner.choose_distributed``):
                keycodec reduces them all to one ascending unsigned sort),
                so any request odd-even cannot express routes here
                regardless of the cost model.
+  ``hier``     two-level hierarchical sample-sort (same module): intra-host
+               round over the fast inner tier, ONE chunked cross-host
+               exchange over the slow outer tier, intra-host finalize.
+               Needs a two-axis ``(outer, inner)`` mesh; auto picks it
+               when the topology's tier rates say the slow tier dominates.
 
 The odd-even collective cost is one shard (m elements) over ICI per round
 per device pair: ``collective_bytes(D, m) = D * m * itemsize`` per device —
@@ -92,22 +98,25 @@ def _round_permutation(n_dev: int, even_round: bool):
     return perm
 
 
-def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
+def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name=None,
                      local_method: Optional[str] = "xla", *,
                      strategy: str = "auto", descending: bool = False,
                      values: Optional[jnp.ndarray] = None,
                      interpret: Optional[bool] = None):
-    """Globally sort a 1-D array sharded over ``axis_name`` of ``mesh``.
+    """Globally sort a 1-D array sharded over ``axis_name`` of ``mesh`` —
+    one axis name, a tuple of axes, or ``None`` for the whole mesh.
 
     Returns the globally-sorted array with the same sharding (or
     ``(keys, values)`` when a payload rides along).
 
     ``strategy`` is ``"auto"`` (cost-model pick via
-    ``planner.choose_distributed``), ``"sample"`` (single-round
-    sample-sort) or ``"oddeven"`` (D-round transposition merge).  Requests
-    odd-even cannot express — uneven lengths, ``descending``, payloads —
-    always route to sample-sort; forcing ``strategy="oddeven"`` for one of
-    those raises.
+    ``planner.choose_distributed`` — on a two-axis mesh the candidates
+    are priced against the mesh's topology tier rates), ``"sample"``
+    (single-round flat sample-sort), ``"hier"`` (two-level hierarchical
+    sample-sort; needs a two-axis mesh) or ``"oddeven"`` (D-round
+    transposition merge; single-axis only).  Requests odd-even cannot
+    express — uneven lengths, ``descending``, payloads — always route to
+    sample-sort; forcing ``strategy="oddeven"`` for one of those raises.
 
     ``local_method`` accepts every registered backend name including
     ``"merge"`` and ``"auto"`` (or ``None`` for the ambient ``sort_defaults``
@@ -116,22 +125,42 @@ def distributed_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data",
     vocab-scale shard gets tiled run generation + merge tree while a small
     one stays on a single-tile backend.
     """
+    from repro.core import topology as _topology
     from repro.engine import planner, samplesort
-    n_dev = mesh.shape[axis_name]
+    axes = samplesort._axes_tuple(mesh, axis_name)
+    n_dev = samplesort._n_dev(mesh, axes)
+    multi = len(axes) > 1
     n = x.shape[-1]
     needs_sample = bool(descending or values is not None or n % n_dev)
     if strategy == "auto":
-        strategy = "sample" if needs_sample \
-            else planner.choose_distributed_cached(n, n_dev, x.dtype).strategy
-    if strategy not in ("sample", "oddeven"):
+        topo = _topology.for_mesh(mesh, axes) if multi else None
+        plan = planner.choose_distributed_cached(n, n_dev, x.dtype,
+                                                 topology=topo)
+        # odd-even is a single-axis, even-length, ascending, value-only
+        # schedule — drop it from the running when the request (or the
+        # mesh shape) rules it out and take the cheapest remaining
+        usable = {s: c for s, c in plan.costs.items()
+                  if s != "oddeven" or not (needs_sample or multi)}
+        strategy = min(usable, key=usable.__getitem__)
+    if strategy not in ("sample", "oddeven", "hier"):
         raise ValueError(
-            f"strategy must be 'auto', 'sample' or 'oddeven', "
+            f"strategy must be 'auto', 'sample', 'hier' or 'oddeven', "
             f"got {strategy!r}")
-    if strategy == "sample":
-        return samplesort.sample_sort(x, mesh, axis_name, values=values,
+    if strategy == "hier" and len(axes) != 2:
+        raise ValueError(
+            f"strategy='hier' needs a two-axis (outer, inner) mesh; "
+            f"got axes {axes}")
+    if strategy in ("sample", "hier"):
+        return samplesort.sample_sort(x, mesh, axes, values=values,
                                       descending=descending,
                                       local_method=local_method,
+                                      hierarchical=(strategy == "hier"),
                                       interpret=interpret)
+    if multi:
+        raise ValueError(
+            "oddeven transposition runs over ONE mesh axis; pass a single "
+            f"axis name or use strategy='sample'/'hier' (got axes {axes})")
+    axis_name = axes[0]
     if needs_sample:
         raise ValueError(
             "oddeven strategy needs an evenly divisible, ascending, "
@@ -180,11 +209,13 @@ def _oddeven_fn(mesh: Mesh, axis_name: str, local_method: Optional[str],
 
 
 def distributed_topk(x: jnp.ndarray, k: int, mesh: Mesh,
-                     axis_name: str = "data", *,
+                     axis_name=None, *,
                      interpret: Optional[bool] = None):
     """Mesh-global top-k -> ``(values, indices)``, bit-exact with
     ``jax.lax.top_k`` (values descending, ties keep the lowest global
-    index).
+    index).  ``axis_name`` follows ``distributed_sort``: one axis, a
+    tuple, or ``None`` for the whole mesh (the candidate all-gather is
+    tiny, so there is no hierarchical variant to pick).
 
     There is only one strategy here on purpose: selection makes the
     strategy question moot.  Both full-sort strategies move O(m) per

@@ -346,12 +346,11 @@ class SortSpec:
         if axis_name is not None and self.mesh is None:
             raise ValueError("axis_name requires a mesh")
         if self.mesh is not None:
-            if axis_name is None:
-                axis_name = self.mesh.axis_names[0]
-            elif axis_name not in self.mesh.axis_names:
-                raise ValueError(
-                    f"axis_name {axis_name!r} not in mesh axes "
-                    f"{self.mesh.axis_names}")
+            # one axis name, a tuple of axes (hierarchical meshes), or
+            # None -> the whole mesh; normalised to a validated tuple by
+            # the same helper every distributed consumer uses
+            from repro.engine.samplesort import _axes_tuple
+            axis_name = _axes_tuple(self.mesh, axis_name)
             if ndim != 1:
                 raise ValueError(
                     "mesh-distributed specs sort flat 1-D arrays; "

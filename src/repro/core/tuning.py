@@ -71,6 +71,10 @@ DEFAULT_RUN_LEN = 2048          # engine tile: one VMEM tile on TPU
 DEFAULT_CPU_RUN_LEN = 8192      # host tile: measured jnp sweet spot
 DEFAULT_CAPACITY_SLACK = 1.0    # sample-sort bucket capacity multiplier
 DEFAULT_SELECT_MIN_N = 1024     # auto never picks selection below this n
+# k-way merge fan-in: how many sorted runs one merge tournament consumes
+# at a time before cascading (the spill tier's host merge groups runs in
+# fan-in-sized batches; planner.calibrate() sweeps this)
+DEFAULT_MERGE_FANIN = 16
 # Out-of-core spill tier: arrays whose key payload exceeds this many bytes
 # auto-route to repro.engine.spill (chunked device sorts + host k-way
 # merge).  The default is sized for a ~16 GiB accelerator with headroom
@@ -121,9 +125,15 @@ class DeviceSortConstants:
     xla_topk: float = 3.5
     pallas_interpret_penalty: float = 300.0   # CPU interpret-mode multiplier
     # mesh collectives (distributed dispatch): one collective round costs
-    # alpha (launch/latency) + bytes-moved-per-device / bandwidth
+    # alpha (launch/latency) + bytes-moved-per-device / bandwidth.  The
+    # ici pair prices the fast intra-host tier; the dcn pair the ~10x
+    # slower inter-host tier (repro.core.topology derives its default
+    # per-axis link rates from these, and a calibrated Topology overrides
+    # them per mesh axis).
     collective_alpha: float = 2_000.0         # ns per collective launch
     collective_per_byte: float = 0.02         # ns/byte (~50 GB/s ICI link)
+    dcn_alpha: float = 20_000.0               # ns per cross-host launch
+    dcn_per_byte: float = 0.2                 # ns/byte (~5 GB/s DCN link)
     # spill tier (out-of-core): host<->device link bandwidth term and the
     # host-side k-way merge constant.  0.0625 ns/byte ~ 16 GB/s, a
     # PCIe-gen4-class x16 link; the merge constant prices one host
@@ -154,6 +164,7 @@ class TuningProfile:
     run_len: int = DEFAULT_RUN_LEN
     capacity_slack: float = DEFAULT_CAPACITY_SLACK
     select_min_n: int = DEFAULT_SELECT_MIN_N
+    merge_fanin: int = DEFAULT_MERGE_FANIN
     spill_threshold_bytes: int = DEFAULT_SPILL_THRESHOLD_BYTES
     source: str = "default"
     probe_ns: Optional[Dict[str, float]] = None
@@ -179,6 +190,10 @@ class TuningProfile:
         if self.select_min_n < 0:
             raise ProfileError(
                 f"select_min_n must be >= 0, got {self.select_min_n}")
+        if self.merge_fanin < 2:
+            # a 1-way "merge" never terminates the cascade
+            raise ProfileError(
+                f"merge_fanin must be >= 2, got {self.merge_fanin}")
         if self.spill_threshold_bytes < MIN_SPILL_THRESHOLD_BYTES:
             raise ProfileError(
                 f"spill_threshold_bytes must be >= "

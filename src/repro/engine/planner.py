@@ -250,7 +250,7 @@ def choose_relational_cached(op: str, n: int, batch: int = 1,
 
 
 # ---------------------------------------------------------------------------
-# distributed dispatch — sample-sort vs odd-even transposition
+# distributed dispatch — sample-sort vs odd-even vs hierarchical
 # ---------------------------------------------------------------------------
 
 DIST_STRATEGIES = ("sample", "oddeven")
@@ -259,41 +259,88 @@ DIST_STRATEGIES = ("sample", "oddeven")
 @dataclasses.dataclass(frozen=True)
 class DistPlan:
     """Dispatch decision for a mesh-global sort of n over n_dev devices."""
-    strategy: str                # "sample" | "oddeven"
+    strategy: str                # "sample" | "oddeven" | "hier"
     n_dev: int
     costs: Dict[str, float]      # estimated ns per strategy
 
 
-def choose_distributed(n: int, n_dev: int, dtype=jnp.float32) -> DistPlan:
-    """Price both distributed strategies with the collective cost term
-    (``cost_model.collective_cost_ns``) and return the cheaper one.
+def choose_distributed(n: int, n_dev: int, dtype=jnp.float32, *,
+                       topology=None) -> DistPlan:
+    """Price the distributed strategies and return the cheapest one.
 
     Odd-even transposition pays D collective launches but only a bitonic
     merge box per round; sample-sort pays two capacity-padded all-to-alls
     plus one merge-path tree.  Small (n, D) therefore stays on odd-even
     and large workloads cross over to the single-round exchange — the
     mesh-level mirror of the engine's run-length crossover.
+
+    With a two-tier ``topology`` (``core.topology.Topology``, e.g. from
+    ``Topology.for_mesh``) a third candidate joins: the **hierarchical**
+    two-level sample-sort, priced per tier
+    (``cost_model.hierarchical_sort_cost_ns``) while the flat strategies
+    pay the *blended* two-tier link rate
+    (``cost_model.flat_collective_rates`` — a flat exchange sends an
+    ``(outer-1)/outer`` fraction of its traffic over the slow tier).
+    Flat wins on uniform meshes (the hierarchy's extra intra rounds are
+    pure overhead there); hierarchical wins once the slow tier is
+    skewed enough that confining most traffic to the fast tier pays.
     """
     itemsize = jnp.dtype(dtype).itemsize
     consts = constants()
+    hier = topology is not None and topology.is_hierarchical \
+        and len(topology.axes) >= 2
+    if not hier:
+        costs = {
+            s: cost_model.distributed_sort_cost_ns(s, n, n_dev, itemsize,
+                                                   consts=consts)
+            for s in DIST_STRATEGIES
+        }
+        return DistPlan(strategy=min(costs, key=costs.__getitem__),
+                        n_dev=n_dev, costs=costs)
+    if topology.n_devices != n_dev:
+        raise ValueError(
+            f"topology spans {topology.n_devices} devices, the sort "
+            f"plans for {n_dev}")
+    outer = topology.axes[0]
+    innermost = topology.axes[-1]
+    inner_size = n_dev // outer.size
+    ia, ib = innermost.latency_ns, innermost.per_byte_ns
+    da, db = outer.latency_ns, outer.per_byte_ns
+    fa, fb = cost_model.flat_collective_rates(
+        inner_size, outer.size, ici_alpha=ia, ici_per_byte=ib,
+        dcn_alpha=da, dcn_per_byte=db)
     costs = {
         s: cost_model.distributed_sort_cost_ns(s, n, n_dev, itemsize,
-                                               consts=consts)
+                                               consts=consts,
+                                               alpha=fa, per_byte=fb)
         for s in DIST_STRATEGIES
     }
+    costs["hier"] = cost_model.hierarchical_sort_cost_ns(
+        n, inner_size, outer.size, itemsize, consts=consts,
+        ici_alpha=ia, ici_per_byte=ib, dcn_alpha=da, dcn_per_byte=db)
     return DistPlan(strategy=min(costs, key=costs.__getitem__),
                     n_dev=n_dev, costs=costs)
 
 
-def choose_distributed_cached(n: int, n_dev: int,
-                              dtype=jnp.float32) -> DistPlan:
+def choose_distributed_cached(n: int, n_dev: int, dtype=jnp.float32, *,
+                              topology=None) -> DistPlan:
     """``choose_distributed`` memoized alongside the single-device plans —
-    same invalidation rules (calibration state, registry generation)."""
-    key = ("dist", n, n_dev, jnp.dtype(dtype).name, _tuning.generation(),
+    same invalidation rules (calibration state, registry generation) plus
+    the topology generation and *full* per-axis identity, so
+    ``topology.calibrate()`` or swapping the active topology transparently
+    re-plans.  The key carries the link rates, not just the mesh shape:
+    two same-shaped topologies with different tier rates are different
+    pricing problems and must never share a plan."""
+    from repro.core import topology as _topo
+    tsig = None if topology is None else tuple(
+        (a.name, a.size, a.tier, a.bandwidth_bytes_per_s, a.latency_ns)
+        for a in topology.axes)
+    key = ("dist", n, n_dev, jnp.dtype(dtype).name, tsig,
+           _topo.generation(), _tuning.generation(),
            sortspec.registry_generation(), jax.default_backend())
     plan = _PLAN_CACHE.get(key)
     if plan is None:
-        plan = choose_distributed(n, n_dev, dtype)
+        plan = choose_distributed(n, n_dev, dtype, topology=topology)
         _PLAN_CACHE[key] = plan
     return plan
 
@@ -398,6 +445,60 @@ def _sweep_digit_bits(x, reps: int) -> Tuple[int, Dict[str, float]]:
     return best, table
 
 
+def _sweep_radix_tile(x, digit_bits: int, reps: int
+                      ) -> Tuple[int, Dict[str, float]]:
+    """Time the LSD radix kernel at each candidate histogram tile and
+    return the fastest.  Bigger tiles amortise grid launch overhead but
+    grow the per-tile one-hot histogram tensor (tile x (1 << digit_bits))
+    a VMEM partition has to hold — the same partition-size trade §II-B
+    makes when it splits the macro into N/2 CAS blocks."""
+    from repro.core import keycodec
+    from repro.kernels import radix_sort as _rs
+    enc = keycodec.encode(x, descending=False)
+    grid = tuple(t for t in (128, 256, 512) if t <= enc.shape[-1])
+    if not grid:
+        return _tuning.DEFAULT_RADIX_TILE, {}
+    table: Dict[str, float] = {}
+    for t in grid:
+        f = jax.jit(lambda v, t=t: _rs.sort_blocks(
+            v, tile=t, digit_bits=digit_bits))
+        table[f"radix_tile={t}"] = _time_ns(
+            lambda: jax.block_until_ready(f(enc)), reps)
+    best = min(grid, key=lambda t: table[f"radix_tile={t}"])
+    return best, table
+
+
+def _sweep_merge_fanin(tile_n: int, reps: int
+                       ) -> Tuple[int, Dict[str, float]]:
+    """Time the spill tier's grouped merge tournament at each candidate
+    width over 16 chunk-sized runs and return the fastest.
+
+    A wide tournament merges everything in one round but pads every run
+    to a power-of-two level count; narrow rounds launch more merges and
+    move the data log_f(R) times.  The crossover is a device property
+    (launch overhead vs bandwidth), so it is measured here and consumed
+    by ``spill._merge_phase`` via the profile's ``merge_fanin``."""
+    import numpy as np
+    from repro.engine import merge as _merge
+    rng = np.random.default_rng(3)
+    n_runs = 16
+    runs = [jnp.asarray(np.sort(rng.standard_normal(tile_n)
+                                .astype(np.float32)))
+            for _ in range(n_runs)]
+    vals = [jnp.arange(tile_n, dtype=jnp.int32) for _ in range(n_runs)]
+    from repro.engine.spill import _grouped_kway_kv
+    table: Dict[str, float] = {}
+    grid = (2, 4, 8, 16)
+    for fanin in grid:
+        def run(f=fanin):
+            mk, mv = _grouped_kway_kv(list(runs), list(vals), f,
+                                      descending=False, interpret=None)
+            jax.block_until_ready((mk, mv))
+        table[f"merge_fanin={fanin}"] = _time_ns(run, reps)
+    best = min(grid, key=lambda f: table[f"merge_fanin={f}"])
+    return best, table
+
+
 def _sweep_run_len(tile_n: int, batch: int, reps: int
                    ) -> Tuple[Optional[int], Dict[str, float]]:
     """Time the full engine pipeline (run generation + merge tree) over a
@@ -499,10 +600,13 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
          merge, radix, select, native top-k) to the measurements, exactly
          the closed-form inversion the paper does from Table I/II to ns.
       3. **sweep** (``sweep_params=True``) — measure the discrete knobs:
-         radix ``digit_bits`` in {4, 8} (kernel paths only), the engine
-         ``run_len`` grid, and the sample-sort ``capacity_slack`` (multi-
+         radix ``digit_bits`` in {4, 8} and the histogram ``radix_tile``
+         in {128, 256, 512} (kernel paths only), the engine ``run_len``
+         grid, the spill tier's ``merge_fanin`` tournament width in
+         {2, 4, 8, 16}, and the sample-sort ``capacity_slack`` (multi-
          device only); fit the selection switch-over from the measured
-         constants.
+         constants.  Every sweep's raw timing table rides the profile's
+         ``sweeps`` audit dict.
       4. **install** — ``tuning.set_active`` swaps the profile in (every
          cached plan dies via the generation counter); ``persist=True``
          writes the schema-versioned JSON (``path`` or the profile cache)
@@ -540,14 +644,20 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
     defaults = _tuning.default_profile()
     digit_bits, tile = defaults.digit_bits, defaults.radix_tile
     run_len, slack = defaults.run_len, defaults.capacity_slack
+    merge_fanin = defaults.merge_fanin
     sweeps: Dict[str, Dict[str, float]] = {}
     if sweep_params:
         if include_pallas:
             digit_bits, tbl = _sweep_digit_bits(x, reps)
             sweeps["digit_bits"] = tbl
+            tile, tbl = _sweep_radix_tile(x, digit_bits, reps)
+            if tbl:
+                sweeps["radix_tile"] = tbl
         rl, tbl = _sweep_run_len(tile_n, batch, reps)
         if rl is not None:
             run_len, sweeps["run_len"] = rl, tbl
+        merge_fanin, tbl = _sweep_merge_fanin(tile_n, reps)
+        sweeps["merge_fanin"] = tbl
         sl, tbl = _sweep_capacity_slack(reps)
         if sl is not None:
             slack, sweeps["capacity_slack"] = sl, tbl
@@ -616,6 +726,7 @@ def calibrate(tile_n: int = 2048, batch: int = 64, reps: int = 3, *,
         run_len=run_len,
         capacity_slack=slack,
         select_min_n=select_min_n,
+        merge_fanin=merge_fanin,
         source="calibrated",
         probe_ns=probe_ns,
         sweeps=sweeps or None,

@@ -1,44 +1,49 @@
-"""Single-round distributed sample-sort — splitters instead of D rounds.
+"""Distributed sample-sort over an explicit device topology.
 
 ``core/distributed_sort.py``'s odd-even transposition moves every shard D
-times over ICI: D neighbour-exchange rounds, each paying one shard of
-traffic plus a 2m-wide bitonic merge box.  That is exactly the repeated
-cross-partition movement the paper eliminates inside one SRAM macro (§II-B
-partitions sort concurrently and pay only the Eq. 3-4 temp-row cycles to
-exchange operands once per stage).  This module is the cluster-scale
-analogue of that single-exchange structure:
+times over the interconnect.  This module is the cluster-scale analogue of
+the paper's single-exchange structure (§II-B: partitions sort concurrently
+and pay the Eq. 3-4 temp-row cycles to exchange operands once per stage):
+local sort -> splitters -> ONE capacity-padded bucket all-to-all -> merge ->
+rank-directed rebalance.
 
-  1. **local sort** — each device sorts its shard through the registered
-     backend stack (``repro.sort``, planner-dispatched), the §II-B
-     "partitions sort concurrently" step;
-  2. **splitters** — every shard contributes s regular samples; one tiny
-     all-gather + sort yields D-1 global splitters;
-  3. **partition** — each sorted shard is cut against the splitters into D
-     buckets (bucket d holds the keys destined for device d).  The bucket
-     histogram can run on the same per-tile one-hot digit-histogram kernel
-     the LSD radix sort uses (``kernels/radix_sort.py``) — the splitter
-     interval index plays the digit;
-  4. **exchange** — ONE all-to-all moves every bucket to its owner (the
-     temp-row operand exchange, paid once instead of D times);
-  5. **merge** — each device merges its received runs with the merge-path
-     tree (``engine/merge.py``), then a rank-directed rebalance restores
-     equal m-element shards so the concatenation over the mesh axis is the
-     globally sorted array.
+PR 10 reworks the exchange onto ``engine/collectives.py`` and a two-level
+**hierarchical** mode for meshes whose axes span two interconnect tiers
+(fast intra-host ICI, ~10x slower inter-host DCN — ``core/topology.py``):
 
-The all-to-all needs one static per-(source, destination) bucket capacity.
-``m`` is always safe (a source bucket can never exceed its shard) but
-inflates the exchange and merge D-fold, so the sort runs **two phases**:
-phase 1 (local sort + splitters + bucket bounds) comes back to the host,
-the *measured* maximum bucket count sets the capacity, and phase 2
-(exchange + merge + rebalance) runs with buffers sized to what the data
-actually needs — with regular sampling that is ~m/D per pair, not m.  The
-only cost is one tiny host sync of the (D, D) bound table between two
-cached jitted programs.
+  flat (one tier, the degenerate case)
+      local sort -> global splitters -> one all-to-all over ALL mesh axes
+      -> merge -> global rebalance.  Every element crosses the slow tier
+      inside one big exchange.
+
+  hierarchical (two tiers, ``axes = (outer=DCN, inner=ICI)``)
+      1. local sort + **intra-host** splitters            (phase 1)
+      2. ICI bucket exchange + merge + intra-host rebalance,
+         then **outer** splitters over the host-sorted shards (phase 2)
+      3. DCN bucket exchange — chunked/pipelined, optional int8 wire
+         codec on the payload — + merge + compaction, then per-host
+         sub-splitters over the received pool                (phase 3)
+      4. ICI finalize exchange + merge + **global** rebalance (phase 4)
+
+    The second ICI round (phase 4) is load-bearing: after the DCN round,
+    host g holds exactly the keys of global range g, but spread over its
+    devices with *no* inter-device order — each device received only from
+    its same-inner-position peers.  One more intra-host splitter round
+    restores a total order before the rank arithmetic of the rebalance.
+
+Both modes live behind the same ``sample_sort`` entry; ``axis_name`` may
+be one mesh axis, a tuple of axes, or ``None`` for all of them, and
+``hierarchical=None`` auto-selects the two-level path on two-axis meshes.
+
+The all-to-alls need static per-(source, destination) bucket capacities;
+each phase boundary syncs the measured bucket maximum to the host and the
+next jitted program is compiled at that capacity (with the tuning
+profile's slack so nearby workloads share executables).
 
 Everything runs on **encoded keys** (``core/keycodec.py``): signed ints,
 floats and ``descending`` all reduce to one ascending unsigned sort, and
-key-value payloads ride the same buckets.  Uneven global lengths are padded
-to D*m with the maximal encoded key and tracked with explicit validity
+key-value payloads ride the same buckets.  Uneven global lengths are
+padded with the maximal encoded key and tracked with explicit validity
 counts end to end — pads can tie genuine extreme keys, so no step ever
 infers validity from a sentinel comparison.
 
@@ -49,7 +54,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +63,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import keycodec
 from repro.core import tuning as _tuning
+from repro.engine import collectives as coll
 from repro.engine.merge import merge_runs
 from repro.obs import metrics, trace as _obs
 
@@ -69,6 +75,8 @@ except AttributeError:
 __all__ = ["sample_sort", "sample_topk", "select_splitters", "bucket_bounds",
            "default_samples_per_shard", "alltoall_bytes_per_device",
            "topk_candidate_bytes_per_device"]
+
+AxisArg = Union[str, Tuple[str, ...], None]
 
 
 def next_pow2(n: int) -> int:
@@ -135,13 +143,6 @@ def bucket_bounds(ks: jnp.ndarray, splitters: jnp.ndarray, *,
                             jnp.cumsum(counts).astype(jnp.int32)])
 
 
-def _all_to_all(v: jnp.ndarray, axis_name: str) -> jnp.ndarray:
-    """(D, ...) -> (D, ...): row j of the result is what device j held in
-    row ``my`` — the single bucket-exchange collective."""
-    return jax.lax.all_to_all(v, axis_name, split_axis=0, concat_axis=0,
-                              tiled=True)
-
-
 def _smap(f, mesh, in_specs, out_specs):
     # replication checking has no rule for pallas_call (the histogram
     # kernel and any Pallas local sort), so it is disabled; every output
@@ -155,25 +156,201 @@ def _smap(f, mesh, in_specs, out_specs):
 
 
 # ---------------------------------------------------------------------------
+# axis plumbing: one axis, a tuple of axes, or the whole mesh
+# ---------------------------------------------------------------------------
+
+def _axes_tuple(mesh: Mesh, axis_name: AxisArg) -> Tuple[str, ...]:
+    """Normalise ``axis_name`` to a validated tuple of mesh axis names
+    (``None`` -> every mesh axis, in mesh order)."""
+    if axis_name is None:
+        axes = tuple(mesh.axis_names)
+    elif isinstance(axis_name, str):
+        axes = (axis_name,)
+    else:
+        axes = tuple(axis_name)
+    if not axes:
+        raise ValueError("axis_name must name at least one mesh axis")
+    for a in axes:
+        if not isinstance(a, str):
+            raise TypeError(f"axis names must be strings, got {a!r}")
+        if a not in mesh.axis_names:
+            raise ValueError(f"axis {a!r} not in mesh axes "
+                             f"{tuple(mesh.axis_names)}")
+    if len(set(axes)) != len(axes):
+        raise ValueError(f"duplicate axis names in {axes}")
+    return axes
+
+
+def _n_dev(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    d = 1
+    for a in axes:
+        d *= int(mesh.shape[a])
+    return d
+
+
+def _coll_axis(axes: Tuple[str, ...]):
+    """The collective axis argument: a bare name for one axis, the tuple
+    for several (row-major / outer-axis-major device order)."""
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _lin_index(mesh: Mesh, axes: Tuple[str, ...]) -> jnp.ndarray:
+    """Traced linear device index, row-major over ``axes`` — matches the
+    device order of tuple-axis collectives."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * int(mesh.shape[a]) + jax.lax.axis_index(a)
+    return idx.astype(jnp.int32)
+
+
+def _pick_merge_backend(run_len: int) -> str:
+    """Default merge backend for runs of ``run_len`` slots (the same rule
+    the flat path always used, parameterised so each hierarchical phase
+    picks for its own capacity)."""
+    from repro.kernels.merge_path import DEFAULT_CHUNK
+    if jax.default_backend() == "tpu" and (2 * run_len) % DEFAULT_CHUNK == 0:
+        return "pallas"             # the merge-path VMEM kernel
+    if run_len & (run_len - 1) == 0:
+        # off-TPU the gather-bound rank merge loses badly to the
+        # word-parallel min/max box (capacities are pow2-rounded, so this
+        # is the interpret-mode default)
+        return "bitonic"
+    return "xla"
+
+
+# ---------------------------------------------------------------------------
+# shared traced building blocks (run inside the jitted shard_map programs)
+# ---------------------------------------------------------------------------
+
+def _exchange_merge(ks, vs, starts, vcnt, coll_axis, p, local_len, c,
+                    maxkey, merge_backend, interpret, *,
+                    chunks: int = 1, wire_codec: Optional[str] = None):
+    """One bucket exchange round over ``coll_axis`` (fan-out ``p``) plus
+    the merge of the received runs.
+
+    ``ks`` is a sorted local pool of ``local_len`` slots cut into ``p``
+    buckets by ``starts``/``vcnt`` (genuine-key counts).  Send buffers are
+    capacity-``c`` padded with ``maxkey``; with ``chunks > 1`` the
+    exchange is issued as that many collectives over contiguous bucket
+    slices (``collectives.chunked_all_to_all``) so the receiver merges
+    ``p * chunks`` shorter runs and the early merge levels overlap the
+    in-flight tail of a slow-tier transfer.  ``wire_codec='int8'`` sends
+    the *payload* buckets through the lossy grad_compress codec (keys
+    always travel wide).
+
+    Returns ``(mk, mv, mvalid, recv_cnt)``: merged keys (length
+    ``next_pow2(p * chunks) * (c // chunks)``), merged payload (or None),
+    per-slot validity recovered through the merge's position payload, and
+    the (p,) genuine-key counts received from each source.
+    """
+    idx = starts[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    within = jnp.arange(c, dtype=jnp.int32)[None, :] < vcnt[:, None]
+    src = jnp.clip(idx, 0, local_len - 1)
+    sendk = jnp.where(within, ks[src], maxkey)
+    recvk = coll.chunked_all_to_all(sendk, coll_axis, chunks=chunks)
+    recv_cnt = coll.all_to_all(vcnt[:, None], coll_axis)[:, 0]   # (p,)
+
+    cp = c // chunks
+    n_runs = p * chunks
+    r_runs = next_pow2(n_runs)
+    runs = recvk.reshape(n_runs, cp)
+    if r_runs != n_runs:
+        runs = jnp.concatenate(
+            [runs, jnp.full((r_runs - n_runs, cp), maxkey, runs.dtype)])
+    # one int32 position payload rides the merge; validity flags (and the
+    # user payload) are recovered by gathering through it, so ties between
+    # capacity fill and genuine max keys cannot corrupt anything
+    pos = jnp.arange(r_runs * cp, dtype=jnp.int32).reshape(1, r_runs, cp)
+    mk, mpos = merge_runs(runs[None], pos, descending=False,
+                          backend=merge_backend, interpret=interpret)
+    mk, mpos = mk[0], mpos[0]                                    # (R*cp,)
+
+    # valid slots are a prefix of each *bucket*; slice i of bucket j holds
+    # clip(cnt_j - i*cp, 0, cp) of them
+    piece_valid = jnp.clip(
+        recv_cnt[:, None] - jnp.arange(chunks, dtype=jnp.int32)[None, :] * cp,
+        0, cp)                                                   # (p, chunks)
+    run_valid = (jnp.arange(cp, dtype=jnp.int32)[None, :]
+                 < piece_valid.reshape(-1)[:, None])             # (n_runs, cp)
+    if r_runs != n_runs:
+        run_valid = jnp.concatenate(
+            [run_valid, jnp.zeros((r_runs - n_runs, cp), bool)])
+    mvalid = run_valid.reshape(-1)[mpos]
+
+    mv = None
+    if vs is not None:
+        sendv = jnp.where(within, vs[src], jnp.zeros((), vs.dtype))
+        if wire_codec == "int8":
+            q, scale = coll.wire_encode_int8(sendv)
+            rq = coll.chunked_all_to_all(q, coll_axis, chunks=chunks)
+            rs = coll.all_to_all(scale, coll_axis)
+            recvv = coll.wire_decode_int8(rq.reshape(p, c), rs, vs.dtype)
+        else:
+            recvv = coll.chunked_all_to_all(sendv, coll_axis,
+                                            chunks=chunks).reshape(p, c)
+        vflat = recvv.reshape(-1)
+        if r_runs != n_runs:
+            vflat = jnp.concatenate(
+                [vflat, jnp.zeros(((r_runs - n_runs) * cp,), vflat.dtype)])
+        mv = vflat[mpos]
+    return mk, mv, mvalid, recv_cnt
+
+
+def _rebalance(mk, mv, mvalid, recv_cnt, coll_axis, group, m, my):
+    """Rank-directed rebalance of a merged pool back to equal ``m``-slot
+    shards over ``group`` devices: rank r lives at slot ``r % m`` of
+    device ``r // m`` (``my`` is this device's rank-order index within
+    the group, matching ``coll_axis``'s device order).  Exactly one
+    device owns each slot, so the receive reduction is a plain sum over
+    sources (dtype pinned — accumulating zeros is exact, but sum would
+    promote narrow ints).  Tail slots past the group's valid count come
+    back ZERO, not maxkey — callers that feed the shard into another
+    search round must refill them."""
+    n_slots = group * m
+    c_my = jnp.sum(recv_cnt).astype(jnp.int32)
+    counts_all = jax.lax.all_gather(c_my, coll_axis).reshape(-1)  # (group,)
+    offset = jnp.sum(jnp.where(jnp.arange(group) < my, counts_all, 0))
+    lrank = jnp.cumsum(mvalid.astype(jnp.int32)) - 1
+    grank = offset + lrank
+    flat = jnp.where(mvalid, grank, n_slots)                  # OOB -> drop
+    outk = jnp.zeros((n_slots,), mk.dtype).at[flat].set(
+        mk, mode="drop").reshape(group, m)
+    shard_k = jnp.sum(coll.all_to_all(outk, coll_axis), axis=0,
+                      dtype=mk.dtype)
+    shard_v = None
+    if mv is not None:
+        outv = jnp.zeros((n_slots,), mv.dtype).at[flat].set(
+            mv, mode="drop").reshape(group, m)
+        shard_v = jnp.sum(coll.all_to_all(outv, coll_axis), axis=0,
+                          dtype=mv.dtype)
+    return shard_k, shard_v
+
+
+# ---------------------------------------------------------------------------
 # phase 1: local sort + splitters + bucket bounds
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=128)
-def _phase1(mesh: Mesh, axis_name: str, n: int, kv: bool, padded: bool,
-            local_method: Optional[str], s: int, use_histogram: bool,
-            interpret: Optional[bool]):
-    """Jitted program: encoded shard -> (sorted shard[, payload], bounds).
+def _phase1(mesh: Mesh, axes: Tuple[str, ...], part_axes: Tuple[str, ...],
+            n: int, kv: bool, padded: bool, local_method: Optional[str],
+            s: int, use_histogram: bool, interpret: Optional[bool]):
+    """Jitted program: encoded shard -> (sorted shard[, payload], starts,
+    vcnt).  ``axes`` is the full sharding (validity follows the linear
+    device index over it); ``part_axes`` is the group the splitters
+    partition over — all of ``axes`` for the flat path, the inner axis
+    only for the hierarchical first round.
 
     Cached on its statics so repeated serving-shape calls hit the compiled
     executable; the mesh participates in the key (jax meshes hash).
     """
-    n_dev = mesh.shape[axis_name]
+    n_dev = _n_dev(mesh, axes)
+    p = _n_dev(mesh, part_axes)
     m = -(-n // n_dev)
 
     def local(*args):
         xs = args[0]
         vs = args[1] if kv else None
-        my = jax.lax.axis_index(axis_name)
+        my = _lin_index(mesh, axes)
         # valid = not an end-of-array pad; pads all live on the tail shards
         n_valid = jnp.clip(n - my * m, 0, m).astype(jnp.int32)
 
@@ -193,10 +370,11 @@ def _phase1(mesh: Mesh, axis_name: str, n: int, kv: bool, padded: bool,
         else:
             ks = _front.sort(xs, method=local_method, interpret=interpret)
 
-        # regular samples -> pooled splitters (one tiny all-gather)
+        # regular samples -> pooled splitters (one tiny all-gather over
+        # the partition group)
         sample_pos = ((jnp.arange(s) + 1) * m) // (s + 1)
-        samples = jax.lax.all_gather(ks[sample_pos], axis_name)
-        splitters = select_splitters(samples, n_dev)
+        samples = jax.lax.all_gather(ks[sample_pos], _coll_axis(part_axes))
+        splitters = select_splitters(samples, p)
 
         bounds = bucket_bounds(ks, splitters, use_histogram=use_histogram,
                                interpret=interpret)
@@ -209,7 +387,7 @@ def _phase1(mesh: Mesh, axis_name: str, n: int, kv: bool, padded: bool,
             return ks, vs, starts, vcnt
         return ks, starts, vcnt
 
-    spec = P(axis_name)
+    spec = P(axes)
     n_out = 4 if kv else 3
     fn = _smap(local, mesh, (spec, spec) if kv else (spec,),
                (spec,) * n_out)
@@ -217,21 +395,22 @@ def _phase1(mesh: Mesh, axis_name: str, n: int, kv: bool, padded: bool,
 
 
 # ---------------------------------------------------------------------------
-# phase 2: bucket exchange + merge-path merge + rank rebalance
+# flat phase 2: bucket exchange + merge-path merge + rank rebalance
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=128)
-def _phase2(mesh: Mesh, axis_name: str, n: int, kv: bool, capacity: int,
-            key_dtype_name: str, val_dtype_name: Optional[str],
-            merge_backend: str, interpret: Optional[bool]):
+def _phase2(mesh: Mesh, axes: Tuple[str, ...], n: int, kv: bool,
+            capacity: int, key_dtype_name: str,
+            val_dtype_name: Optional[str], merge_backend: str,
+            chunks: int, wire_codec: Optional[str],
+            interpret: Optional[bool]):
     """Jitted program: (sorted shard[, payload], starts, vcnt) -> output
     shard(s).  ``capacity`` is the static per-(source, destination) bucket
     size — phase 1's measured maximum, or m for the always-safe bound."""
-    n_dev = mesh.shape[axis_name]
+    n_dev = _n_dev(mesh, axes)
     m = -(-n // n_dev)
-    n_pad = n_dev * m
     c = capacity
-    r_runs = next_pow2(n_dev)
+    ax = _coll_axis(axes)
     maxkey = jnp.array(jnp.iinfo(jnp.dtype(key_dtype_name)).max,
                        jnp.dtype(key_dtype_name))
 
@@ -239,72 +418,182 @@ def _phase2(mesh: Mesh, axis_name: str, n: int, kv: bool, capacity: int,
         if kv:
             ks, vs, starts, vcnt = args
         else:
-            ks, starts, vcnt = args
-        my = jax.lax.axis_index(axis_name)
-
-        # fixed-capacity send buffers + ONE all-to-all.  Capacity fill is
-        # the max key so runs stay sorted; it is never *interpreted* —
-        # validity travels as explicit counts.
-        idx = starts[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
-        within = jnp.arange(c, dtype=jnp.int32)[None, :] < vcnt[:, None]
-        src = jnp.clip(idx, 0, m - 1)
-        sendk = jnp.where(within, ks[src], maxkey)
-        recvk = _all_to_all(sendk, axis_name)                   # (D, c)
-        recv_cnt = _all_to_all(vcnt[:, None], axis_name)[:, 0]  # (D,)
+            (ks, starts, vcnt), vs = args, None
+        my = _lin_index(mesh, axes)
+        mk, mv, mvalid, recv_cnt = _exchange_merge(
+            ks, vs, starts, vcnt, ax, n_dev, m, c, maxkey,
+            merge_backend, interpret, chunks=chunks, wire_codec=wire_codec)
+        shard_k, shard_v = _rebalance(mk, mv, mvalid, recv_cnt, ax,
+                                      n_dev, m, my)
         if kv:
-            recvv = _all_to_all(jnp.where(within, vs[src],
-                                          jnp.zeros((), vs.dtype)),
-                                axis_name)
-
-        # merge the received runs with the merge-path tree.  One int32
-        # position payload rides the merge; validity flags (and the user
-        # payload) are recovered by gathering through it, so ties between
-        # capacity fill and genuine max keys cannot corrupt anything.
-        runs = recvk
-        if r_runs != n_dev:
-            runs = jnp.concatenate(
-                [runs, jnp.full((r_runs - n_dev, c), maxkey, runs.dtype)])
-        pos = jnp.arange(r_runs * c, dtype=jnp.int32).reshape(1, r_runs, c)
-        mk, mpos = merge_runs(runs[None], pos, descending=False,
-                              backend=merge_backend, interpret=interpret)
-        mk, mpos = mk[0], mpos[0]                              # (R*c,)
-        run_valid = (jnp.arange(c, dtype=jnp.int32)[None, :]
-                     < recv_cnt[:, None])                       # (D, c)
-        if r_runs != n_dev:
-            run_valid = jnp.concatenate(
-                [run_valid, jnp.zeros((r_runs - n_dev, c), bool)])
-        mvalid = run_valid.reshape(-1)[mpos]
-        if kv:
-            vflat = recvv.reshape(-1)
-            if r_runs != n_dev:
-                vflat = jnp.concatenate(
-                    [vflat, jnp.zeros(((r_runs - n_dev) * c,), vflat.dtype)])
-            mv = vflat[mpos]
-
-        # rank-directed rebalance back to equal m-element shards: global
-        # rank = my bucket's offset + local rank; rank r lives at slot r%m
-        # of device r//m.  Exactly one device owns each slot, so the
-        # receive reduction is a plain sum over sources (dtype pinned —
-        # accumulating zeros is exact, but sum would promote narrow ints).
-        c_my = jnp.sum(recv_cnt).astype(jnp.int32)
-        counts_all = jax.lax.all_gather(c_my, axis_name)        # (D,)
-        offset = jnp.sum(jnp.where(jnp.arange(n_dev) < my, counts_all, 0))
-        lrank = jnp.cumsum(mvalid.astype(jnp.int32)) - 1
-        grank = offset + lrank
-        flat = jnp.where(mvalid, grank, n_pad)                  # OOB -> drop
-        outk = jnp.zeros((n_pad,), ks.dtype).at[flat].set(
-            mk, mode="drop").reshape(n_dev, m)
-        shard_k = jnp.sum(_all_to_all(outk, axis_name), axis=0,
-                          dtype=ks.dtype)
-        if kv:
-            outv = jnp.zeros((n_pad,), vs.dtype).at[flat].set(
-                mv, mode="drop").reshape(n_dev, m)
-            shard_v = jnp.sum(_all_to_all(outv, axis_name), axis=0,
-                              dtype=vs.dtype)
             return shard_k, shard_v
         return shard_k
 
-    spec = P(axis_name)
+    spec = P(axes)
+    n_in = 4 if kv else 3
+    fn = _smap(local, mesh, (spec,) * n_in,
+               (spec, spec) if kv else spec)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical phases 2-4 (two-level: ICI round, DCN round, ICI finalize)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=128)
+def _hier_phase2(mesh: Mesh, outer: str, inner: str, n: int, kv: bool,
+                 c1: int, s2: int, key_dtype_name: str,
+                 val_dtype_name: Optional[str], merge_backend: str,
+                 use_histogram: bool, interpret: Optional[bool]):
+    """Intra-host round: ICI bucket exchange + merge + intra-host
+    rebalance, then the OUTER splitter prep.  In: phase-1 outputs (shard,
+    intra starts/vcnt).  Out: host-sorted equal shards + (d_out,) outer
+    bucket starts/vcnt."""
+    d_out = int(mesh.shape[outer])
+    d_in = int(mesh.shape[inner])
+    n_dev = d_out * d_in
+    m = -(-n // n_dev)
+    host_span = d_in * m
+    kdt = jnp.dtype(key_dtype_name)
+    maxkey = jnp.array(jnp.iinfo(kdt).max, kdt)
+
+    def local(*args):
+        if kv:
+            ks, vs, starts, vcnt = args
+        else:
+            (ks, starts, vcnt), vs = args, None
+        ho = jax.lax.axis_index(outer)
+        hi = jax.lax.axis_index(inner)
+
+        mk, mv, mvalid, recv_cnt = _exchange_merge(
+            ks, vs, starts, vcnt, inner, d_in, m, c1, maxkey,
+            merge_backend, interpret)
+        shard_k, shard_v = _rebalance(mk, mv, mvalid, recv_cnt, inner,
+                                      d_in, m, hi)
+
+        # after the intra rebalance, host g holds global slice
+        # [g*host_span, (g+1)*host_span) sorted across its devices; the
+        # rebalance zero-fills tail slots, which would corrupt the outer
+        # splitter search — refill with the max key (validity is analytic)
+        host_valid = jnp.clip(n - ho * host_span, 0, host_span)
+        my_valid = jnp.clip(host_valid - hi * m, 0, m).astype(jnp.int32)
+        slot = jnp.arange(m, dtype=jnp.int32)
+        shard_k = jnp.where(slot < my_valid, shard_k, maxkey)
+
+        # outer splitters: pooled over the WHOLE mesh (each host's shards
+        # are now sorted, so regular positions are proper quantiles)
+        sample_pos = ((jnp.arange(s2) + 1) * m) // (s2 + 1)
+        samples = jax.lax.all_gather(shard_k[sample_pos], (outer, inner))
+        splitters = select_splitters(samples, d_out)
+        bounds = bucket_bounds(shard_k, splitters,
+                               use_histogram=use_histogram,
+                               interpret=interpret)
+        vcnt2 = jnp.clip(jnp.minimum(bounds[1:], my_valid) - bounds[:-1],
+                         0, m).astype(jnp.int32)
+        if kv:
+            return shard_k, shard_v, bounds[:-1], vcnt2
+        return shard_k, bounds[:-1], vcnt2
+
+    spec = P((outer, inner))
+    n_in = 4 if kv else 3
+    fn = _smap(local, mesh, (spec,) * n_in, (spec,) * n_in)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=128)
+def _hier_phase3(mesh: Mesh, outer: str, inner: str, n: int, kv: bool,
+                 c2: int, chunks: int, s3: int, key_dtype_name: str,
+                 val_dtype_name: Optional[str], merge_backend: str,
+                 wire_codec: Optional[str], use_histogram: bool,
+                 interpret: Optional[bool]):
+    """Cross-host round: chunked/pipelined DCN bucket exchange + merge +
+    compaction, then the per-host sub-splitter prep for the finalize.
+    Out: compacted sorted pool (length L = next_pow2(d_out*chunks) *
+    (c2//chunks)) + (d_in,) sub-bucket starts/vcnt."""
+    d_out = int(mesh.shape[outer])
+    d_in = int(mesh.shape[inner])
+    n_dev = d_out * d_in
+    m = -(-n // n_dev)
+    cp = c2 // chunks
+    L = next_pow2(d_out * chunks) * cp
+    kdt = jnp.dtype(key_dtype_name)
+    maxkey = jnp.array(jnp.iinfo(kdt).max, kdt)
+
+    def local(*args):
+        if kv:
+            ks, vs, starts, vcnt = args
+        else:
+            (ks, starts, vcnt), vs = args, None
+
+        mk, mv, mvalid, recv_cnt = _exchange_merge(
+            ks, vs, starts, vcnt, outer, d_out, m, c2, maxkey,
+            merge_backend, interpret, chunks=chunks, wire_codec=wire_codec)
+
+        # the merged pool interleaves capacity pads with genuine max-key
+        # ties, so validity is NOT a prefix — compact it back to one with
+        # a rank scatter (maxkey fill keeps the tail sorted for the
+        # sub-splitter search)
+        c_my = jnp.sum(recv_cnt).astype(jnp.int32)
+        lrank = jnp.cumsum(mvalid.astype(jnp.int32)) - 1
+        tgt = jnp.where(mvalid, lrank, L)                  # OOB -> drop
+        ck = jnp.full((L,), maxkey, mk.dtype).at[tgt].set(mk, mode="drop")
+        cv = None
+        if kv:
+            cv = jnp.zeros((L,), mv.dtype).at[tgt].set(mv, mode="drop")
+
+        # per-host sub-splitters: each host now holds exactly one global
+        # key range, but spread over its devices with no inter-device
+        # order — sample the *valid prefix* (dynamic length c_my), pool
+        # over the inner axis only, and cut d_in sub-buckets
+        pos = jnp.clip(((jnp.arange(s3) + 1) * c_my) // (s3 + 1), 0, L - 1)
+        samples = jax.lax.all_gather(ck[pos], inner)
+        splitters = select_splitters(samples, d_in)
+        bounds = bucket_bounds(ck, splitters, use_histogram=use_histogram,
+                               interpret=interpret)
+        vcnt3 = jnp.clip(jnp.minimum(bounds[1:], c_my) - bounds[:-1],
+                         0, L).astype(jnp.int32)
+        if kv:
+            return ck, cv, bounds[:-1], vcnt3
+        return ck, bounds[:-1], vcnt3
+
+    spec = P((outer, inner))
+    n_in = 4 if kv else 3
+    fn = _smap(local, mesh, (spec,) * n_in, (spec,) * n_in)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=128)
+def _hier_phase4(mesh: Mesh, outer: str, inner: str, n: int, kv: bool,
+                 L: int, c3: int, key_dtype_name: str,
+                 val_dtype_name: Optional[str], merge_backend: str,
+                 interpret: Optional[bool]):
+    """Finalize round: ICI sub-bucket exchange + merge, then the GLOBAL
+    rank rebalance over both axes — the concatenation over the linear
+    device order is the globally sorted array."""
+    d_out = int(mesh.shape[outer])
+    d_in = int(mesh.shape[inner])
+    n_dev = d_out * d_in
+    m = -(-n // n_dev)
+    kdt = jnp.dtype(key_dtype_name)
+    maxkey = jnp.array(jnp.iinfo(kdt).max, kdt)
+
+    def local(*args):
+        if kv:
+            ks, vs, starts, vcnt = args
+        else:
+            (ks, starts, vcnt), vs = args, None
+        my = _lin_index(mesh, (outer, inner))
+
+        mk, mv, mvalid, recv_cnt = _exchange_merge(
+            ks, vs, starts, vcnt, inner, d_in, L, c3, maxkey,
+            merge_backend, interpret)
+        shard_k, shard_v = _rebalance(mk, mv, mvalid, recv_cnt,
+                                      (outer, inner), n_dev, m, my)
+        if kv:
+            return shard_k, shard_v
+        return shard_k
+
+    spec = P((outer, inner))
     n_in = 4 if kv else 3
     fn = _smap(local, mesh, (spec,) * n_in,
                (spec, spec) if kv else spec)
@@ -315,7 +604,15 @@ def _phase2(mesh: Mesh, axis_name: str, n: int, kv: bool, capacity: int,
 # front door
 # ---------------------------------------------------------------------------
 
-def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
+def _sync_max(vcnt) -> Optional[int]:
+    """Host-sync the measured bucket maximum (None under an outer jit)."""
+    try:
+        return int(np.max(np.asarray(vcnt)))
+    except jax.errors.TracerArrayConversionError:
+        return None
+
+
+def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: AxisArg = "data", *,
                 values: Optional[jnp.ndarray] = None,
                 descending: bool = False,
                 local_method: Optional[str] = None,
@@ -324,29 +621,43 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
                 capacity_slack: Optional[float] = None,
                 use_histogram: Optional[bool] = None,
                 merge_backend: Optional[str] = None,
+                hierarchical: Optional[bool] = None,
+                pipeline_chunks: Optional[int] = None,
+                wire_codec: Optional[str] = None,
                 interpret: Optional[bool] = None):
-    """Globally sort a 1-D array over ``axis_name`` with ONE bucket
-    exchange.  Returns the sorted array (or ``(keys, values)`` with a
-    payload), same length and sharding layout as the input.
+    """Globally sort a 1-D array over ``axis_name`` — one mesh axis, a
+    tuple of axes, or ``None`` for the whole mesh.  Returns the sorted
+    array (or ``(keys, values)`` with a payload), same length and
+    sharding layout as the input.
 
-    Unlike the odd-even path the length need not divide the axis size
-    (pads are tracked with explicit validity counts), ``descending`` and
-    key-value payloads are first-class, and the collective bill is one
-    all-to-all of buckets plus one rank-directed rebalance instead of D
-    neighbour rounds.
+    On a two-axis mesh ``(outer, inner)`` the sort defaults to the
+    **hierarchical** two-level schedule (see the module docstring): an
+    intra-host samplesort round over the fast inner tier, ONE chunked
+    cross-host exchange over the slow outer tier, and an intra-host
+    finalize — the flat single-exchange path remains available as
+    ``hierarchical=False`` (and is the only path on one-axis meshes).
+    Both produce bit-identical output.
 
     ``capacity`` overrides the measured per-(source, destination) bucket
-    capacity; it is validated against the realized bucket bounds and
-    raises rather than silently dropping elements when too small (``m``,
-    the shard length, is always sufficient).  Under an outer ``jax.jit``
-    the measured mode is unavailable (it syncs counts to the host) and
-    the realized bounds cannot be checked, so only ``capacity >= m`` is
-    accepted there.
+    capacity on the flat path; it is validated against the realized
+    bucket bounds and raises rather than silently dropping elements when
+    too small (``m``, the shard length, is always sufficient).  Under an
+    outer ``jax.jit`` the measured mode is unavailable (it syncs counts
+    to the host) and the realized bounds cannot be checked, so only
+    ``capacity >= m`` is accepted there; the hierarchical path measures
+    three capacities and cannot run under an outer jit at all.
 
     ``capacity_slack`` (default: the active tuning profile's) multiplies
-    the *measured* bucket maximum before pow2 rounding: >1 buys headroom
+    the *measured* bucket maxima before pow2 rounding: >1 buys headroom
     so nearby workloads with slightly more skew reuse the same compiled
-    phase-2 program instead of recompiling at the next capacity.
+    programs instead of recompiling at the next capacity.
+
+    ``pipeline_chunks`` splits the slow-tier exchange into that many
+    chunked collectives (``collectives.pipeline_chunks`` picks the
+    realizable count); ``wire_codec='int8'`` sends the float *payload*
+    buckets of the cross-host exchange through the lossy grad_compress
+    codec — keys always travel wide, so the sort ORDER stays exact while
+    payload values are quantised.
     """
     x = jnp.asarray(x)
     if x.ndim != 1:
@@ -355,8 +666,9 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
         raise ValueError(
             f"sample_sort needs a keycodec dtype {keycodec.SUPPORTED}, "
             f"got {jnp.dtype(x.dtype).name!r}")
+    axes = _axes_tuple(mesh, axis_name)
     n = x.shape[0]
-    n_dev = mesh.shape[axis_name]
+    n_dev = _n_dev(mesh, axes)
     m = -(-n // n_dev)                      # shard length (output = input)
     n_pad = n_dev * m
     kv = values is not None
@@ -365,9 +677,31 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
         if values.shape != x.shape:
             raise ValueError(f"values shape {values.shape} must match "
                              f"keys shape {x.shape}")
+    two_tier = len(axes) == 2 and \
+        all(int(mesh.shape[a]) > 1 for a in axes)
+    if hierarchical and len(axes) != 2:
+        raise ValueError(
+            f"hierarchical sample_sort needs exactly two mesh axes "
+            f"(outer, inner); got {axes}")
+    # a degenerate tier (size-1 axis) makes the two-level schedule pure
+    # overhead — it silently collapses to the flat path, same output
+    hier = two_tier if hierarchical is None else (hierarchical and two_tier)
+    if wire_codec is not None:
+        if wire_codec not in coll.WIRE_CODECS:
+            raise ValueError(f"unknown wire_codec {wire_codec!r}; "
+                             f"available: {coll.WIRE_CODECS}")
+        if not kv:
+            raise ValueError("wire_codec compresses the PAYLOAD buckets; "
+                             "pass values= (keys always travel wide)")
+        if not jnp.issubdtype(values.dtype, jnp.floating):
+            raise ValueError(
+                f"wire_codec='int8' quantises float payloads, got "
+                f"{jnp.dtype(values.dtype).name!r}")
     if use_histogram is None:
         use_histogram = jax.default_backend() == "tpu"
     s = samples_per_shard or default_samples_per_shard(m, n_dev)
+    slack = capacity_slack if capacity_slack is not None \
+        else _tuning.active().capacity_slack
 
     enc = keycodec.encode(x, descending=descending)
     padded = n_pad != n
@@ -376,8 +710,36 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
         enc = jnp.pad(enc, (0, n_pad - n), constant_values=maxkey)
         if kv:
             values = jnp.pad(values, (0, n_pad - n))
+    kname = jnp.dtype(enc.dtype).name
+    vname = jnp.dtype(values.dtype).name if kv else None
+    itemsize = jnp.dtype(enc.dtype).itemsize + \
+        (jnp.dtype(values.dtype).itemsize if kv else 0)
 
-    p1 = _phase1(mesh, axis_name, n, kv, padded, local_method, s,
+    if hier:
+        out = _hier_sample_sort(
+            enc, values, mesh, axes, n, kv, padded, local_method, s,
+            capacity, slack, use_histogram, merge_backend,
+            pipeline_chunks, wire_codec, itemsize, kname, vname, interpret)
+    else:
+        out = _flat_sample_sort(
+            enc, values, mesh, axes, n, kv, padded, local_method, s,
+            capacity, slack, use_histogram, merge_backend,
+            pipeline_chunks, wire_codec, itemsize, kname, vname, interpret)
+    if kv:
+        out_k, out_v = out
+        keys = keycodec.decode(out_k[:n], x.dtype, descending=descending)
+        return keys, out_v[:n]
+    return keycodec.decode(out[:n], x.dtype, descending=descending)
+
+
+def _flat_sample_sort(enc, values, mesh, axes, n, kv, padded, local_method,
+                      s, capacity, slack, use_histogram, merge_backend,
+                      pipeline_chunks, wire_codec, itemsize, kname, vname,
+                      interpret):
+    """The one-tier path: splitters over the whole mesh, ONE exchange."""
+    n_dev = _n_dev(mesh, axes)
+    m = -(-n // n_dev)
+    p1 = _phase1(mesh, axes, axes, n, kv, padded, local_method, s,
                  use_histogram, interpret)
     sp1 = _obs.trace("samplesort.phase1", n=n, n_dev=n_dev, kv=kv,
                      samples_per_shard=s)
@@ -391,18 +753,13 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
     # the one host sync: the realized bucket maximum sets the static
     # exchange capacity, so buffers and merge work scale with what the
     # data needs (~m/D with regular sampling) instead of the worst case m
-    try:
-        max_bucket = int(np.max(np.asarray(vcnt)))
-    except jax.errors.TracerArrayConversionError:
-        max_bucket = None                   # called under an outer jit
+    max_bucket = _sync_max(vcnt)
     if capacity is None:
         if max_bucket is None:
             raise ValueError(
                 "sample_sort's measured-capacity mode reads the bucket "
                 "counts on the host and cannot run under an outer jit; "
                 f"pass capacity= (the shard length {m} is always safe)")
-        slack = capacity_slack if capacity_slack is not None \
-            else _tuning.active().capacity_slack
         cap = _round_capacity(int(math.ceil(max_bucket * slack)), m)
     else:
         cap = _round_capacity(capacity, m)
@@ -419,20 +776,12 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
                 f"capacity {capacity} is smaller than the realized maximum "
                 f"bucket ({max_bucket}); the shard length {m} is always "
                 f"safe")
+    chunks = coll.pipeline_chunks(cap, pipeline_chunks) \
+        if pipeline_chunks is not None else 1
     if merge_backend is None:
-        from repro.kernels.merge_path import DEFAULT_CHUNK
-        if jax.default_backend() == "tpu" and (2 * cap) % DEFAULT_CHUNK == 0:
-            merge_backend = "pallas"        # the merge-path VMEM kernel
-        elif cap & (cap - 1) == 0:
-            # off-TPU the gather-bound rank merge loses badly to the
-            # word-parallel min/max box (capacity is pow2-rounded, so this
-            # is the interpret-mode default)
-            merge_backend = "bitonic"
-        else:
-            merge_backend = "xla"
+        merge_backend = _pick_merge_backend(cap // chunks)
 
-    itemsize = jnp.dtype(enc.dtype).itemsize + \
-        (jnp.dtype(values.dtype).itemsize if kv else 0)
+    total_bytes = n_dev * alltoall_bytes_per_device(n_dev, m, itemsize, cap)
     if _obs.enabled() and max_bucket is not None:
         # bucket-skew accounting: vcnt is the full (D*D,) per-(source,
         # destination) genuine-key count table, already synced to the host
@@ -443,29 +792,136 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
         skew = float(max_bucket) / mean_fill if mean_fill else 1.0
         metrics.gauge("samplesort.bucket_skew").set(skew)
         metrics.histogram("samplesort.bucket_fill_max").observe(max_bucket)
-        metrics.counter("samplesort.alltoall_bytes").inc(
-            n_dev * alltoall_bytes_per_device(n_dev, m, itemsize, cap))
+        metrics.counter("samplesort.alltoall_bytes").inc(total_bytes)
         metrics.counter("samplesort.sorts").inc()
+        if len(axes) == 2:
+            coll.record_split_exchange(total_bytes,
+                                       int(mesh.shape[axes[1]]),
+                                       int(mesh.shape[axes[0]]))
+        else:
+            coll.record_exchange("ici", total_bytes)
 
-    p2 = _phase2(mesh, axis_name, n, kv,
-                 cap, jnp.dtype(enc.dtype).name,
-                 jnp.dtype(values.dtype).name if kv else None,
-                 merge_backend, interpret)
+    p2 = _phase2(mesh, axes, n, kv, cap, kname, vname, merge_backend,
+                 chunks, wire_codec, interpret)
     sp2 = _obs.trace("samplesort.phase2", n=n, n_dev=n_dev, capacity=cap,
                      merge_backend=merge_backend,
-                     bytes=n_dev * alltoall_bytes_per_device(
-                         n_dev, m, itemsize, cap) if _obs.enabled() else 0)
+                     bytes=total_bytes if _obs.enabled() else 0)
     with sp2:
         if kv:
             out_k, out_v = p2(ks, vs, starts, vcnt)
             sp2.fence((out_k, out_v))
+            return out_k, out_v
+        out = p2(ks, starts, vcnt)
+        sp2.fence(out)
+        return out
+
+
+def _hier_sample_sort(enc, values, mesh, axes, n, kv, padded, local_method,
+                      s, capacity, slack, use_histogram, merge_backend,
+                      pipeline_chunks, wire_codec, itemsize, kname, vname,
+                      interpret):
+    """The two-level driver: four jitted phases, three capacity syncs."""
+    outer_ax, inner_ax = axes
+    d_out = int(mesh.shape[outer_ax])
+    d_in = int(mesh.shape[inner_ax])
+    n_dev = d_out * d_in
+    m = -(-n // n_dev)
+    if capacity is not None:
+        raise ValueError(
+            "capacity= overrides the FLAT exchange capacity; the "
+            "hierarchical path measures three per-phase capacities "
+            "(pass hierarchical=False to pin the flat one)")
+
+    # phase 1: local sort + INTRA-host splitters (partition group = inner)
+    p1 = _phase1(mesh, axes, (inner_ax,), n, kv, padded, local_method, s,
+                 use_histogram, interpret)
+    sp1 = _obs.trace("samplesort.hier.phase1", n=n, n_dev=n_dev, kv=kv,
+                     d_out=d_out, d_in=d_in, samples_per_shard=s)
+    with sp1:
+        if kv:
+            ks, vs, starts, vcnt = p1(enc, values)
         else:
-            out = p2(ks, starts, vcnt)
-            sp2.fence(out)
-    if kv:
-        keys = keycodec.decode(out_k[:n], x.dtype, descending=descending)
-        return keys, out_v[:n]
-    return keycodec.decode(out[:n], x.dtype, descending=descending)
+            ks, starts, vcnt = p1(enc)
+            vs = None
+        sp1.fence(vcnt)
+    max1 = _sync_max(vcnt)
+    if max1 is None:
+        raise ValueError(
+            "hierarchical sample_sort measures per-phase exchange "
+            "capacities on the host and cannot run under an outer jit; "
+            "call it eagerly, or pass hierarchical=False with capacity=")
+    c1 = _round_capacity(int(math.ceil(max1 * slack)), m)
+    mb1 = merge_backend or _pick_merge_backend(c1)
+
+    # phase 2: ICI exchange + intra-host rebalance + outer splitter prep
+    p2 = _hier_phase2(mesh, outer_ax, inner_ax, n, kv, c1, s, kname, vname,
+                      mb1, use_histogram, interpret)
+    sp2 = _obs.trace("samplesort.hier.phase2", n=n, capacity=c1,
+                     merge_backend=mb1)
+    with sp2:
+        if kv:
+            ks, vs, starts, vcnt = p2(ks, vs, starts, vcnt)
+        else:
+            ks, starts, vcnt = p2(ks, starts, vcnt)
+        sp2.fence(vcnt)
+    max2 = _sync_max(vcnt)
+    c2 = _round_capacity(int(math.ceil(max2 * slack)), m)
+    chunks = coll.pipeline_chunks(c2, pipeline_chunks)
+    mb2 = merge_backend or _pick_merge_backend(c2 // chunks)
+
+    # phase 3: chunked DCN exchange + compaction + sub-splitter prep
+    p3 = _hier_phase3(mesh, outer_ax, inner_ax, n, kv, c2, chunks, s,
+                      kname, vname, mb2, wire_codec, use_histogram,
+                      interpret)
+    sp3 = _obs.trace("samplesort.hier.phase3", n=n, capacity=c2,
+                     chunks=chunks, wire_codec=wire_codec or "none",
+                     merge_backend=mb2)
+    with sp3:
+        if kv:
+            ks, vs, starts, vcnt = p3(ks, vs, starts, vcnt)
+        else:
+            ks, starts, vcnt = p3(ks, starts, vcnt)
+        sp3.fence(vcnt)
+    L = next_pow2(d_out * chunks) * (c2 // chunks)
+    max3 = _sync_max(vcnt)
+    c3 = _round_capacity(int(math.ceil(max3 * slack)), L)
+    mb3 = merge_backend or _pick_merge_backend(c3)
+
+    if _obs.enabled():
+        # per-tier movement bill (analytic, like the flat path's):
+        # ICI carries the intra round (exchange + intra rebalance), the
+        # finalize exchange, and its share of the global rebalance; DCN
+        # carries the cross-host buckets (narrowed by the wire codec) and
+        # the rest of the rebalance
+        ici = n_dev * alltoall_bytes_per_device(d_in, m, itemsize, c1)
+        ici += n_dev * d_in * c3 * itemsize
+        dcn = n_dev * d_out * c2 * itemsize
+        if wire_codec == "int8":
+            val_is = jnp.dtype(vname).itemsize
+            saved = n_dev * coll.wire_bytes_saved(d_out, c2, val_is)
+            dcn -= saved
+            metrics.counter("collectives.wire_bytes_saved").inc(saved)
+        coll.record_exchange("ici", ici)
+        coll.record_exchange("dcn", dcn)
+        coll.record_split_exchange(n_dev * n_dev * m * itemsize,
+                                   d_in, d_out)
+        metrics.counter("samplesort.alltoall_bytes").inc(
+            ici + dcn + n_dev * n_dev * m * itemsize)
+        metrics.counter("samplesort.sorts").inc()
+
+    # phase 4: ICI finalize exchange + GLOBAL rank rebalance
+    p4 = _hier_phase4(mesh, outer_ax, inner_ax, n, kv, L, c3, kname, vname,
+                      mb3, interpret)
+    sp4 = _obs.trace("samplesort.hier.phase4", n=n, capacity=c3,
+                     merge_backend=mb3)
+    with sp4:
+        if kv:
+            out_k, out_v = p4(ks, vs, starts, vcnt)
+            sp4.fence((out_k, out_v))
+            return out_k, out_v
+        out = p4(ks, starts, vcnt)
+        sp4.fence(out)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -473,20 +929,20 @@ def sample_sort(x: jnp.ndarray, mesh: Mesh, axis_name: str = "data", *,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=128)
-def _topk_prog(mesh: Mesh, axis_name: str, n: int, k: int,
+def _topk_prog(mesh: Mesh, axes: Tuple[str, ...], n: int, k: int,
                key_dtype_name: str, use_kernel: Optional[bool],
                interpret: Optional[bool]):
     """Jitted program: encoded padded shard -> replicated (enc topk, global
     indices).  Cached on its statics like the sample-sort phases."""
     from repro.kernels import radix_select as _sel
-    n_dev = mesh.shape[axis_name]
+    n_dev = _n_dev(mesh, axes)
     m = -(-n // n_dev)
     kc = min(k, m)                       # per-shard candidate count
     kdt = jnp.dtype(key_dtype_name)
     maxkey = jnp.array(jnp.iinfo(kdt).max, kdt)
 
     def local(enc):
-        my = jax.lax.axis_index(axis_name)
+        my = _lin_index(mesh, axes)
         base = (my * m).astype(jnp.int32)
         # end-of-array pads all live on the tail shards; force them to the
         # maximal encoded key so the local select ranks them last, and mark
@@ -507,17 +963,18 @@ def _topk_prog(mesh: Mesh, axis_name: str, n: int, k: int,
         # THE one collective: D·kc candidates (vs sample-sort's bucket
         # all-to-all of whole shards); every device then runs the same
         # tiny lexicographic merge, so the result is replicated
-        ce = jax.lax.all_gather(le[0], axis_name).reshape(-1)
-        ci = jax.lax.all_gather(gi, axis_name).reshape(-1)
+        ax = _coll_axis(axes)
+        ce = jax.lax.all_gather(le[0], ax).reshape(-1)
+        ci = jax.lax.all_gather(gi, ax).reshape(-1)
         se, si = jax.lax.sort((ce, ci), num_keys=2)
         return se[:k], si[:k]
 
-    fn = _smap(local, mesh, (P(axis_name),), (P(None), P(None)))
+    fn = _smap(local, mesh, (P(axes),), (P(None), P(None)))
     return jax.jit(fn)
 
 
 def sample_topk(x: jnp.ndarray, k: int, mesh: Mesh,
-                axis_name: str = "data", *,
+                axis_name: AxisArg = "data", *,
                 use_kernel: Optional[bool] = None,
                 interpret: Optional[bool] = None):
     """Mesh-global top-k of a flat array -> ``(values, indices)``, both
@@ -531,6 +988,9 @@ def sample_topk(x: jnp.ndarray, k: int, mesh: Mesh,
     over D already-sorted candidate runs — finishes on every device.  No
     full-array sort, no bucket all-to-all, no rebalance round: for
     ``k ≪ n`` the collective bill shrinks from O(m) per device to O(D·k).
+    The candidate pool is small enough that even on a two-tier mesh the
+    flat all-gather IS the right schedule — there is no hierarchical
+    variant to pick.
 
     Correctness of the candidate cut: a shard with ``g`` genuine elements
     contributes ``min(kc, g)`` of them, and ``sum(min(kc, g_d)) >= k``
@@ -548,19 +1008,26 @@ def sample_topk(x: jnp.ndarray, k: int, mesh: Mesh,
     if not 1 <= k <= n:
         raise ValueError(
             f"topk k must satisfy 1 <= k <= n (n={n}); got k={k}")
-    n_dev = mesh.shape[axis_name]
+    axes = _axes_tuple(mesh, axis_name)
+    n_dev = _n_dev(mesh, axes)
     m = -(-n // n_dev)
     enc = keycodec.encode(x, descending=True)
     if n_dev * m != n:
         maxkey = jnp.array(jnp.iinfo(enc.dtype).max, enc.dtype)
         enc = jnp.pad(enc, (0, n_dev * m - n), constant_values=maxkey)
-    prog = _topk_prog(mesh, axis_name, n, k,
+    prog = _topk_prog(mesh, axes, n, k,
                       jnp.dtype(enc.dtype).name, use_kernel, interpret)
     cand_bytes = 0
     if _obs.enabled():
         cand_bytes = n_dev * topk_candidate_bytes_per_device(
             n_dev, k, m, jnp.dtype(enc.dtype).itemsize)
         metrics.counter("samplesort.topk_candidate_bytes").inc(cand_bytes)
+        if len(axes) == 2:
+            coll.record_split_exchange(cand_bytes,
+                                       int(mesh.shape[axes[1]]),
+                                       int(mesh.shape[axes[0]]))
+        else:
+            coll.record_exchange("ici", cand_bytes)
     sp = _obs.trace("samplesort.topk", n=n, k=k, n_dev=n_dev,
                     bytes=cand_bytes)
     with sp:
@@ -580,7 +1047,7 @@ def topk_candidate_bytes_per_device(n_dev: int, k: int, local_elems: int,
 
 def _round_capacity(cap: int, m: int) -> int:
     """Static capacity: at least one slot, padded up a little so nearby
-    workloads share a compiled phase-2 program, never beyond the shard."""
+    workloads share a compiled program, never beyond the local pool."""
     cap = max(1, cap)
     if cap >= m:
         return m
@@ -590,10 +1057,10 @@ def _round_capacity(cap: int, m: int) -> int:
 def alltoall_bytes_per_device(n_dev: int, local_elems: int,
                               itemsize: int, capacity: Optional[int] = None
                               ) -> int:
-    """Analytic ICI volume of the sample-sort exchange (per device): the
-    capacity-padded bucket all-to-all plus the rank rebalance round —
-    versus ``n_dev`` full-shard moves for odd-even transposition
-    (``distributed_sort.collective_bytes_per_device``)."""
+    """Analytic interconnect volume of one sample-sort round (per
+    device): the capacity-padded bucket all-to-all plus the rank
+    rebalance round — versus ``n_dev`` full-shard moves for odd-even
+    transposition (``distributed_sort.collective_bytes_per_device``)."""
     cap = capacity if capacity is not None else \
         min(local_elems, 2 * local_elems // max(1, n_dev) + 1)
     return (n_dev * cap + n_dev * local_elems) * itemsize

@@ -274,6 +274,35 @@ def _cursors_at(runs: Sequence[np.ndarray], asc: Sequence[np.ndarray],
     return his
 
 
+def _grouped_kway_kv(kslices: List[jnp.ndarray], vslices: List[jnp.ndarray],
+                     fanin: int, *, descending: bool,
+                     interpret: Optional[bool]
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge tournament with a capped width: contiguous groups of at most
+    ``fanin`` runs merge first, the group outputs merge again, until one
+    run remains.  Grouping is CONTIGUOUS in run order, so the tournament's
+    left-first tie rule composes across levels and stability survives the
+    cap (the autotuned ``merge_fanin`` knob — a wide tournament pads every
+    run to the widest, so slices of very uneven length can merge cheaper
+    in narrow rounds)."""
+    while len(kslices) > 1:
+        nk: List[jnp.ndarray] = []
+        nv: List[jnp.ndarray] = []
+        for i in range(0, len(kslices), fanin):
+            gk, gv = kslices[i:i + fanin], vslices[i:i + fanin]
+            if len(gk) == 1:
+                nk.append(gk[0])
+                nv.append(gv[0])
+                continue
+            mk, mv = _merge.kway_merge_kv(gk, gv, descending=descending,
+                                          backend="xla",
+                                          interpret=interpret)
+            nk.append(mk)
+            nv.append(mv)
+        kslices, vslices = nk, nv
+    return kslices[0], vslices[0]
+
+
 def _merge_phase(key_runs: Sequence[np.ndarray],
                  val_runs: Optional[Sequence[np.ndarray]], *,
                  descending: bool, block: int,
@@ -284,8 +313,9 @@ def _merge_phase(key_runs: Sequence[np.ndarray],
     Host side owns the *partition* (stable cursors at each block boundary,
     ``O(R^2 log^2 L)`` binary searches — noise next to the data movement);
     the device owns the *merge* of each block's slices through the engine
-    tournament.  Only the current block's slices are device-resident, so
-    peak device footprint stays at chunk scale.
+    tournament, its width capped at the active profile's ``merge_fanin``
+    (:func:`_grouped_kway_kv`).  Only the current block's slices are
+    device-resident, so peak device footprint stays at chunk scale.
     """
     runs = [np.ravel(r) for r in key_runs]
     total = int(sum(r.shape[0] for r in runs))
@@ -300,6 +330,7 @@ def _merge_phase(key_runs: Sequence[np.ndarray],
         out_v = np.empty((total,), vruns[0].dtype)
     lows = [0] * len(runs)
     written = 0
+    fanin = max(2, int(_tuning.active().merge_fanin))
     bounds = list(range(block, total, block)) + [total]
     for d in bounds:
         his = _cursors_at(runs, asc, d, lows, descending)
@@ -322,9 +353,9 @@ def _merge_phase(key_runs: Sequence[np.ndarray],
                     if _obs.enabled():
                         _metrics.counter("spill.h2d_bytes").inc(
                             sum(s.nbytes for s in vslices))
-                    dk, dv = _merge.kway_merge_kv(
-                        kslices, vslices, descending=descending,
-                        backend="xla", interpret=interpret)
+                    dk, dv = _grouped_kway_kv(
+                        kslices, vslices, fanin, descending=descending,
+                        interpret=interpret)
                     mk, mv = np.asarray(dk), np.asarray(dv)
                 else:
                     # keys-only ALSO goes through the kv tournament (with a
@@ -332,10 +363,10 @@ def _merge_phase(key_runs: Sequence[np.ndarray],
                     # sliced off positionally, which miscounts when genuine
                     # NaN keys sort past the +inf pads — the kv variant
                     # drops pads by position, exact for every key value
-                    dk, _ = _merge.kway_merge_kv(
+                    dk, _ = _grouped_kway_kv(
                         kslices, [jnp.zeros(s.shape, jnp.int8)
                                   for s in kslices],
-                        descending=descending, backend="xla",
+                        fanin, descending=descending,
                         interpret=interpret)
                     mk, mv = np.asarray(dk), None
                 if _obs.enabled():
@@ -362,6 +393,41 @@ def _prepare(x) -> np.ndarray:
     return a
 
 
+# ---------------------------------------------------------------------------
+# bfloat16 keys — host-side mirror of the keycodec order embedding
+# ---------------------------------------------------------------------------
+# numpy's own comparators do not know bfloat16 (it is an ml_dtypes
+# extension type), so the host half of the pipeline (searchsorted
+# cursors, run boundaries) cannot run on the raw values.  Instead the
+# keys enter the pipeline as the uint16 *keycodec encoding* — a bitcast
+# view plus the sign-embedding flips of ``keycodec.encode``, computed
+# here with numpy so no device round-trip is needed — and every stage
+# (chunk sorts, cursors, merges) runs one ascending unsigned sort.  The
+# embedding is a bijection on bit patterns, so decoding the merged output
+# is bit-exact, NaN payload bits included; ``descending`` folds into the
+# encoding as the usual complement, the pipeline itself always ascends.
+
+def _is_bf16(dtype) -> bool:
+    return jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16)
+
+
+def _bf16_encode(a: np.ndarray, descending: bool) -> np.ndarray:
+    u = np.ascontiguousarray(a).view(np.uint16)
+    neg = (u >> np.uint16(15)) != 0
+    u = u ^ np.where(neg, np.uint16(0xFFFF), np.uint16(0x8000))
+    if descending:
+        u = u ^ np.uint16(0xFFFF)
+    return u
+
+
+def _bf16_decode(u: np.ndarray, descending: bool) -> np.ndarray:
+    if descending:
+        u = u ^ np.uint16(0xFFFF)
+    top = (u >> np.uint16(15)) != 0
+    u = u ^ np.where(top, np.uint16(0x8000), np.uint16(0xFFFF))
+    return np.ascontiguousarray(u).view(np.dtype(jnp.bfloat16))
+
+
 def _nan_safe_method(keys: np.ndarray, method: str) -> str:
     """Dataset-scale streams carry NaNs; the min/max-network device
     backends assume NaN-free floats (registry convention), so when the
@@ -386,6 +452,15 @@ def spill_sort(x, *, descending: bool = False,
     n = keys.shape[0]
     if n == 0:
         return keys.copy()
+    bf16 = _is_bf16(keys.dtype)
+    if bf16:
+        if codec is not None:
+            raise ValueError(
+                "codec compresses raw float key runs; bfloat16 keys ride "
+                "the pipeline as their uint16 keycodec encoding, which a "
+                "magnitude quantizer would scramble")
+        keys = _bf16_encode(keys, descending)
+        enc_desc, descending = descending, False
     method = _nan_safe_method(keys, method)
     chunk = chunk_elems(keys.dtype.itemsize, chunk_bytes)
     n_chunks = -(-n // chunk)
@@ -397,7 +472,7 @@ def spill_sort(x, *, descending: bool = False,
         out, _ = _merge_phase(key_runs.materialize(), None,
                               descending=descending, block=chunk,
                               interpret=interpret)
-    return out
+    return _bf16_decode(out, enc_desc) if bf16 else out
 
 
 def spill_sort_kv(keys, values, *, descending: bool = False,
@@ -417,6 +492,10 @@ def spill_sort_kv(keys, values, *, descending: bool = False,
     n = k.shape[0]
     if n == 0:
         return k.copy(), v.copy()
+    bf16 = _is_bf16(k.dtype)
+    if bf16:
+        k = _bf16_encode(k, descending)
+        enc_desc, descending = descending, False
     method = _nan_safe_method(k, method)
     chunk = chunk_elems(k.dtype.itemsize, chunk_bytes)
     n_chunks = -(-n // chunk)
@@ -433,6 +512,8 @@ def spill_sort_kv(keys, values, *, descending: bool = False,
         out_k, out_v = _merge_phase(key_runs.materialize(), val_runs,
                                     descending=descending, block=chunk,
                                     interpret=interpret)
+    if bf16:
+        out_k = _bf16_decode(out_k, enc_desc)
     return out_k, out_v
 
 

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import pathlib
 import time
 from typing import List, Optional
 
@@ -23,12 +25,17 @@ import numpy as np
 
 from repro import sort as sorting
 from repro.configs.base import get_config, get_smoke_config
+from repro.core import topology as _topology, tuning as _tuning
 from repro.obs import metrics as _metrics, report as _obs_report, \
     trace as _obs
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import dp_axes_of, make_host_mesh
 from repro.models.model_zoo import build
 from repro.sharding.partitioning import ShardingPolicy
+
+# where serve persists its tuning/topology snapshot between runs (the
+# --state-dir flag overrides; unset means no persistence)
+SERVE_STATE_ENV = "REPRO_SERVE_STATE_DIR"
 
 
 @dataclasses.dataclass
@@ -58,7 +65,10 @@ class LengthSortedScheduler:
 
     With a ``mesh`` (any multi-device host or pod slice) the backlog sort
     itself goes distributed: a (length, position) composite key is sorted
-    globally over the mesh axis by the single-round sample-sort, so a
+    globally over the mesh by the sample-sort (``axis_name`` follows
+    ``distributed_sort`` — one axis, a tuple, or ``None`` for the whole
+    mesh; on a two-axis ``(hosts, devices)`` mesh the planner picks the
+    flat or hierarchical schedule from the topology tier rates), so a
     fleet-scale queue never funnels through one device.  Single-device
     meshes and backlogs under ``distributed_min`` keep the local argsort
     path — per-queue-length shard_map programs only pay off once the
@@ -66,7 +76,7 @@ class LengthSortedScheduler:
     """
 
     def __init__(self, batch_size: int, method: str = "auto", *,
-                 mesh=None, axis_name: str = "data",
+                 mesh=None, axis_name=None,
                  distributed_min: int = 4096):
         self.batch_size = batch_size
         self.method = method
@@ -79,11 +89,17 @@ class LengthSortedScheduler:
         req.submit_t = time.monotonic()
         self.queue.append(req)
 
+    def _n_dev(self) -> int:
+        if self.mesh is None:
+            return 1
+        from repro.engine import samplesort
+        axes = samplesort._axes_tuple(self.mesh, self.axis_name)
+        return samplesort._n_dev(self.mesh, axes)
+
     def _order(self, lens: jnp.ndarray) -> np.ndarray:
         n = lens.shape[0]
         idx_bits = max(1, (n - 1).bit_length())
-        distributed = (self.mesh is not None
-                       and self.mesh.shape[self.axis_name] > 1
+        distributed = (self._n_dev() > 1
                        and n >= self.distributed_min
                        and int(jnp.max(lens)) < (1 << (31 - idx_bits)))
         if not distributed:
@@ -129,6 +145,68 @@ class LengthSortedScheduler:
         return 1.0 - sum(lens) / (len(lens) * max(lens))
 
 
+def resolve_state_dir(explicit: Optional[str] = None
+                      ) -> Optional[pathlib.Path]:
+    """The serve state directory: the explicit argument, else the
+    ``REPRO_SERVE_STATE_DIR`` environment variable, else None (no
+    persistence)."""
+    d = explicit if explicit is not None \
+        else os.environ.get(SERVE_STATE_ENV)
+    return pathlib.Path(d) if d else None
+
+
+def restore_state(state_dir: os.PathLike, mesh=None) -> List[str]:
+    """Restore a previous run's snapshot from ``state_dir`` into the
+    ambient tuning/topology state.  Both restores are identity-gated: a
+    profile whose device fingerprint differs (snapshot copied from another
+    machine) or a topology whose (fingerprint, mesh signature) does not
+    match the serving mesh is skipped, never trusted.  Returns the names
+    of what was restored (for the startup log line)."""
+    restored: List[str] = []
+    d = pathlib.Path(state_dir)
+    pp = _tuning.profile_path(directory=d)
+    if pp.is_file():
+        try:
+            prof = _tuning.load(pp)
+            if prof.fingerprint == _tuning.device_fingerprint():
+                _tuning.set_active(dataclasses.replace(
+                    prof, source="persisted"))
+                restored.append("tuning profile")
+        except _tuning.ProfileError:
+            pass
+    if mesh is not None:
+        want = _topology.from_mesh(mesh)
+        tp = _topology.topology_path(want, directory=d)
+        if tp.is_file():
+            try:
+                topo = _topology.load(tp)
+                if (topo.fingerprint == want.fingerprint
+                        and topo.signature() == want.signature()):
+                    _topology.set_active(dataclasses.replace(
+                        topo, source="persisted"))
+                    restored.append("topology")
+            except _topology.TopologyError:
+                pass
+    return restored
+
+
+def snapshot_state(state_dir: os.PathLike, mesh=None) -> List[pathlib.Path]:
+    """Snapshot the ACTIVE TuningProfile (and, given the serving mesh, the
+    resolved Topology) into ``state_dir`` so the next run starts from this
+    run's calibration instead of the platform defaults.  Returns the
+    written paths."""
+    paths: List[pathlib.Path] = []
+    d = pathlib.Path(state_dir)
+    prof = _tuning.active()
+    paths.append(_tuning.save(
+        prof, _tuning.profile_path(prof.fingerprint, directory=d)))
+    if mesh is not None:
+        topo = _topology.for_mesh(mesh)
+        paths.append(_topology.save(
+            topo, _topology.topology_path(topo, directory=d)))
+    return paths
+
+
 def batch_accounting(done: List[Request]):
     """Per-prompt-length accounting of the completed requests — ONE
     ``relational.group_by`` (prompt length -> generated-token count) with
@@ -152,11 +230,23 @@ def batch_accounting(done: List[Request]):
 def serve(arch: str, smoke: bool = True, n_requests: int = 16,
           batch_size: int = 8, decode_steps: int = 32, topk: int = 50,
           seed: int = 0, max_len: int = 256,
-          distributed_queue: Optional[bool] = None):
+          distributed_queue: Optional[bool] = None,
+          state_dir: Optional[str] = None):
     """``distributed_queue`` routes the scheduler's backlog sort over the
-    host mesh (defaults to on whenever the host offers >1 device)."""
+    host mesh (defaults to on whenever the host offers >1 device).
+
+    ``state_dir`` (or ``REPRO_SERVE_STATE_DIR``) makes the server
+    stateful across restarts: on startup it restores the snapshotted
+    TuningProfile + Topology (identity-gated), on shutdown it snapshots
+    whatever is active — so a calibration paid once keeps pricing plans
+    across process restarts."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     mesh = make_host_mesh()
+    sdir = resolve_state_dir(state_dir)
+    if sdir is not None:
+        got = restore_state(sdir, mesh)
+        if got:
+            print(f"[serve] restored {' + '.join(got)} from {sdir}")
     if distributed_queue is None:
         distributed_queue = mesh.shape["data"] > 1
     policy = ShardingPolicy(mesh=mesh, dp_axes=dp_axes_of(mesh))
@@ -181,6 +271,33 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 16,
 
     done: List[Request] = []
     stats = {"batches": 0, "padding_waste": [], "decode_tps": []}
+    try:
+        _serve_loop(sched, model, params, serve_step, cfg, rng, key,
+                    decode_steps, max_len, done, stats)
+    finally:
+        # shutdown snapshot — also on an exception mid-run, so a
+        # calibration paid this run is never lost
+        if sdir is not None:
+            for p in snapshot_state(sdir, mesh):
+                print(f"[serve] state snapshot -> {p}")
+    waste = float(np.mean(stats["padding_waste"]))
+    print(f"[serve] {len(done)} requests in {stats['batches']} batches; "
+          f"mean padding waste {waste:.3f}; "
+          f"decode {np.mean(stats['decode_tps']):.1f} tok/s")
+    acct = batch_accounting(done)
+    stats["length_groups"] = acct
+    if acct:
+        head = ", ".join(f"len={k}: {c} req x {m:.0f} tok"
+                         for k, c, m in acct[:8])
+        more = "" if len(acct) <= 8 else f" (+{len(acct) - 8} more)"
+        print(f"[serve] length accounting: {head}{more}")
+    if _obs.enabled():
+        print(_obs_report.slo_report())
+    return done, stats
+
+
+def _serve_loop(sched, model, params, serve_step, cfg, rng, key,
+                decode_steps, max_len, done, stats):
     while True:
         batch = sched.next_batch()
         if not batch:
@@ -225,20 +342,6 @@ def serve(arch: str, smoke: bool = True, n_requests: int = 16,
                     (fin - r.submit_t) * 1e3)
         if _obs.enabled():
             _metrics.gauge("serve.decode_tps").set(stats["decode_tps"][-1])
-    waste = float(np.mean(stats["padding_waste"]))
-    print(f"[serve] {len(done)} requests in {stats['batches']} batches; "
-          f"mean padding waste {waste:.3f}; "
-          f"decode {np.mean(stats['decode_tps']):.1f} tok/s")
-    acct = batch_accounting(done)
-    stats["length_groups"] = acct
-    if acct:
-        head = ", ".join(f"len={k}: {c} req x {m:.0f} tok"
-                         for k, c, m in acct[:8])
-        more = "" if len(acct) <= 8 else f" (+{len(acct) - 8} more)"
-        print(f"[serve] length accounting: {head}{more}")
-    if _obs.enabled():
-        print(_obs_report.slo_report())
-    return done, stats
 
 
 def main():
@@ -254,10 +357,15 @@ def main():
                     help="sort the request backlog over the host mesh "
                          "(--no-distributed-queue forces the local path; "
                          "default: on when the host has >1 device)")
+    ap.add_argument("--state-dir", default=None,
+                    help="directory for the tuning/topology snapshot "
+                         "restored on startup and written on shutdown "
+                         f"(default: ${SERVE_STATE_ENV} if set)")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, n_requests=args.requests,
           batch_size=args.batch_size, decode_steps=args.decode_steps,
-          topk=args.topk, distributed_queue=args.distributed_queue)
+          topk=args.topk, distributed_queue=args.distributed_queue,
+          state_dir=args.state_dir)
 
 
 if __name__ == "__main__":

@@ -139,12 +139,11 @@ class RelSpec:
                 raise ValueError(
                     f"distributed relational variants exist for "
                     f"{tuple(sorted(MESH_OPS))}; op {op!r} has none")
-            if axis_name is None:
-                axis_name = self.mesh.axis_names[0]
-            elif axis_name not in self.mesh.axis_names:
-                raise ValueError(
-                    f"axis_name {axis_name!r} not in mesh axes "
-                    f"{self.mesh.axis_names}")
+            # one axis, a tuple of axes (hierarchical meshes), or None ->
+            # the whole mesh — normalised by the shared helper so the
+            # relational mesh ops accept exactly what distributed_sort does
+            from repro.engine.samplesort import _axes_tuple
+            axis_name = _axes_tuple(self.mesh, axis_name)
             if method not in ("auto", "distributed"):
                 raise ValueError(
                     "mesh-distributed relational ops run the 'distributed' "

@@ -144,8 +144,10 @@ def sort(x: _Arr, *, axis: int = -1, descending: bool = False,
          mesh=None, axis_name: Optional[str] = None) -> _Arr:
     """Sort along ``axis``; with ``valid_lengths``, sort each row's valid
     prefix of a padded batch (the scheduler's fixed-shape buckets); with
-    ``mesh``/``axis_name``, sort a flat array globally over the mesh axis
-    (single-round sample-sort, odd-even fallback)."""
+    ``mesh``/``axis_name``, sort a flat array globally over the mesh
+    (sample-sort; ``axis_name=None`` spans all mesh axes, taking the
+    two-level ICI/DCN schedule on multi-axis meshes; odd-even fallback
+    on a single axis)."""
     return run(SortSpec(axis=axis, descending=descending, method=method,
                         run_len=run_len, interpret=interpret,
                         valid_lengths=valid_lengths, fill_value=fill_value,

@@ -1,0 +1,295 @@
+"""Two-level (ICI/DCN) hierarchical sample-sort: bit-exactness vs the
+flat schedule and ``jnp.sort``, planner flat-vs-hier selection, topology
+plumbing through ``distributed_sort``.
+
+The mesh tests need 8 local devices for a real 2x4 (hosts x devices)
+grid, so they skip on the single-device tier-1 job — which still runs
+the planner/cost-model pins (pure host math) and one subprocess test
+that forces 8 simulated devices.  The CI multi-device job executes the
+whole file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed_sort as ds, topology
+from repro.engine import planner, samplesort
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="2x4 hierarchical mesh needs 8 local devices")
+
+
+def _mesh2x4():
+    return jax.make_mesh((2, 4), ("host", "dev"))
+
+
+# ---------------------------------------------------------------------------
+# planner: flat-vs-hier selection pinned at known bandwidth ratios
+# ---------------------------------------------------------------------------
+
+def _topo(dcn_slowdown: float) -> topology.Topology:
+    ici_bw, ici_lat = 5e10, 2_000.0
+    return topology.Topology(
+        fingerprint="test-fixture",
+        axes=(
+            topology.TopologyAxis(
+                name="host", size=2, tier=topology.TIER_DCN,
+                bandwidth_bytes_per_s=ici_bw / dcn_slowdown,
+                latency_ns=ici_lat * dcn_slowdown),
+            topology.TopologyAxis(
+                name="dev", size=4, tier=topology.TIER_ICI,
+                bandwidth_bytes_per_s=ici_bw, latency_ns=ici_lat),
+        ),
+        source="default")
+
+
+def test_choose_distributed_prices_hier_on_two_tier_topology():
+    plan = planner.choose_distributed(1 << 22, 8, topology=_topo(10.0))
+    assert set(plan.costs) == {"sample", "oddeven", "hier"}
+    assert all(np.isfinite(c) and c > 0 for c in plan.costs.values())
+    # without a topology the strategy set stays flat-only (back-compat)
+    flat = planner.choose_distributed(1 << 22, 8)
+    assert set(flat.costs) == {"sample", "oddeven"}
+
+
+def test_choose_distributed_flat_vs_hier_crossover():
+    """The regression pin of the tier-rate decision: at uniform link
+    rates the second splitter round buys nothing (three extra intra-tier
+    rounds, same total movement) so FLAT must win; once the outer tier is
+    10x slower per byte, trading one full-mesh exchange at the blended
+    rate for chunked DCN traffic plus fast ICI rounds must flip the
+    decision to HIER.  4x skew (a mild but real DCN) must already flip
+    it — the crossover lives below realistic tier ratios."""
+    n = 1 << 22
+    assert planner.choose_distributed(n, 8, topology=_topo(1.0)) \
+        .strategy == "sample"
+    assert planner.choose_distributed(n, 8, topology=_topo(4.0)) \
+        .strategy == "hier"
+    assert planner.choose_distributed(n, 8, topology=_topo(10.0)) \
+        .strategy == "hier"
+    # the hier advantage widens with the skew
+    c4 = planner.choose_distributed(n, 8, topology=_topo(4.0)).costs
+    c10 = planner.choose_distributed(n, 8, topology=_topo(10.0)).costs
+    assert (c10["sample"] - c10["hier"]) > (c4["sample"] - c4["hier"])
+
+
+def test_choose_distributed_topology_device_mismatch_raises():
+    with pytest.raises(ValueError, match="devices"):
+        planner.choose_distributed(1 << 20, 16, topology=_topo(10.0))
+
+
+def test_choose_distributed_cached_keys_on_topology():
+    a = planner.choose_distributed_cached(1 << 22, 8, topology=_topo(1.0))
+    b = planner.choose_distributed_cached(1 << 22, 8, topology=_topo(10.0))
+    assert a.strategy == "sample" and b.strategy == "hier"
+    # same signature, same generation -> cache returns the same plan obj
+    again = planner.choose_distributed_cached(1 << 22, 8,
+                                              topology=_topo(1.0))
+    assert again.strategy == "sample"
+
+
+# ---------------------------------------------------------------------------
+# axis plumbing helpers (host-level, any device count)
+# ---------------------------------------------------------------------------
+
+def test_axes_tuple_validation():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    assert samplesort._axes_tuple(mesh, None) == ("data",)
+    assert samplesort._axes_tuple(mesh, "data") == ("data",)
+    with pytest.raises(ValueError):
+        samplesort._axes_tuple(mesh, "nope")
+    with pytest.raises(ValueError):
+        samplesort._axes_tuple(mesh, ("data", "data"))
+
+
+@needs8
+def test_axes_tuple_two_axis():
+    mesh = _mesh2x4()
+    assert samplesort._axes_tuple(mesh, None) == ("host", "dev")
+    assert samplesort._axes_tuple(mesh, ("dev",)) == ("dev",)
+    assert samplesort._n_dev(mesh, ("host", "dev")) == 8
+    assert samplesort._n_dev(mesh, ("dev",)) == 4
+
+
+# ---------------------------------------------------------------------------
+# 2x4 mesh: hierarchical == flat == jnp.sort, bit for bit
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.parametrize("n", [4096, 4000, 37])
+@pytest.mark.parametrize("descending", [False, True])
+def test_hier_matches_flat_and_jnp(n, descending):
+    mesh = _mesh2x4()
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    hier = samplesort.sample_sort(x, mesh, None, descending=descending,
+                                  hierarchical=True)
+    flat = samplesort.sample_sort(x, mesh, None, descending=descending,
+                                  hierarchical=False)
+    ref = jnp.sort(x)[::-1] if descending else jnp.sort(x)
+    np.testing.assert_array_equal(np.asarray(hier), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(hier), np.asarray(flat))
+
+
+@needs8
+@pytest.mark.parametrize("descending", [False, True])
+def test_hier_kv_payloads_consistent(descending):
+    """Duplicate-heavy keys with a position payload: keys must land in
+    exact sorted order and every payload must still sit next to its own
+    key with nothing lost — the same consistency contract the flat path
+    has always made (neither schedule promises *stable* tie order for
+    raw kv; exact tie order is the composite test below)."""
+    mesh = _mesh2x4()
+    rng = np.random.default_rng(5)
+    n = 3001
+    k = rng.integers(0, 7, n).astype(np.int32)
+    v = np.arange(n, dtype=np.int32)
+    hk, hv = samplesort.sample_sort(
+        jnp.asarray(k), mesh, None, values=jnp.asarray(v),
+        descending=descending, hierarchical=True)
+    fk, fv = samplesort.sample_sort(
+        jnp.asarray(k), mesh, None, values=jnp.asarray(v),
+        descending=descending, hierarchical=False)
+    hk, hv = np.asarray(hk), np.asarray(hv)
+    ref = np.flip(np.sort(k)) if descending else np.sort(k)
+    np.testing.assert_array_equal(hk, ref)
+    np.testing.assert_array_equal(hk, np.asarray(fk))
+    assert (k[hv] == hk).all()                    # payload rides its key
+    assert len(set(hv.tolist())) == n             # a true permutation
+
+
+@needs8
+def test_hier_exact_tie_order_via_composite():
+    """The engine's distributed argsort convention: pack (key, index)
+    into unique composites, so tie order is part of the key and the
+    whole permutation is pinned bit for bit.  Hier, flat, and
+    ``jnp.sort`` must agree exactly, and the recovered permutation is
+    the stable argsort."""
+    mesh = _mesh2x4()
+    rng = np.random.default_rng(5)
+    n = 3001
+    k = rng.integers(0, 7, n).astype(np.int32)
+    idx_bits = max(1, (n - 1).bit_length())
+    comp = jnp.asarray((k.astype(np.uint32) << idx_bits)
+                       | np.arange(n, dtype=np.uint32))
+    hs = samplesort.sample_sort(comp, mesh, None, hierarchical=True)
+    fs = samplesort.sample_sort(comp, mesh, None, hierarchical=False)
+    ref = np.sort(np.asarray(comp))
+    np.testing.assert_array_equal(np.asarray(hs), ref)
+    np.testing.assert_array_equal(np.asarray(fs), ref)
+    perm = np.asarray(hs) & np.uint32((1 << idx_bits) - 1)
+    np.testing.assert_array_equal(perm, np.argsort(k, kind="stable"))
+
+
+@needs8
+def test_hier_edge_shapes():
+    mesh = _mesh2x4()
+    # tiny n (fewer elements than devices) and the all-equal worst case
+    out = samplesort.sample_sort(jnp.asarray([3, 1, 2], jnp.int32),
+                                 mesh, None, hierarchical=True)
+    np.testing.assert_array_equal(np.asarray(out), [1, 2, 3])
+    eq = samplesort.sample_sort(jnp.full((977,), 5, jnp.uint32),
+                                mesh, None, hierarchical=True)
+    np.testing.assert_array_equal(np.asarray(eq), np.full(977, 5))
+
+
+@needs8
+def test_hier_size1_outer_axis_demotes_to_flat():
+    """A degenerate (1, 8) mesh has no second tier to split over:
+    ``hierarchical=None`` (auto) must demote silently and still sort."""
+    mesh = jax.make_mesh((1, 8), ("host", "dev"))
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal(2048).astype(np.float32))
+    out = samplesort.sample_sort(x, mesh, None)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+
+
+@needs8
+def test_hier_pipeline_chunks_and_wire_codec():
+    """Chunked DCN exchange and the int8 wire codec change the transport,
+    never the keys: keys stay bit-exact, the (lossy, opt-in) payload
+    stays within the quantizer's half-step."""
+    mesh = _mesh2x4()
+    rng = np.random.default_rng(13)
+    n = 4096
+    # unique keys: with ties the positional payload comparison would mix
+    # legitimately-swapped equal-key payloads into the quantization error
+    k = rng.permutation(1 << 20)[:n].astype(np.int32)
+    v = rng.uniform(-1000, 1000, n).astype(np.float32)
+    hk, hv = samplesort.sample_sort(
+        jnp.asarray(k), mesh, None, values=jnp.asarray(v),
+        hierarchical=True, pipeline_chunks=4, wire_codec="int8")
+    perm = np.argsort(k, kind="stable")
+    np.testing.assert_array_equal(np.asarray(hk), k[perm])
+    # per-bucket absmax int8: error bound is half a quantization step
+    assert np.max(np.abs(np.asarray(hv) - v[perm])) <= 1000.0 / 127.0
+
+
+@needs8
+def test_distributed_sort_hier_strategy_and_auto():
+    mesh = _mesh2x4()
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal(8192).astype(np.float32))
+    out = ds.distributed_sort(x, mesh, strategy="hier")
+    np.testing.assert_array_equal(np.asarray(out), np.sort(np.asarray(x)))
+    auto = ds.distributed_sort(x, mesh, strategy="auto")
+    np.testing.assert_array_equal(np.asarray(auto), np.sort(np.asarray(x)))
+    # forcing hier on a flat mesh is a contract error
+    flat_mesh = jax.make_mesh((8,), ("data",))
+    with pytest.raises(ValueError, match="two-axis"):
+        ds.distributed_sort(x, flat_mesh, strategy="hier")
+
+
+@needs8
+def test_distributed_topk_two_axis_mesh():
+    mesh = _mesh2x4()
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    tv, ti = ds.distributed_topk(x, 33, mesh)
+    rv, ri = jax.lax.top_k(x, 33)
+    np.testing.assert_array_equal(np.asarray(tv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(ri))
+
+
+# ---------------------------------------------------------------------------
+# forced 8-device run (covers the 2x4 grid even on the single-device job)
+# ---------------------------------------------------------------------------
+
+def test_hier_sample_sort_8dev_subprocess():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.engine import samplesort
+mesh = jax.make_mesh((2, 4), ("host", "dev"))
+rng = np.random.default_rng(0)
+k = rng.integers(0, 9, 1003).astype(np.int32)
+v = np.arange(1003, dtype=np.int32)
+hk, hv = samplesort.sample_sort(jnp.asarray(k), mesh, None,
+                                values=jnp.asarray(v), descending=True,
+                                hierarchical=True)
+fk, fv = samplesort.sample_sort(jnp.asarray(k), mesh, None,
+                                values=jnp.asarray(v), descending=True,
+                                hierarchical=False)
+hk, hv = np.asarray(hk), np.asarray(hv)
+assert (hk == np.flip(np.sort(k))).all()
+assert (hk == np.asarray(fk)).all()
+assert (k[hv] == hk).all() and len(set(hv.tolist())) == 1003
+# unique composites pin the exact permutation across both schedules
+comp = ((k.astype(np.uint32) & 0xF) << 10) | np.arange(1003, dtype=np.uint32)
+hs = samplesort.sample_sort(jnp.asarray(comp), mesh, None, hierarchical=True)
+assert (np.asarray(hs) == np.sort(comp)).all()
+print("HIER_8DEV_OK")
+"""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "PYTHONPATH": os.path.join(repo, "src")}
+    env.pop("XLA_FLAGS", None)        # the subprocess pins its own count
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=420)
+    assert "HIER_8DEV_OK" in r.stdout, r.stderr[-2000:]

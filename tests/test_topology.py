@@ -1,0 +1,167 @@
+"""core.topology: the explicit (mesh shape, per-tier link rates) value —
+schema round-trip, mesh derivation, persistence search path, the active
+ambient + generation counter the planner caches on, and the collectives
+facade's transport helpers.  Pure host logic plus single-device jax, so
+the whole file runs on the tier-1 job at any device count.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.engine import collectives
+
+
+def _topo2x4(dcn_slowdown: float = 10.0) -> topology.Topology:
+    ici_bw, ici_lat = 5e10, 2_000.0
+    return topology.Topology(
+        fingerprint="test-fixture",
+        axes=(
+            topology.TopologyAxis(
+                name="host", size=2, tier=topology.TIER_DCN,
+                bandwidth_bytes_per_s=ici_bw / dcn_slowdown,
+                latency_ns=ici_lat * dcn_slowdown),
+            topology.TopologyAxis(
+                name="dev", size=4, tier=topology.TIER_ICI,
+                bandwidth_bytes_per_s=ici_bw, latency_ns=ici_lat),
+        ),
+        source="default")
+
+
+# ---------------------------------------------------------------------------
+# the value itself
+# ---------------------------------------------------------------------------
+
+def test_topology_shape_accessors():
+    t = _topo2x4()
+    assert t.axis_names == ("host", "dev")
+    assert t.n_devices == 8
+    assert t.signature() == (("host", 2), ("dev", 4))
+    assert t.is_hierarchical
+    assert t.axis("dev").tier == topology.TIER_ICI
+    with pytest.raises(KeyError):
+        t.axis("nope")
+
+
+def test_topology_per_byte_ns_inverts_bandwidth():
+    ax = _topo2x4(1.0).axes[1]
+    assert ax.per_byte_ns == pytest.approx(1e9 / ax.bandwidth_bytes_per_s)
+
+
+def test_degenerate_axes_are_not_hierarchical():
+    t = topology.Topology(
+        fingerprint="f",
+        axes=(
+            topology.TopologyAxis(name="host", size=1,
+                                  tier=topology.TIER_DCN,
+                                  bandwidth_bytes_per_s=1e9,
+                                  latency_ns=1.0),
+            topology.TopologyAxis(name="dev", size=8,
+                                  tier=topology.TIER_ICI,
+                                  bandwidth_bytes_per_s=1e9,
+                                  latency_ns=1.0),
+        ),
+        source="default")
+    assert not t.is_hierarchical
+
+
+def test_from_mesh_tiers_and_signature():
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    t = topology.from_mesh(mesh)
+    assert t.signature() == (("data", n),)
+    assert t.axes[0].tier == topology.TIER_ICI  # single axis: pure ICI
+    with pytest.raises(topology.TopologyError):
+        topology.from_mesh(mesh, ("bogus",))
+
+
+def test_schema_roundtrip_and_rejects():
+    t = _topo2x4()
+    doc = t.to_dict()
+    back = topology.Topology.from_dict(doc)
+    assert back == t
+    with pytest.raises(topology.TopologyError):
+        topology.Topology.from_dict({"nonsense": True})
+    with pytest.raises(topology.TopologyError):
+        topology.Topology.from_dict([1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# persistence: save/load and the identity-gated search
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip(tmp_path):
+    t = _topo2x4()
+    p = topology.save(t, tmp_path / "t.json")
+    assert topology.load(p) == t
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(topology.TopologyError):
+        topology.load(bad)
+
+
+def test_persisted_path_rejects_wrong_identity(tmp_path, monkeypatch):
+    monkeypatch.setenv(topology.TOPOLOGY_DIR_ENV, str(tmp_path))
+    t = _topo2x4()
+    topology.save(t, topology.topology_path(t, tmp_path))
+    # fingerprint mismatch -> not found (the stored one is "test-fixture")
+    assert topology.persisted_path(t.signature()) is None
+    assert topology.persisted_path(
+        t.signature(), fingerprint="test-fixture") is not None
+    got = topology.load_for_mesh(t.signature(), fingerprint="test-fixture")
+    assert got is not None and got.source == "persisted"
+    assert got.signature() == t.signature()
+
+
+# ---------------------------------------------------------------------------
+# active ambient + generation (what invalidates cached dist plans)
+# ---------------------------------------------------------------------------
+
+def test_set_active_bumps_generation():
+    before = topology.generation()
+    try:
+        topology.set_active(_topo2x4())
+        assert topology.generation() == before + 1
+        assert topology.active() == _topo2x4()
+        # for_mesh prefers the matching active topology
+        if len(jax.devices()) >= 8:
+            mesh = jax.make_mesh((2, 4), ("host", "dev"))
+            assert topology.for_mesh(mesh) == _topo2x4()
+    finally:
+        topology.set_active(None)
+    assert topology.active() is None
+
+
+# ---------------------------------------------------------------------------
+# collectives facade: transport helpers (host math, no mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_chunks_divides_capacity():
+    assert collectives.pipeline_chunks(1024, 4) == 4
+    assert collectives.pipeline_chunks(1024, 3) == 2  # pow2 <= requested
+    assert collectives.pipeline_chunks(6, 4) == 2     # must divide capacity
+    assert collectives.pipeline_chunks(7, 8) == 1     # odd capacity: no split
+    assert collectives.pipeline_chunks(1024, 0) == 1  # clamped, never raises
+
+
+def test_wire_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.uniform(-500, 500, (4, 64)).astype(np.float32))
+    q, scale = collectives.wire_encode_int8(v)
+    assert q.dtype == jnp.int8
+    back = collectives.wire_decode_int8(q, scale, jnp.float32)
+    # per-bucket absmax quantization: error within one step per bucket
+    err = np.abs(np.asarray(back) - np.asarray(v))
+    bound = np.max(np.abs(np.asarray(v)), axis=-1, keepdims=True) / 127.0
+    assert (err <= bound + 1e-6).all()
+
+
+def test_wire_bytes_saved_counts_payload_shrink():
+    # f32 payload (4B) -> int8 wire (1B): 3 bytes saved per slot, minus
+    # the 4-byte per-bucket scale that rides along
+    assert collectives.wire_bytes_saved(8, 128, 4) == 8 * 128 * 3 - 8 * 4
+    # a 1-byte payload cannot shrink: the codec would only add scales
+    assert collectives.wire_bytes_saved(8, 128, 1) == 0
